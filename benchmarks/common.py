@@ -1,0 +1,58 @@
+"""Shared benchmark machinery.
+
+CPU-scale note: the paper's experiments span GB-sized updates and 10^5
+clients on a 4-node cluster; this container is one CPU core. Every figure
+keeps the paper's comparative STRUCTURE (same axes, same contenders) at
+MB scale, and derives cluster-scale numbers from the calibrated models
+(store bandwidth, memory caps) — the same methodology the paper itself
+uses for its write-latency accounting.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (seconds) with jax sync."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if r is not None else None
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        if r is not None:
+            jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def make_updates(n: int, p: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=(n, p)).astype(np.float32)
+    w = rng.uniform(1, 100, size=(n,)).astype(np.float32)
+    return u, w
+
+
+# Scaled-down stand-ins for the paper's Table-I workloads (1/1000 of the
+# parameter count -> same comparative trends at CPU-tractable sizes).
+SCALED_SUITE = {
+    "CNN4.6": 4_600_000 // 4 // 1000,
+    "CNN73": 73_000_000 // 4 // 1000,
+    "CNN179": 179_000_000 // 4 // 1000,
+    "CNN478": 478_000_000 // 4 // 1000,
+    "CNN956": 956_000_000 // 4 // 1000,
+    "Resnet50": 91_000_000 // 4 // 1000,
+    "VGG16": 528_000_000 // 4 // 1000,
+}

@@ -1,0 +1,47 @@
+"""Figs. 12/13 — end-to-end distributed aggregation with simulated
+clients: store ingest (modeled write latency), monitor wait, partition,
+and fuse, per workload size.
+
+Paper: 6..1272 simulated parties write to HDFS over 1 GbE; avg write time
++ read/partition + reduce per model size. The UpdateStore reproduces the
+bandwidth model (replication x bytes / aggregate datanode bw); fuse times
+are measured."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import AggregationService, UpdateStore
+
+
+# (paper model, parties) pairs from Fig. 12, params scaled 1/1000
+CASES = [
+    ("CNN956", 956_000 // 4, 6),
+    ("CNN478", 478_000 // 4, 12),
+    ("Resnet50", 91_000 // 4, 60),
+    ("CNN73", 73_000 // 4, 84),
+    ("CNN4.6", 4_600 // 4, 256),   # scaled warm-up point
+    ("CNN4.6", 4_600 // 4, 1272),  # the paper's Fig. 13 party count
+]
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for name, p, parties in CASES:
+        store = UpdateStore(n_datanodes=3, replication=2)
+        svc = AggregationService(
+            fusion="fedavg", store=store, local_strategy="jnp",
+            threshold_frac=0.8, monitor_timeout=5.0,
+        )
+        for i in range(parties):
+            u = rng.normal(size=(p,)).astype(np.float32)
+            store.write(f"c{i:05d}", u, weight=float(rng.integers(1, 50)))
+        avg_write = store.stats.sim_write_seconds / store.stats.writes
+        fused, rep = svc.aggregate(from_store=True,
+                                   expected_clients=parties)
+        emit(
+            f"fig12/{name}_n{parties}", rep.fuse_seconds * 1e6,
+            f"avg_write_ms={avg_write * 1e3:.2f};"
+            f"monitor_wait={rep.monitor.waited * 1e3:.1f}ms;"
+            f"engine={rep.plan.engine}",
+        )

@@ -1,0 +1,26 @@
+"""Fig. 2 — single-node aggregation vs model size at fixed memory.
+
+Paper: at 170 GB, supportable clients collapse from tens of thousands
+(4.6 MB) to <150 (956 MB); time grows with model size. Same sweep over
+the scaled Table-I suite + analytic max-client curve at 16 GB HBM."""
+from __future__ import annotations
+
+from benchmarks.common import SCALED_SUITE, emit, make_updates, timeit
+from repro.core import LocalEngine, max_clients_single_node
+from repro.core.fusion import FedAvg, IterAvg
+
+
+def run():
+    eng = LocalEngine(strategy="jnp")
+    n = 32
+    for name, p in SCALED_SUITE.items():
+        u, w = make_updates(n, p)
+        for fusion in (FedAvg(), IterAvg()):
+            t = timeit(lambda: eng.fuse(fusion, u, w))
+            emit(f"fig2/{fusion.name}_{name}", t * 1e6, f"n={n};params={p}")
+    for name, p in SCALED_SUITE.items():
+        full_bytes = p * 1000 * 4  # un-scale to the paper's true size
+        emit(
+            f"fig2/max_clients_{name}", 0.0,
+            f"tpu16GB_max_clients={max_clients_single_node(full_bytes)}",
+        )

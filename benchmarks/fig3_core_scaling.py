@@ -1,0 +1,33 @@
+"""Fig. 3 — NumPy fusion ignores extra cores.
+
+Paper: IBMFL FedAvg time is flat in core count because NumPy's reduction
+is single-threaded. CPU analogue: single-threaded numpy loop (the IBMFL
+implementation shape: per-client loop of scaled adds) vs the vectorized
+XLA path — the gap is the headroom parallel execution leaves on the
+table, which the Numba/Pallas path (fig5) then claims."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, make_updates, timeit
+from repro.core import LocalEngine
+from repro.core.fusion import FedAvg
+
+
+def _ibmfl_style_numpy(u: np.ndarray, w: np.ndarray) -> np.ndarray:
+    # IBMFL FusionHandler: python loop over parties, accumulate in numpy
+    acc = np.zeros_like(u[0])
+    for i in range(u.shape[0]):
+        acc = acc + u[i] * w[i]
+    return acc / (w.sum() + 1e-6)
+
+
+def run():
+    for n, p in ((64, 10_000), (256, 10_000), (64, 100_000)):
+        u, w = make_updates(n, p)
+        t_np = timeit(lambda: _ibmfl_style_numpy(u, w))
+        eng = LocalEngine(strategy="jnp")
+        t_jx = timeit(lambda: eng.fuse(FedAvg(), u, w))
+        emit(f"fig3/numpy_loop_n{n}_p{p}", t_np * 1e6, "cores_used=1")
+        emit(f"fig3/xla_fused_n{n}_p{p}", t_jx * 1e6,
+             f"speedup={t_np / t_jx:.2f}x")

@@ -1,0 +1,113 @@
+"""§Roofline — the three-term roofline per (arch x shape x mesh), from the
+dry-run artifacts in results/dryrun/.
+
+  compute term    = EXEC_FLOPS / (chips x 197 TFLOP/s)   [analytic; XLA's
+                    cost_analysis counts scan bodies once — reported too]
+  memory term     = HBM bytes / (chips x 819 GB/s)       [analytic stream
+                    model; measured 'bytes accessed' alongside]
+  collective term = collective bytes / (chips x 4 links x 50 GB/s)
+                    [measured: while-aware HLO parse, per-device bytes]
+
+Per pair: dominant term, MODEL_FLOPS/EXEC_FLOPS useful-compute ratio, and
+a one-line lever on the dominant term. Emits CSV + a markdown table at
+results/roofline.md (EXPERIMENTS.md §Roofline embeds it)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.configs import INPUT_SHAPES, get_config
+from repro.utils.flops import flops_for
+from repro.utils.mem import TPU_V5E
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "..", "results", "roofline.md")
+
+
+def _lever(dom: str, rec: dict, cfg) -> str:
+    if dom == "collective":
+        if cfg.moe is not None and rec["shape"] == "train_4k":
+            return "shard_map all-to-all expert dispatch (drop scatter)"
+        return "all-gather weights once per layer / reshard residual"
+    if dom == "memory":
+        if rec["kind"] == "decode":
+            return "shrink/quantize KV cache (int8 KV, windowed layers)"
+        return "recompute less (selective remat), bf16 moments"
+    return "larger tiles / fewer remat passes (compute-bound is the goal)"
+
+
+def analyze(rec: dict, hw=TPU_V5E) -> dict:
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES.get(rec["shape"])
+    chips = rec["n_chips"]
+    fr = flops_for(cfg, shape, n_chips=chips) if shape else None
+
+    coll_bytes = rec["collectives"]["total_bytes"]  # per device
+    coll_t = coll_bytes / (hw.ici_bw_per_link * hw.ici_links)
+    if fr is not None:
+        comp_t = fr.exec_flops / (chips * hw.peak_flops_bf16)
+        mem_t = fr.hbm_bytes_analytic / hw.hbm_bw
+        useful = fr.useful_ratio
+        model_fl = fr.model_flops
+        exec_fl = fr.exec_flops
+    else:  # aggregate step
+        comp_t = (rec["per_device"]["flops"] or 0.0) / hw.peak_flops_bf16
+        mem_t = (rec["per_device"]["bytes_accessed"] or 0.0) / hw.hbm_bw
+        useful = 1.0
+        model_fl = exec_fl = (rec["per_device"]["flops"] or 0.0) * chips
+    terms = {"compute": comp_t, "memory": mem_t, "collective": coll_t}
+    dom = max(terms, key=terms.get)
+    total = sum(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "ok": rec.get("ok", False), "fits_hbm": rec.get("fits_hbm"),
+        "compute_s": comp_t, "memory_s": mem_t, "collective_s": coll_t,
+        "dominant": dom,
+        "roofline_fraction": (max(terms.values()) / total) if total else 0.0,
+        "model_flops": model_fl, "exec_flops": exec_fl,
+        "useful_ratio": useful,
+        "hlo_flops_per_dev": rec["per_device"].get("flops"),
+        "peak_gib": (rec["per_device"].get("peak_bytes_est") or 0) / 2**30,
+        "lever": _lever(dom, rec, cfg),
+    }
+
+
+def run(mesh_filter: str = ""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        rec = json.load(open(path))
+        if not rec.get("ok"):
+            emit(f"roofline/{rec['arch']}_{rec['shape']}_{rec['mesh']}",
+                 0.0, "DRYRUN_FAILED")
+            continue
+        if mesh_filter and rec["mesh"] != mesh_filter:
+            continue
+        r = analyze(rec)
+        rows.append(r)
+        emit(
+            f"roofline/{r['arch']}_{r['shape']}_{r['mesh']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"dom={r['dominant']};comp={r['compute_s']:.3e}s;"
+            f"mem={r['memory_s']:.3e}s;coll={r['collective_s']:.3e}s;"
+            f"useful={r['useful_ratio']:.2f};fits={r['fits_hbm']}",
+        )
+    _write_md(rows)
+    return rows
+
+
+def _write_md(rows):
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write("| arch | shape | mesh | compute s | memory s | collective s"
+                " | dominant | MODEL/EXEC | peak GiB | fits | lever |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|---|---|\n")
+        for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+            f.write(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+                f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+                f"| {r['useful_ratio']:.2f} | {r['peak_gib']:.2f} "
+                f"| {'yes' if r['fits_hbm'] else 'NO'} | {r['lever']} |\n"
+            )

@@ -1,0 +1,54 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig7 roofline
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    fig1_memory_wall,
+    fig2_model_size_wall,
+    fig3_core_scaling,
+    fig5_parallel_vs_baseline,
+    fig7_distributed_scaling,
+    fig11_model_zoo,
+    fig12_end_to_end,
+    fig14_engine_comparison,
+    roofline,
+)
+
+SUITES = {
+    "fig1": fig1_memory_wall.run,
+    "fig2": fig2_model_size_wall.run,
+    "fig3": fig3_core_scaling.run,
+    "fig5": fig5_parallel_vs_baseline.run,
+    "fig7": fig7_distributed_scaling.run,
+    "fig11": fig11_model_zoo.run,
+    "fig12": fig12_end_to_end.run,
+    "fig14": fig14_engine_comparison.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    failures = []
+    for name in wanted:
+        try:
+            SUITES[name]()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""The paper's core demo: the SAME service handles a growing federation by
+switching engines — the memory wall never appears.
+
+Sweeps client counts against a memory-capped "single node"; shows the
+classification flipping from VMEM_RESIDENT -> HBM_LOCAL -> DISTRIBUTED,
+the seamless-transition signal, and that fused results stay identical
+across engines (paper §IV-C).
+
+    PYTHONPATH=src python examples/elastic_scalability.py
+"""
+import numpy as np
+
+from repro.core import (
+    AggregationService,
+    LocalEngine,
+    Planner,
+    Workload,
+    classify,
+    get_fusion,
+)
+from repro.utils.mem import bytes_to_human
+
+P = 200_000          # scaled model update (0.8 MB fp32)
+rng = np.random.default_rng(0)
+fedavg = get_fusion("fedavg")
+
+print(f"{'clients':>8} {'S':>10} {'class':>14} {'engine':>12} "
+      f"{'est(s)':>9} {'route->store':>12}")
+planner = Planner(n_devices=256)
+for n in (4, 64, 1024, 16_384, 262_144):
+    load = Workload(update_bytes=P * 4, n_clients=n)
+    plan = planner.plan(load, fedavg)
+    print(f"{n:8d} {bytes_to_human(load.total_bytes):>10} "
+          f"{classify(load).value:>14} {plan.engine:>12} "
+          f"{plan.est_seconds:9.4f} "
+          f"{str(plan.engine != 'local'):>12}")
+
+# engine equivalence at a size we can actually run here
+n = 24
+u = rng.normal(size=(n, P)).astype(np.float32)
+w = rng.uniform(1, 50, size=(n,)).astype(np.float32)
+a = np.asarray(LocalEngine(strategy="jnp").fuse(fedavg, u, w))
+b = np.asarray(
+    LocalEngine(strategy="jnp", memory_cap_bytes=P * 4 * 4).fuse(fedavg, u, w)
+)
+print(f"\nfull-memory vs memory-capped-streaming engines allclose: "
+      f"{np.allclose(a, b, rtol=1e-5, atol=1e-6)} (paper §IV-C invariant)")

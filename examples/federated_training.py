@@ -1,0 +1,74 @@
+"""End-to-end federated training of a (reduced) assigned architecture.
+
+Non-IID clients train locally; the adaptive aggregation service fuses
+every round; global loss drops. Also demonstrates byzantine robustness:
+with --poison, client 0 sends garbage and --fusion coordmedian shrugs.
+
+    PYTHONPATH=src python examples/federated_training.py \
+        --arch gemma3-1b --rounds 10 [--poison --fusion coordmedian]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import AggregationService
+from repro.data import FederatedLoader, SyntheticLM
+from repro.fl import Client, FederatedServer
+from repro.models import build_model
+from repro.optim import sgd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients", type=int, default=6)
+    ap.add_argument("--fusion", default="fedavg")
+    ap.add_argument("--poison", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    cfg = dataclasses.replace(cfg, vocab=min(cfg.vocab, 512))
+    model = build_model(cfg)
+    loader = FederatedLoader(
+        gen=SyntheticLM(vocab=cfg.vocab, seed=0, temperature=0.5),
+        n_clients=args.clients, batch=8, seq_len=32,
+    )
+    clients = [
+        Client(client_id=i, model=model, optimizer=sgd(0.5), local_steps=2)
+        for i in range(args.clients)
+    ]
+    if args.poison:
+        bad = clients[0]
+        orig = bad.train_round
+
+        def poisoned(params, batch_fn, r):
+            upd, loss = orig(params, batch_fn, r)
+            upd = jax.tree_util.tree_map(
+                lambda u: u + 100.0 * jnp.sign(u), upd
+            )
+            return upd, loss
+
+        bad.train_round = poisoned
+        print("[example] client 0 is byzantine (+-100 on every weight)")
+
+    service = AggregationService(fusion=args.fusion, local_strategy="jnp")
+    server = FederatedServer(model=model, clients=clients, loader=loader,
+                             service=service)
+    print(f"[example] {cfg.arch_id}: {cfg.num_params():,} params, "
+          f"{args.clients} clients, fusion={args.fusion}")
+    for r in range(args.rounds):
+        res = server.run_round(r)
+        print(f"  round {r:2d}: loss={res.mean_client_loss:.4f} "
+              f"engine={res.report.plan.engine}")
+    first, last = server.results[0], server.results[-1]
+    print(f"[example] loss {first.mean_client_loss:.4f} -> "
+          f"{last.mean_client_loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro: a distributed & elastic aggregation service for federated
+learning on TPU/JAX, plus the assigned 10-architecture model stack.
+
+Public surface:
+    repro.core     — the paper's aggregation service
+    repro.models   — build_model(config)
+    repro.configs  — ARCHITECTURES / get_config / input shapes
+    repro.fl       — federated runtime
+    repro.launch   — mesh / dryrun / train / serve / aggregate
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,59 @@
+"""Checkpointing: pytrees <-> a single .npz + structure manifest.
+
+Sharded arrays are gathered to host before saving (fine at the scales this
+container runs; on a real pod you'd swap in per-shard files keyed by the
+same path strings — the format is already path-addressed to allow that).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _paths_and_leaves(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":  # bf16 etc: not a native numpy dtype
+            arr = np.asarray(leaf, dtype=np.float32)  # lossless widening
+        out[key] = arr
+    return out, treedef
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    arrays, _ = _paths_and_leaves(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    manifest = {
+        k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+        for k, v in arrays.items()
+    }
+    with open(path.removesuffix(".npz") + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_pytree(path: str, template: PyTree) -> PyTree:
+    """Restore into the structure of ``template`` (dtype-cast to match)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    arrays, treedef = _paths_and_leaves(template)
+    leaves = []
+    flat, _ = jax.tree_util.tree_flatten_with_path(template)
+    for pathk, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in pathk
+        )
+        arr = npz[key]
+        leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

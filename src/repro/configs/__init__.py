@@ -1,0 +1,80 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Ten assigned architectures (public-literature pool; citations inline in
+each config module) + the paper's own CNN update suite (Table I).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    AttnPattern,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    XLSTMConfig,
+    input_specs,
+)
+from repro.configs.cnn_suite import CNN_SUITE, UpdateSpec
+
+from repro.configs.minitron_8b import CONFIG as MINITRON_8B
+from repro.configs.llava_next_34b import CONFIG as LLAVA_NEXT_34B
+from repro.configs.dbrx_132b import CONFIG as DBRX_132B
+from repro.configs.xlstm_350m import CONFIG as XLSTM_350M
+from repro.configs.qwen2_0_5b import CONFIG as QWEN2_0_5B
+from repro.configs.whisper_small import CONFIG as WHISPER_SMALL
+from repro.configs.qwen2_5_3b import CONFIG as QWEN2_5_3B
+from repro.configs.gemma3_1b import CONFIG as GEMMA3_1B
+from repro.configs.deepseek_moe_16b import CONFIG as DEEPSEEK_MOE_16B
+from repro.configs.zamba2_1_2b import CONFIG as ZAMBA2_1_2B
+
+ARCHITECTURES: Dict[str, ModelConfig] = {
+    c.arch_id: c
+    for c in (
+        MINITRON_8B,
+        LLAVA_NEXT_34B,
+        DBRX_132B,
+        XLSTM_350M,
+        QWEN2_0_5B,
+        WHISPER_SMALL,
+        QWEN2_5_3B,
+        GEMMA3_1B,
+        DEEPSEEK_MOE_16B,
+        ZAMBA2_1_2B,
+    )
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id.endswith("-smoke"):
+        return ARCHITECTURES[arch_id[: -len("-smoke")]].reduced()
+    return ARCHITECTURES[arch_id]
+
+
+def applicable_shapes(cfg: ModelConfig):
+    """The (arch x shape) grid with documented skips (DESIGN.md §4)."""
+    out = []
+    for shape in INPUT_SHAPES.values():
+        if shape.name == "long_500k" and not cfg.supports_long_context:
+            continue
+        out.append(shape)
+    return out
+
+
+__all__ = [
+    "ARCHITECTURES",
+    "CNN_SUITE",
+    "INPUT_SHAPES",
+    "AttnPattern",
+    "InputShape",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "UpdateSpec",
+    "XLSTMConfig",
+    "applicable_shapes",
+    "get_config",
+    "input_specs",
+]

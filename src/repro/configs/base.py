@@ -1,0 +1,347 @@
+"""Config system: architecture + input-shape descriptors.
+
+Every assigned architecture gets a ``ModelConfig`` with the *exact* numbers
+from the assignment (citations in each file). ``reduced()`` yields the
+smoke-test variant (≤2 layers, d_model ≤ 512, ≤4 experts) exercised on CPU;
+full configs are only touched through ShapeDtypeStructs in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0           # always-on shared experts (DeepSeekMoE)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64         # N in Mamba2 / SSD
+    head_dim: int = 64          # P (channels per SSM head)
+    n_ssm_heads: int = 0        # derived if 0: d_inner // head_dim
+    expand: int = 2             # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 256            # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    # ratio of mLSTM to sLSTM blocks, xLSTM[a:b] notation of the paper
+    slstm_every: int = 7        # an sLSTM block every k-th block (0 = none)
+    mlstm_qk_dim_factor: float = 0.5
+    mlstm_v_dim_factor: float = 1.0
+    proj_factor: float = 1.3334  # sLSTM ffn up-projection factor
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnPattern:
+    """Per-layer attention pattern.
+
+    sliding_window > 0 with local_to_global k>0 means: layers whose index
+    % (k+1) != k use windowed attention, every (k+1)-th layer is global
+    (gemma3's 5:1). sliding_window>0 and local_to_global==0: ALL layers
+    windowed.
+    """
+
+    sliding_window: int = 0
+    local_to_global: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0           # derived if 0
+    qkv_bias: bool = False
+    tie_embeddings: bool = True
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    attn: AttnPattern = AttnPattern()
+    # hybrid (zamba2): a shared attention+MLP block every k SSM layers
+    hybrid_shared_every: int = 0
+    # enc-dec (whisper): encoder layers; n_layers = decoder layers
+    n_encoder_layers: int = 0
+    # modality stubs
+    n_patch_tokens: int = 0     # vlm: precomputed vision-patch embeddings
+    n_audio_frames: int = 0     # audio: precomputed encoder frame embeddings
+    max_seq_len: int = 8_192
+    dtype: str = "bfloat16"
+    citation: str = ""
+    # families that have no decode step / no sub-quadratic long path
+    supports_long_context: bool = False
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def num_params(self) -> int:
+        """Analytic parameter count (matches models.build exactly —
+        asserted by tests/test_param_count.py)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n_q, n_kv = self.n_heads, self.n_kv_heads
+        emb = self.vocab * d
+        head = 0 if self.tie_embeddings else self.vocab * d
+        total = emb + head + d  # final norm
+
+        def attn_params(dm, nq, nkv, h, bias):
+            p = dm * nq * h + 2 * dm * nkv * h + nq * h * dm
+            if bias:
+                p += (nq + 2 * nkv) * h
+            return p
+
+        def mlp_params(dm, ff):
+            return 3 * dm * ff  # SwiGLU: gate, up, down
+
+        if self.family == "ssm" and self.xlstm is not None:
+            # xLSTM blocks (see models/xlstm.py for the exact shapes)
+            x = self.xlstm
+            per_m = self._mlstm_params()
+            per_s = self._slstm_params()
+            n_s = (
+                self.n_layers // x.slstm_every if x.slstm_every else 0
+            )
+            n_m = self.n_layers - n_s
+            total += n_m * per_m + n_s * per_s
+            return total
+
+        if self.family in ("ssm", "hybrid") and self.ssm is not None:
+            per_ssm = self._mamba2_params()
+            if self.family == "hybrid" and self.hybrid_shared_every:
+                n_shared_applications = self.n_layers // self.hybrid_shared_every
+                shared = (
+                    2 * self.d_model  # norms
+                    + attn_params(d, n_q, n_kv, hd, False)
+                    + mlp_params(d, self.d_ff)
+                )
+                total += self.n_layers * (per_ssm + self.d_model) + shared
+                del n_shared_applications
+            else:
+                total += self.n_layers * (per_ssm + self.d_model)
+            return total
+
+        # transformer-family layers
+        per_layer = 2 * d  # two RMSNorms
+        per_layer += attn_params(d, n_q, n_kv, hd, self.qkv_bias)
+        if self.moe is not None:
+            m = self.moe
+            expert = mlp_params(d, self.d_ff)
+            per_layer += d * m.n_experts            # router
+            per_layer += (m.n_experts + m.n_shared) * expert
+        else:
+            per_layer += mlp_params(d, self.d_ff)
+        total += self.n_layers * per_layer
+
+        if self.n_encoder_layers:
+            # whisper encoder: self-attn + MLP; decoder adds cross-attn
+            enc_layer = 2 * d + attn_params(d, n_q, n_q, hd, False) + mlp_params(d, self.d_ff)
+            total += self.n_encoder_layers * enc_layer + d
+            total += self.n_layers * (d + attn_params(d, n_q, n_kv, hd, False))  # cross-attn + norm
+        return total
+
+    def _mamba2_params(self) -> int:
+        # mirrors models.layers.mamba2.Mamba2Params exactly
+        s = self.ssm
+        d_inner = s.expand * self.d_model
+        n_heads = s.n_ssm_heads or (d_inner // s.head_dim)
+        p = self.d_model * (2 * d_inner + 2 * s.state_dim + n_heads)  # w_in
+        p += s.conv_width * (d_inner + 2 * s.state_dim)               # conv_w
+        p += n_heads * 3                                              # dt_bias, a_log, d_skip
+        p += d_inner                                                  # gated norm
+        p += d_inner * self.d_model                                   # w_out
+        return p
+
+    def _mlstm_params(self) -> int:
+        # mirrors models.layers.xlstm_layers.MLSTMParams (+ block norm)
+        x = self.xlstm
+        d = self.d_model
+        d_inner = 2 * d
+        d_qk = int(d_inner * x.mlstm_qk_dim_factor)
+        d_v = int(d_inner * x.mlstm_v_dim_factor)
+        nh = self.n_heads
+        p = d                        # block-level RMSNorm
+        p += 2 * d * d_inner         # w_up, w_z
+        p += 4 * d_inner             # conv_w
+        p += 2 * d_inner * d_qk      # w_q, w_k
+        p += d_inner * d_v           # w_v
+        p += d_inner * 2 * nh + 2 * nh  # w_if, b_if
+        p += d_v                     # group norm
+        p += d_v * d                 # w_out
+        return p
+
+    def _slstm_params(self) -> int:
+        # mirrors models.layers.xlstm_layers.SLSTMParams (+ block norm)
+        x = self.xlstm
+        d = self.d_model
+        nh = self.n_heads
+        hd = d // nh
+        p = d                   # block-level RMSNorm
+        p += 4 * d * d          # w_in (i,f,z,o)
+        p += 4 * nh * hd * hd   # block-diag recurrent kernels
+        p += 4 * d              # biases
+        p += d                  # group norm
+        up = int(d * x.proj_factor)
+        p += d * up * 2 + up * d  # gated ffn
+        return p
+
+    def model_flops_per_token(self) -> float:
+        """6 * N_active for training; used in §Roofline MODEL_FLOPS."""
+        n = self.num_active_params()
+        return 6.0 * n
+
+    def num_active_params(self) -> int:
+        if self.moe is None:
+            return self.num_params()
+        # replace per-layer expert count by (top_k + shared)
+        m = self.moe
+        expert = 3 * self.d_model * self.d_ff
+        dense_equiv = self.num_params() - self.n_layers * (m.n_experts + m.n_shared) * expert
+        return dense_equiv + self.n_layers * (m.top_k + m.n_shared) * expert
+
+    def update_bytes(self) -> int:
+        """Size of one client model update — the paper's w_s."""
+        return self.num_params() * jnp.dtype(self.dtype).itemsize
+
+    # -- smoke-test reduction -------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Same family, tiny dims: 2 layers, d_model<=512, <=4 experts."""
+        d = min(self.d_model, 256)
+        hd = 32
+        n_heads = max(2, min(4, self.n_heads))
+        n_kv = max(1, min(n_heads, self.n_kv_heads if self.n_kv_heads else n_heads))
+        if self.n_kv_heads == self.n_heads:
+            n_kv = n_heads
+        kw: Dict = dict(
+            arch_id=self.arch_id + "-smoke",
+            family=self.family,
+            n_layers=2,
+            d_model=d,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab=min(self.vocab, 1024),
+            head_dim=hd,
+            qkv_bias=self.qkv_bias,
+            tie_embeddings=self.tie_embeddings,
+            rope_theta=self.rope_theta,
+            moe=None,
+            ssm=None,
+            xlstm=None,
+            attn=self.attn if self.attn.sliding_window == 0 else AttnPattern(
+                sliding_window=16, local_to_global=self.attn.local_to_global
+            ),
+            hybrid_shared_every=0,
+            n_encoder_layers=2 if self.n_encoder_layers else 0,
+            n_patch_tokens=8 if self.n_patch_tokens else 0,
+            n_audio_frames=16 if self.n_audio_frames else 0,
+            max_seq_len=128,
+            dtype="float32",
+            citation=self.citation,
+            supports_long_context=self.supports_long_context,
+        )
+        if self.moe is not None:
+            kw["moe"] = MoEConfig(
+                n_experts=4,
+                top_k=min(2, self.moe.top_k),
+                n_shared=min(1, self.moe.n_shared),
+                capacity_factor=self.moe.capacity_factor,
+            )
+        if self.ssm is not None:
+            kw["ssm"] = SSMConfig(
+                state_dim=16, head_dim=16, expand=2, conv_width=4, chunk=16
+            )
+        if self.xlstm is not None:
+            kw["xlstm"] = XLSTMConfig(
+                slstm_every=2,
+                mlstm_qk_dim_factor=0.5,
+                mlstm_v_dim_factor=1.0,
+                chunk=16,
+            )
+        if self.family == "hybrid":
+            kw["hybrid_shared_every"] = 1
+        return ModelConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct inputs for (cfg, shape) — no device allocation.
+
+    train  -> {tokens, labels[, patch_embeds | audio_frames]}
+    prefill-> {tokens[, ...modality]}
+    decode -> {token, cache_*} handled by models.cache.cache_specs
+    """
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = jax.ShapeDtypeStruct((B, T), i32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, T), i32)
+    else:  # decode: one new token against a cache of seq_len
+        specs["token"] = jax.ShapeDtypeStruct((B, 1), i32)
+    if cfg.family == "vlm":
+        n = cfg.n_patch_tokens
+        if shape.kind != "decode":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, n, cfg.d_model), cfg.param_dtype
+            )
+    if cfg.family == "audio":
+        n = cfg.n_audio_frames
+        specs["audio_frames"] = jax.ShapeDtypeStruct(
+            (B, n, cfg.d_model), cfg.param_dtype
+        )
+    return specs

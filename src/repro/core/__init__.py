@@ -1,0 +1,48 @@
+"""The paper's primary contribution: a distributed, elastic, adaptive
+aggregation service for federated learning — on a TPU mesh.
+
+Layers:
+  workload.py    S = w_s * n classification against the TPU memory hierarchy
+  planner.py     roofline cost model + Algorithm-1 engine selection
+  fusion/        fusion-algorithm library (FedAvg ... Krum/Zeno/GeoMedian)
+  local.py       single-chip engine (jnp baseline | fused Pallas kernel)
+  distributed.py shard_map map-reduce engine (+ hierarchical pod mode)
+  store.py       UpdateStore (the HDFS analogue)
+  monitor.py     threshold/timeout straggler gate
+  secure.py      pairwise additive-mask secure aggregation
+  service.py     AggregationService facade (seamless transition)
+"""
+from repro.core.distributed import DistributedEngine
+from repro.core.fusion import REGISTRY, FusionAlgorithm, get_fusion
+from repro.core.local import LocalEngine
+from repro.core.monitor import Monitor, MonitorResult
+from repro.core.planner import Plan, Planner
+from repro.core.secure import SecureMasking
+from repro.core.service import AggregationService, RoundReport
+from repro.core.store import UpdateStore
+from repro.core.workload import (
+    Workload,
+    WorkloadClass,
+    classify,
+    max_clients_single_node,
+)
+
+__all__ = [
+    "AggregationService",
+    "DistributedEngine",
+    "FusionAlgorithm",
+    "LocalEngine",
+    "Monitor",
+    "MonitorResult",
+    "Plan",
+    "Planner",
+    "REGISTRY",
+    "RoundReport",
+    "SecureMasking",
+    "UpdateStore",
+    "Workload",
+    "WorkloadClass",
+    "classify",
+    "get_fusion",
+    "max_clients_single_node",
+]

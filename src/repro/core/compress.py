@@ -1,0 +1,74 @@
+"""Quantized update transport with error feedback (beyond-paper).
+
+The paper attacks the aggregator's ingest bottleneck with a distributed
+store; an orthogonal, composable lever is shrinking w_s itself. We
+implement symmetric per-block int8 quantization with client-side error
+feedback (EF-SGD, Karimireddy et al. 2019): each client keeps the
+quantization residual and adds it to its next update, so the DC error
+doesn't accumulate and FedAvg convergence is preserved in expectation.
+
+4x ingest reduction (fp32 -> int8 + one fp32 scale per block), applied
+before `UpdateStore.write`; the aggregator dequantizes (or, for the
+fused kernel path, folds the scales into the weighted sum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 2048
+
+
+def quantize(vec: jnp.ndarray, block: int = BLOCK):
+    """fp vec (P,) -> (int8 codes (P,), fp32 scales (ceil(P/block),))."""
+    P = vec.shape[0]
+    pad = (-P) % block
+    v = jnp.pad(vec.astype(jnp.float32), (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(v), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(v / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1)[:P], scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+               block: int = BLOCK) -> jnp.ndarray:
+    P = q.shape[0]
+    pad = (-P) % block
+    v = jnp.pad(q.astype(jnp.float32), (0, pad)).reshape(-1, block)
+    return (v * scale[:, None]).reshape(-1)[:P]
+
+
+@dataclasses.dataclass
+class ErrorFeedbackCompressor:
+    """Per-client stateful compressor: quantizes (update + residual),
+    carries the new residual forward."""
+
+    block: int = BLOCK
+
+    def __post_init__(self):
+        self._residual: Dict[int, jnp.ndarray] = {}
+
+    def compress(self, client_id: int, update: jnp.ndarray):
+        u = update.astype(jnp.float32)
+        r = self._residual.get(client_id)
+        if r is not None:
+            u = u + r
+        q, scale = quantize(u, self.block)
+        self._residual[client_id] = u - dequantize(q, scale, self.block)
+        return q, scale
+
+    def reset(self):
+        self._residual.clear()
+
+
+def compressed_bytes(n_params: int, block: int = BLOCK) -> int:
+    n_blocks = -(-n_params // block)
+    return n_params + 4 * n_blocks  # int8 codes + fp32 scales
+
+
+def compression_ratio(n_params: int, block: int = BLOCK) -> float:
+    return 4.0 * n_params / compressed_bytes(n_params, block)

@@ -1,0 +1,236 @@
+"""Distributed aggregation engine — the paper's Spark-MapReduce path,
+re-thought as ``shard_map`` over the TPU mesh (§III-D2, DESIGN.md §2).
+
+Layouts (mesh axes: optional "pod", "data", "model"):
+  * reducible fusions:     updates (n, P) sharded P(client_axes, "model").
+        map    = local partial weighted-sum over the client shard,
+        reduce = psum over the client axes (paper's MapReduce reduce).
+        Result: (P,) sharded over "model".
+  * coordinate-wise:       all_to_all re-shards clients -> coordinates, so
+        each device holds ALL n client values for a slice of coordinates
+        (what Spark's shuffle does before a per-key reduce), then applies
+        the op locally. Result sharded over ("model", client_axes).
+  * Krum / Zeno / GeoMedian: updates sharded P(None, all axes) — full
+        client rows never materialize on one device; pairwise Gram blocks
+        / score terms are computed per coordinate shard and psum'd.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.fusion.base import FusionAlgorithm
+from repro.core.fusion.robust import GeometricMedian, Krum, TrimmedMean, Zeno
+
+
+def _device_put(mesh: Mesh, x, spec: P):
+    return jax.device_put(jnp.asarray(x), NamedSharding(mesh, spec))
+
+
+@dataclasses.dataclass
+class DistributedEngine:
+    """Map-reduce fusion over a device mesh."""
+
+    mesh: Mesh
+    client_axes: Tuple[str, ...] = ("data",)
+    param_axis: str = "model"
+    hierarchical: bool = False   # reduce within pod first, then across pods
+
+    name: str = "distributed"
+
+    def __post_init__(self):
+        names = self.mesh.axis_names
+        self.client_axes = tuple(a for a in self.client_axes if a in names)
+        if "pod" in names and "pod" not in self.client_axes:
+            # pods shard clients too (each pod's edge aggregates its region)
+            self.client_axes = ("pod",) + self.client_axes
+        self._n_client_shards = int(
+            np.prod([self.mesh.shape[a] for a in self.client_axes])
+        )
+        self._n_param_shards = self.mesh.shape.get(self.param_axis, 1)
+
+    # -- public -------------------------------------------------------------
+    def fuse(self, fusion: FusionAlgorithm, updates, weights) -> jax.Array:
+        """updates (n, P), weights (n,). Returns fused (P,) (sharded)."""
+        n, P_ = np.shape(updates)
+        if weights is None:
+            weights = jnp.ones((n,), jnp.float32)
+        weights = fusion.effective_weights(jnp.asarray(weights, jnp.float32))
+        pad_n = (-n) % self._n_client_shards
+        pad_p = (-P_) % (self._n_param_shards * self._n_client_shards)
+        if pad_n or pad_p:
+            updates = jnp.pad(jnp.asarray(updates), ((0, pad_n), (0, pad_p)))
+            # zero weight => padded rows contribute nothing to reducible
+            # fusions; robust paths mask them explicitly
+            weights = jnp.pad(jnp.asarray(weights), (0, pad_n))
+        out = self._dispatch(fusion, updates, weights, n)
+        return out[:P_]
+
+    # -- dispatch -----------------------------------------------------------
+    def _dispatch(self, fusion, updates, weights, n_real: int):
+        if fusion.reducible:
+            return self._fuse_reducible(fusion, updates, weights)
+        if fusion.coordinatewise:
+            return self._fuse_coordinatewise(fusion, updates, weights, n_real)
+        if isinstance(fusion, Krum):
+            return self._fuse_krum(fusion, updates, weights, n_real)
+        if isinstance(fusion, Zeno):
+            return self._fuse_zeno(fusion, updates, weights, n_real)
+        if isinstance(fusion, GeometricMedian):
+            return self._fuse_geomedian(fusion, updates, weights, n_real)
+        raise NotImplementedError(
+            f"no distributed strategy for fusion {fusion.name!r}"
+        )
+
+    # -- reducible: map-reduce ------------------------------------------------
+    def _fuse_reducible(self, fusion, updates, weights):
+        mesh = self.mesh
+        cspec = tuple(self.client_axes) if len(self.client_axes) > 1 else (
+            self.client_axes[0] if self.client_axes else None
+        )
+        in_u = P(cspec, self.param_axis)
+        in_w = P(cspec)
+        out = P(self.param_axis)
+
+        def mapper(u, w):
+            if fusion.needs_row_norms:
+                sq = jnp.sum(u.astype(jnp.float32) ** 2, axis=1)
+                if self._n_param_shards > 1:
+                    sq = jax.lax.psum(sq, self.param_axis)
+                wsum, tot = fusion.partial_with_norms(u, w, jnp.sqrt(sq))
+            else:
+                wsum, tot = fusion.partial(u, w)
+            if self.hierarchical:
+                # edge stage: reduce within the pod's client shards first,
+                # then the (smaller) cross-pod reduce — the paper's
+                # client-edge-cloud hierarchy on the pod axis.
+                for ax in reversed(self.client_axes):
+                    wsum = jax.lax.psum(wsum, ax)
+                    tot = jax.lax.psum(tot, ax)
+            else:
+                wsum = jax.lax.psum(wsum, self.client_axes)
+                tot = jax.lax.psum(tot, self.client_axes)
+            return fusion.combine(wsum, tot)
+
+        fn = shard_map(
+            mapper, mesh=mesh, in_specs=(in_u, in_w), out_specs=out,
+            check_vma=False,
+        )
+        u = _device_put(mesh, updates, in_u)
+        w = _device_put(mesh, jnp.asarray(weights, jnp.float32), in_w)
+        return jax.jit(fn)(u, w)
+
+    # -- coordinate-wise: shuffle (all_to_all) then local --------------------
+    def _fuse_coordinatewise(self, fusion, updates, weights, n_real):
+        mesh = self.mesh
+        cspec = tuple(self.client_axes) if len(self.client_axes) > 1 else (
+            self.client_axes[0] if self.client_axes else None
+        )
+        in_u = P(cspec, self.param_axis)
+        out = P((self.param_axis,) + tuple(self.client_axes))
+
+        def mapper(u):
+            for ax in self.client_axes:
+                u = jax.lax.all_to_all(
+                    u, ax, split_axis=1, concat_axis=0, tiled=True
+                )
+            # u now holds ALL padded client rows for a coordinate slice;
+            # drop padding rows so order statistics are exact.
+            u = u[:n_real]
+            return fusion.fuse(u, None)
+
+        fn = shard_map(
+            mapper, mesh=mesh, in_specs=(in_u,), out_specs=out,
+            check_vma=False,
+        )
+        u = _device_put(mesh, updates, in_u)
+        return jax.jit(fn)(u)
+
+    # -- Krum: psum'd Gram matrix --------------------------------------------
+    def _fuse_krum(self, fusion: Krum, updates, weights, n_real):
+        mesh = self.mesh
+        all_axes = tuple(self.client_axes) + (self.param_axis,)
+        in_u = P(None, all_axes)
+        out = P(all_axes)
+
+        def mapper(u):
+            uf = u.astype(jnp.float32)
+            gram = jax.lax.psum(uf @ uf.T, all_axes)
+            gram = gram[:n_real, :n_real]
+            idx = fusion.select_from_gram(gram)
+            return jnp.mean(uf[:n_real][idx], axis=0)
+
+        fn = shard_map(
+            mapper, mesh=mesh, in_specs=(in_u,), out_specs=out,
+            check_vma=False,
+        )
+        u = _device_put(mesh, updates, in_u)
+        return jax.jit(fn)(u)
+
+    # -- Zeno: psum'd scores ---------------------------------------------------
+    def _fuse_zeno(self, fusion: Zeno, updates, weights, n_real):
+        mesh = self.mesh
+        all_axes = tuple(self.client_axes) + (self.param_axis,)
+        in_u = P(None, all_axes)
+        out = P(all_axes)
+        g_val = fusion._g_val
+
+        def mapper(u, g):
+            uf = u.astype(jnp.float32)
+            inner = jax.lax.psum(uf @ g, all_axes)[:n_real]
+            sq = jax.lax.psum(jnp.sum(uf * uf, axis=1), all_axes)[:n_real]
+            s = fusion.scores(inner, sq)
+            keep = max(n_real - fusion.n_suspect, 1)
+            _, idx = jax.lax.top_k(s, keep)
+            return jnp.mean(uf[:n_real][idx], axis=0)
+
+        fn = shard_map(
+            mapper, mesh=mesh, in_specs=(in_u, P(all_axes)), out_specs=out,
+            check_vma=False,
+        )
+        u = _device_put(mesh, updates, in_u)
+        if g_val is None:
+            g_val = jnp.mean(jnp.asarray(updates, jnp.float32), axis=0)
+        g = _device_put(mesh, jnp.asarray(g_val, jnp.float32), P(all_axes))
+        return jax.jit(fn)(u, g)
+
+    # -- Geometric median: distributed Weiszfeld -------------------------------
+    def _fuse_geomedian(self, fusion: GeometricMedian, updates, weights,
+                        n_real):
+        mesh = self.mesh
+        all_axes = tuple(self.client_axes) + (self.param_axis,)
+        in_u = P(None, all_axes)
+        out = P(all_axes)
+
+        def mapper(u, w):
+            uf = u.astype(jnp.float32)[:n_real]
+            wf = w.astype(jnp.float32)[:n_real]
+            wf = wf / jnp.sum(wf)
+            z = jnp.einsum("np,n->p", uf, wf)
+
+            def step(z, _):
+                d2 = jax.lax.psum(
+                    jnp.sum((uf - z[None, :]) ** 2, axis=1), all_axes
+                )
+                d = jnp.sqrt(d2)
+                beta = wf / jnp.maximum(d, fusion.smooth)
+                beta = beta / jnp.sum(beta)
+                return jnp.einsum("np,n->p", uf, beta), None
+
+            z, _ = jax.lax.scan(step, z, None, length=fusion.iters)
+            return z
+
+        fn = shard_map(
+            mapper, mesh=mesh, in_specs=(in_u, P(None)), out_specs=out,
+            check_vma=False,
+        )
+        u = _device_put(mesh, updates, in_u)
+        w = _device_put(mesh, jnp.asarray(weights, jnp.float32), P(None))
+        return jax.jit(fn)(u, w)

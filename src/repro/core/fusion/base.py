@@ -1,0 +1,71 @@
+"""Fusion algorithm interface.
+
+A fusion algorithm consumes ``n`` client model updates and produces one
+fused update. All algorithms operate on the canonical flat-vector layout
+(``utils.pytree.tree_to_flat_vector``): updates are a (n, P) matrix and
+per-client weights (sample counts) a (n,) vector.
+
+Two capability flags drive engine selection (paper §III-D):
+
+* ``reducible`` — the algorithm is a weighted sum over clients, so the
+  distributed engine can fuse with a pure map-reduce (local partial sums +
+  ``psum``), exactly like the paper's Spark MapReduce path. FedAvg,
+  IterAvg, GradAvg, ClippedAvg are reducible.
+* ``coordinatewise`` — the algorithm acts independently per coordinate
+  given ALL client values for that coordinate (median, trimmed mean).
+  The distributed engine re-shards clients->coordinates (all-to-all) and
+  applies the op locally.
+
+Algorithms that are neither (Krum, Zeno, geometric median) expose
+``pairwise_stats``/``score``-style hooks used by the distributed engine to
+compute partial statistics locally and combine with ``psum``.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class FusionAlgorithm(abc.ABC):
+    """Base class. Subclasses are stateless and jit-friendly."""
+
+    name: str = "base"
+    reducible: bool = False
+    coordinatewise: bool = False
+
+    # set when per-client full-row norms are needed before the weighted sum
+    # (e.g. ClippedAvg) — the distributed engine psums squared norms across
+    # parameter shards and calls partial_with_norms instead of partial.
+    needs_row_norms: bool = False
+
+    @abc.abstractmethod
+    def fuse(self, updates: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+        """updates: (n, P); weights: (n,) fp32. Returns (P,)."""
+
+    # -- hooks for the reducible (map-reduce) path -------------------------
+    def effective_weights(self, weights: jnp.ndarray) -> jnp.ndarray:
+        """Normalize the weight semantics BEFORE any padding, so padded
+        rows (weight 0) never contribute. IterAvg overrides to ones."""
+        return weights
+
+    def partial(self, updates: jnp.ndarray, weights: jnp.ndarray):
+        """Local 'map' stage: returns (weighted_sum (P,), weight_sum ())."""
+        raise NotImplementedError(f"{self.name} is not reducible")
+
+    def partial_with_norms(self, updates, weights, row_norms):
+        """Like partial() but given exact full-row L2 norms (n,)."""
+        raise NotImplementedError(f"{self.name} does not use row norms")
+
+    def combine(self, weighted_sum: jnp.ndarray, weight_sum: jnp.ndarray):
+        """Final 'reduce' stage after summing partials across shards."""
+        raise NotImplementedError(f"{self.name} is not reducible")
+
+    def __repr__(self) -> str:
+        return f"<fusion:{self.name}>"
+
+
+EPS = 1e-6  # the paper's epsilon in Eq. (1)

@@ -1,0 +1,91 @@
+"""Single-node aggregation engines (paper §III-D1).
+
+``jnp`` strategy  — the faithful baseline: plain dense ops on one device,
+                    the analogue of the frameworks' single-threaded NumPy.
+``pallas`` strategy — the TPU analogue of the paper's Numba path: the
+                    streaming fused kernel (one HBM pass, VMEM tiling).
+
+Both support *chunked streaming* for reducible fusions so a memory-capped
+node can still aggregate more clients than fit at once (the knob used by
+the Fig. 1/2 memory-wall benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fusion.base import FusionAlgorithm
+from repro.kernels.fused_fusion.kernel import weighted_sum_pallas
+from repro.kernels.robust_fusion.kernel import (
+    coordmedian_pallas,
+    trimmedmean_pallas,
+)
+
+
+@dataclasses.dataclass
+class LocalEngine:
+    """Fuses on the local device."""
+
+    strategy: str = "jnp"        # "jnp" | "pallas"
+    memory_cap_bytes: Optional[int] = None  # simulate a memory-limited node
+    interpret: bool = True       # pallas interpret mode (CPU container)
+
+    name: str = "local"
+
+    def fuse(self, fusion: FusionAlgorithm, updates, weights) -> jnp.ndarray:
+        updates = jnp.asarray(updates)
+        if weights is None:
+            weights = jnp.ones((updates.shape[0],), jnp.float32)
+        weights = fusion.effective_weights(jnp.asarray(weights, jnp.float32))
+        n, P = updates.shape
+        batch_bytes = updates.dtype.itemsize * P
+
+        if self.memory_cap_bytes is not None:
+            max_rows = max(int(self.memory_cap_bytes // max(batch_bytes, 1)), 1)
+            if max_rows < n:
+                if not fusion.reducible:
+                    raise MemoryError(
+                        f"{fusion.name}: {n} updates x {batch_bytes} B exceed "
+                        f"the {self.memory_cap_bytes} B cap and the fusion "
+                        "is not streamable — classify as DISTRIBUTED"
+                    )
+                return self._streamed(fusion, updates, weights, max_rows)
+
+        if fusion.reducible:
+            wsum, tot = self._partial(fusion, updates, weights)
+            return fusion.combine(wsum, tot)
+        if self.strategy == "pallas" and fusion.name == "coordmedian":
+            return coordmedian_pallas(updates, interpret=self.interpret)
+        if self.strategy == "pallas" and fusion.name == "trimmedmean":
+            trim = int(n * fusion.beta)
+            return trimmedmean_pallas(updates, trim, interpret=self.interpret)
+        return fusion.fuse(updates, weights)
+
+    # -- internals ----------------------------------------------------------
+    def _partial(self, fusion, updates, weights):
+        if self.strategy == "pallas" and fusion.name in (
+            "fedavg", "gradavg", "iteravg", "fedavgm", "fedadam"
+        ):
+            w = (
+                jnp.ones_like(weights) if fusion.name == "iteravg" else weights
+            )
+            wsum = weighted_sum_pallas(updates, w, interpret=self.interpret)
+            return wsum, jnp.sum(w)
+        return fusion.partial(updates, weights)
+
+    def _streamed(self, fusion, updates, weights, max_rows) -> jnp.ndarray:
+        """Accumulate reducible partials over client chunks — bounded
+        resident set (the single-node answer to the memory wall)."""
+        n = updates.shape[0]
+        wsum = None
+        tot = None
+        for lo in range(0, n, max_rows):
+            hi = min(lo + max_rows, n)
+            ws, t = self._partial(fusion, updates[lo:hi], weights[lo:hi])
+            wsum = ws if wsum is None else wsum + ws
+            tot = t if tot is None else tot + t
+        return fusion.combine(wsum, tot)

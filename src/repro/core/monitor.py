@@ -1,0 +1,46 @@
+"""Monitor — Algorithm 1's ``monitor(T_h, P)``: wait until a threshold
+count of client updates has landed in the store, or a timeout elapses
+(straggler control). The clock is injectable for deterministic tests."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from repro.core.store import UpdateStore
+
+
+@dataclasses.dataclass
+class MonitorResult:
+    ready: bool           # threshold reached (False -> timed out)
+    count: int            # updates present when the monitor returned
+    waited: float         # seconds waited
+
+
+class Monitor:
+    def __init__(
+        self,
+        store: UpdateStore,
+        threshold: int,
+        timeout: float = 30.0,
+        poll_interval: float = 0.01,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        self.store = store
+        self.threshold = threshold
+        self.timeout = timeout
+        self.poll_interval = poll_interval
+        self.clock = clock
+        self.sleep = sleep
+
+    def wait(self) -> MonitorResult:
+        start = self.clock()
+        while True:
+            count = self.store.count()
+            waited = self.clock() - start
+            if count >= self.threshold:
+                return MonitorResult(ready=True, count=count, waited=waited)
+            if waited >= self.timeout:
+                return MonitorResult(ready=False, count=count, waited=waited)
+            self.sleep(self.poll_interval)

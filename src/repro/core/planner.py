@@ -1,0 +1,127 @@
+"""Adaptive engine selection (paper Algorithm 1 + §III-D3 seamless
+transition), upgraded from the paper's single threshold test to a
+roofline-based cost model over the TPU memory hierarchy.
+
+For a workload (w_s, n) and fusion algorithm, the planner estimates for
+each candidate engine:
+
+  ingest   — bytes into the aggregation substrate (store -> HBM or NIC ->
+             HBM), divided by the available ingest bandwidth,
+  compute  — fusion FLOPs / peak (negligible for averaging: ~2 flops/B,
+             far below the HBM knee, so HBM time dominates — the same
+             observation that makes the paper's NumPy single-core path
+             memory-bound),
+  memory   — one streaming pass over S = w_s * n at HBM bandwidth,
+  collective — reduce/shuffle bytes over ICI links (distributed only).
+
+and picks the cheapest FEASIBLE plan (single-chip plans are infeasible
+once S exceeds HBM headroom — the paper's memory wall).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.fusion.base import FusionAlgorithm
+from repro.core.workload import HBM_HEADROOM, Workload, WorkloadClass, classify
+from repro.utils.mem import TPU_V5E, HardwareSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    engine: str               # "local" | "distributed" | "hierarchical"
+    workload_class: WorkloadClass
+    est_seconds: float
+    breakdown: Dict[str, float]
+    n_devices: int
+    feasible: bool
+    reason: str = ""
+
+
+@dataclasses.dataclass
+class Planner:
+    hw: HardwareSpec = TPU_V5E
+    n_devices: int = 1
+    n_pods: int = 1
+    store_bw: float = 819e9   # store->HBM modeled at HBM class bandwidth
+    # fixed cost of going distributed: dispatch/schedule + collective launch
+    # latencies (the Spark-context analogue of the paper's §III-D3; the one-
+    # time ~30 s spin-up is amortized across rounds and excluded)
+    dispatch_overhead: float = 5e-3
+
+    def candidate_plans(self, load: Workload,
+                        fusion: FusionAlgorithm) -> List[Plan]:
+        s = float(load.total_bytes)
+        p_bytes = float(load.update_bytes)
+        wl = classify(load, self.hw)
+        plans: List[Plan] = []
+
+        # -- single chip ----------------------------------------------------
+        hbm_cap = self.hw.hbm_bytes * HBM_HEADROOM
+        feasible_local = s <= hbm_cap or fusion.reducible  # streaming path
+        mem_t = s / self.hw.hbm_bw
+        passes = 1.0 if fusion.reducible else 2.0  # sort-based ops re-read
+        plans.append(Plan(
+            engine="local",
+            workload_class=wl,
+            est_seconds=s / self.store_bw + passes * mem_t,
+            breakdown={
+                "ingest": s / self.store_bw,
+                "memory": passes * mem_t,
+                "compute": 2 * load.num_params * load.n_clients
+                / self.hw.peak_flops_bf16,
+                "collective": 0.0,
+            },
+            n_devices=1,
+            feasible=feasible_local,
+            reason="streams client chunks" if s > hbm_cap else "fits HBM",
+        ))
+
+        # -- distributed mesh -------------------------------------------------
+        if self.n_devices > 1:
+            d = self.n_devices
+            per_dev = s / d
+            # reducible fusions stream store partitions through each chip
+            # (the Spark model: the dataset lives in the store, not HBM),
+            # so feasibility only requires the WORKING SET to fit
+            working_set = (
+                p_bytes / d if fusion.reducible else per_dev
+            )
+            ici = self.hw.ici_bw_per_link * self.hw.ici_links
+            if fusion.reducible:
+                # psum of the (param-sharded) partial: ring all-reduce of
+                # P/d_model bytes over the data axis
+                coll = 2.0 * p_bytes / max(d, 1) / ici * 4  # fp32 partials
+            elif fusion.coordinatewise:
+                coll = per_dev / ici  # all_to_all moves ~1/d of local shard
+            else:
+                coll = p_bytes / ici  # gram/score psums + row broadcast
+            plans.append(Plan(
+                engine="hierarchical" if self.n_pods > 1 else "distributed",
+                workload_class=wl,
+                est_seconds=per_dev / self.store_bw + per_dev / self.hw.hbm_bw
+                + coll + self.dispatch_overhead,
+                breakdown={
+                    "ingest": per_dev / self.store_bw,
+                    "memory": per_dev / self.hw.hbm_bw,
+                    "compute": 2 * load.num_params * load.n_clients
+                    / (d * self.hw.peak_flops_bf16),
+                    "collective": coll,
+                },
+                n_devices=d,
+                feasible=working_set <= hbm_cap,
+                reason=f"shards S over {d} chips"
+                + (" (streamed from store)" if per_dev > hbm_cap else ""),
+            ))
+        return plans
+
+    def plan(self, load: Workload, fusion: FusionAlgorithm) -> Plan:
+        plans = [p for p in self.candidate_plans(load, fusion) if p.feasible]
+        if not plans:
+            raise MemoryError(
+                f"no feasible engine for S={load.total_bytes} bytes "
+                f"({load.n_clients} x {load.update_bytes})"
+            )
+        return min(plans, key=lambda p: p.est_seconds)

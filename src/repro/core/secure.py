@@ -1,0 +1,45 @@
+"""Secure aggregation via pairwise additive masks (paper §V discussion;
+Bonawitz et al., CCS'17 §4 semantics, without the dropout-recovery
+protocol — mask *cancellation* under summation is what interacts with the
+aggregation engines, and only sum-reducible fusions preserve it).
+
+Client i adds sum_{j>i} PRG(seed_ij) - sum_{j<i} PRG(seed_ji) to its
+update; the pairwise terms cancel exactly in the fused sum. Masks are
+generated with JAX's counter-based PRNG keyed by fold_in(seed, i, j), so
+client i and j derive the same stream without communication (stand-in for
+the DH key agreement)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SecureMasking:
+    n_clients: int
+    seed: int = 0
+    scale: float = 1.0
+
+    def _pair_mask(self, i: int, j: int, n_params: int) -> jnp.ndarray:
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), i), j
+        )
+        return self.scale * jax.random.normal(key, (n_params,), jnp.float32)
+
+    def mask_for(self, client: int, n_params: int) -> jnp.ndarray:
+        """The net mask client ``client`` adds to its update."""
+        m = jnp.zeros((n_params,), jnp.float32)
+        for j in range(self.n_clients):
+            if j == client:
+                continue
+            lo, hi = min(client, j), max(client, j)
+            pm = self._pair_mask(lo, hi, n_params)
+            m = m + pm if client == lo else m - pm
+        return m
+
+    def mask_update(self, client: int, update: jnp.ndarray) -> jnp.ndarray:
+        return update.astype(jnp.float32) + self.mask_for(
+            client, update.shape[-1]
+        )

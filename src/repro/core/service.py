@@ -1,0 +1,173 @@
+"""AggregationService — the paper's top-level contribution (Algorithm 1 +
+§III-D): an adaptive, elastic aggregation facade that routes every round's
+workload to the best engine and transitions seamlessly between them.
+
+Round flow (mirrors Algorithm 1):
+  1. S = w_s * n  -> classify + plan (planner.py's roofline cost model).
+  2. small  -> single-chip engine (jnp baseline or fused Pallas path),
+     updates land in memory exactly as IBMFL receives them over gRPC.
+  3. large  -> clients were already redirected to the UpdateStore (the
+     seamless-transition hook, §III-D3); monitor(T_h, timeout) waits for
+     the straggler threshold; the distributed engine map-reduces the
+     store's shards over the mesh.
+  4. The fused flat vector is unflattened back into the model pytree.
+
+Convergence guarantee (paper §IV-C): every engine computes the *same*
+fusion formula — tests/test_equivalence.py asserts allclose across
+engines, which is the system's core invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import DistributedEngine
+from repro.core.fusion import FusionAlgorithm, get_fusion
+from repro.core.local import LocalEngine
+from repro.core.monitor import Monitor, MonitorResult
+from repro.core.planner import Plan, Planner
+from repro.core.store import UpdateStore
+from repro.core.workload import Workload, WorkloadClass
+from repro.utils.mem import TPU_V5E, HardwareSpec
+from repro.utils.pytree import flat_vector_to_tree, tree_to_flat_vector
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class RoundReport:
+    plan: Plan
+    n_clients: int
+    update_bytes: int
+    fuse_seconds: float          # wall time of the fusion computation
+    monitor: Optional[MonitorResult] = None
+    route_next_to_store: bool = False
+
+
+class AggregationService:
+    """Adaptive aggregation service over a (possibly trivial) mesh."""
+
+    def __init__(
+        self,
+        fusion: FusionAlgorithm | str = "fedavg",
+        mesh=None,
+        hw: HardwareSpec = TPU_V5E,
+        local_strategy: str = "pallas",
+        store: Optional[UpdateStore] = None,
+        threshold_frac: float = 0.8,
+        monitor_timeout: float = 30.0,
+        memory_cap_bytes: Optional[int] = None,
+    ):
+        self.fusion = (
+            get_fusion(fusion) if isinstance(fusion, str) else fusion
+        )
+        self.mesh = mesh
+        self.hw = hw
+        self.store = store or UpdateStore()
+        self.threshold_frac = threshold_frac
+        self.monitor_timeout = monitor_timeout
+        self.local = LocalEngine(
+            strategy=local_strategy, memory_cap_bytes=memory_cap_bytes
+        )
+        self.distributed = (
+            DistributedEngine(mesh=mesh) if mesh is not None else None
+        )
+        self.hierarchical = (
+            DistributedEngine(mesh=mesh, hierarchical=True)
+            if mesh is not None and "pod" in mesh.axis_names else None
+        )
+        n_dev = mesh.devices.size if mesh is not None else 1
+        n_pods = mesh.shape.get("pod", 1) if mesh is not None else 1
+        self.planner = Planner(hw=hw, n_devices=n_dev, n_pods=n_pods)
+        self.history: List[RoundReport] = []
+
+    # -- Algorithm 1 ----------------------------------------------------------
+    def aggregate(
+        self,
+        updates: Optional[Sequence[PyTree]] = None,
+        weights: Optional[Sequence[float]] = None,
+        template: Optional[PyTree] = None,
+        expected_clients: Optional[int] = None,
+        from_store: bool = False,
+    ) -> Tuple[PyTree, RoundReport]:
+        """One aggregation round. Either ``updates`` (in-memory, the small
+        path's arrival mode) or ``from_store=True`` (clients wrote to the
+        UpdateStore; the monitor gates the round)."""
+        monitor_result = None
+        if from_store:
+            expected = expected_clients or self.store.count()
+            monitor = Monitor(
+                self.store,
+                threshold=max(int(expected * self.threshold_frac), 1),
+                timeout=self.monitor_timeout,
+            )
+            monitor_result = monitor.wait()
+            stacked, w = self.store.read_stacked()
+        else:
+            assert updates is not None and len(updates) > 0
+            flat = [
+                np.asarray(
+                    u if getattr(u, "ndim", None) == 1
+                    else tree_to_flat_vector(u)
+                )
+                for u in updates
+            ]
+            stacked = np.stack(flat)
+            w = (
+                np.asarray(weights, np.float32)
+                if weights is not None
+                else np.ones((len(flat),), np.float32)
+            )
+
+        n, p = stacked.shape
+        load = Workload(
+            update_bytes=p * stacked.dtype.itemsize, n_clients=n,
+            dtype_bytes=stacked.dtype.itemsize,
+        )
+        plan = self.planner.plan(load, self.fusion)
+
+        t0 = time.perf_counter()
+        if plan.engine == "local":
+            fused = self.local.fuse(self.fusion, stacked, w)
+        elif plan.engine == "hierarchical" and self.hierarchical is not None:
+            fused = self.hierarchical.fuse(self.fusion, stacked, w)
+        else:
+            assert self.distributed is not None, (
+                "planner chose the distributed engine but no mesh was given"
+            )
+            fused = self.distributed.fuse(self.fusion, stacked, w)
+        fused = jax.block_until_ready(fused)
+        dt = time.perf_counter() - t0
+
+        # §III-D3 seamless transition: if next round's projected load would
+        # overflow a single chip (even the streamed local path then needs
+        # the store as its backing set), tell clients to write to the store.
+        next_load = Workload(
+            update_bytes=load.update_bytes,
+            n_clients=max(n, expected_clients or n),
+        )
+        from repro.core.workload import classify
+
+        route_next = (
+            classify(next_load, self.hw) is WorkloadClass.DISTRIBUTED
+            or self.planner.plan(next_load, self.fusion).engine != "local"
+        )
+
+        report = RoundReport(
+            plan=plan,
+            n_clients=n,
+            update_bytes=load.update_bytes,
+            fuse_seconds=dt,
+            monitor=monitor_result,
+            route_next_to_store=route_next,
+        )
+        self.history.append(report)
+
+        if template is not None:
+            return flat_vector_to_tree(jnp.asarray(fused), template), report
+        return fused, report

@@ -1,0 +1,149 @@
+"""UpdateStore — the HDFS analogue.
+
+Clients write model updates here instead of pushing them over a single
+server's NIC (the paper's webHDFS path, §III-D2). The store is the
+communication substrate of the distributed engine: placement is sharded
+(round-robin over simulated datanodes), capacity is cluster-level rather
+than single-node, and reads hand the distributed engine per-shard slices.
+
+Two backends:
+  * memory — dict of flat fp32 vectors (fast; benchmarks).
+  * disk   — one .npy per update under a spool dir (restart-safe; the
+             end-to-end example and fault-tolerance tests use this).
+
+Ingest-time accounting mirrors the paper's Fig. 12 'average write time':
+bytes / per-datanode bandwidth with ``replication`` copies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.utils.pytree import tree_to_flat_vector
+
+
+@dataclasses.dataclass
+class StoreStats:
+    writes: int = 0
+    bytes_written: int = 0
+    sim_write_seconds: float = 0.0  # modeled (bandwidth-based), not wall
+
+
+class UpdateStore:
+    """Thread-safe spool of (client_id -> flat update, weight)."""
+
+    def __init__(
+        self,
+        backend: str = "memory",
+        spool_dir: Optional[str] = None,
+        n_datanodes: int = 3,
+        replication: int = 2,
+        datanode_bw: float = 117e6,  # ~1 GbE in bytes/s, paper's testbed
+    ):
+        assert backend in ("memory", "disk")
+        self.backend = backend
+        self.spool_dir = spool_dir
+        if backend == "disk":
+            assert spool_dir, "disk backend needs spool_dir"
+            os.makedirs(spool_dir, exist_ok=True)
+        self.n_datanodes = n_datanodes
+        self.replication = replication
+        self.datanode_bw = datanode_bw
+        self._mem: Dict[str, Tuple[np.ndarray, float]] = {}
+        self._weights: Dict[str, float] = {}
+        self._lock = threading.Lock()
+        self.stats = StoreStats()
+        if backend == "disk":
+            # fault tolerance (the HDFS property the paper leans on):
+            # recover updates spooled by a previous aggregator incarnation
+            # — weights persist in a sidecar next to each blob
+            self._weights.update(self._recover())
+
+    # -- client side --------------------------------------------------------
+    def write(self, client_id: str, update, weight: float = 1.0) -> float:
+        """Store one update (pytree or flat vector). Returns the modeled
+        write latency (bandwidth model, paper Fig. 12)."""
+        vec = np.asarray(
+            update if getattr(update, "ndim", None) == 1
+            else tree_to_flat_vector(update)
+        ).astype(np.float32)
+        nbytes = vec.nbytes * self.replication
+        latency = nbytes / (self.datanode_bw * self.n_datanodes)
+        with self._lock:
+            if self.backend == "memory":
+                self._mem[client_id] = (vec, weight)
+            else:
+                np.save(self._path(client_id), vec)
+                with open(self._path(client_id) + ".w", "w") as f:
+                    f.write(repr(float(weight)))
+                self._weights[client_id] = weight
+            self.stats.writes += 1
+            self.stats.bytes_written += nbytes
+            self.stats.sim_write_seconds += latency
+        return latency
+
+    # -- aggregator side ----------------------------------------------------
+    def count(self) -> int:
+        with self._lock:
+            if self.backend == "memory":
+                return len(self._mem)
+            return len(self._weights)
+
+    def client_ids(self) -> List[str]:
+        with self._lock:
+            src = self._mem if self.backend == "memory" else self._weights
+            return sorted(src.keys())
+
+    def read(self, client_id: str) -> Tuple[np.ndarray, float]:
+        if self.backend == "memory":
+            return self._mem[client_id]
+        return np.load(self._path(client_id)), self._weights[client_id]
+
+    def read_stacked(self) -> Tuple[np.ndarray, np.ndarray]:
+        """All updates as (n, P) + weights (n,) — the engine's input."""
+        ids = self.client_ids()
+        ups, ws = [], []
+        for cid in ids:
+            u, w = self.read(cid)
+            ups.append(u)
+            ws.append(w)
+        return np.stack(ups), np.asarray(ws, np.float32)
+
+    def partition(self, n_parts: int) -> List[List[str]]:
+        """Round-robin client placement over partitions (Spark-style)."""
+        ids = self.client_ids()
+        return [ids[i::n_parts] for i in range(n_parts)]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._mem.clear()
+            if self.backend == "disk":
+                for cid in list(self._weights):
+                    for path in (self._path(cid), self._path(cid) + ".w"):
+                        try:
+                            os.remove(path)
+                        except FileNotFoundError:
+                            pass
+                self._weights.clear()
+
+    def _path(self, client_id: str) -> str:
+        return os.path.join(self.spool_dir, f"{client_id}.npy")
+
+    def _recover(self) -> Dict[str, float]:
+        """Rebuild the weight index from the spool after a restart."""
+        weights: Dict[str, float] = {}
+        for name in os.listdir(self.spool_dir):
+            if name.endswith(".npy"):
+                cid = name[: -len(".npy")]
+                wpath = os.path.join(self.spool_dir, name + ".w")
+                try:
+                    with open(wpath) as f:
+                        weights[cid] = float(f.read())
+                except (FileNotFoundError, ValueError):
+                    weights[cid] = 1.0
+        return weights

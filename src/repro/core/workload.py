@@ -1,0 +1,66 @@
+"""Workload classification — the paper's Algorithm 1 condition, adapted to
+the TPU memory hierarchy.
+
+Paper: ``S = w_s * n`` compared against single-node DRAM ``M``.
+Here the single "node" is one TPU chip, so the classes are:
+
+  VMEM_RESIDENT — one update tile fits the Pallas accumulator tiling, and
+                  the whole batch streams through a single chip comfortably
+                  (S < vmem_streaming_limit). The fused single-chip kernel
+                  is fastest: one HBM pass, no collectives.
+  HBM_LOCAL     — S fits one chip's HBM (with headroom for the fused
+                  output and working set). Single-chip fusion, jnp or
+                  Pallas engine.
+  DISTRIBUTED   — S exceeds one chip: shard clients/coordinates across the
+                  mesh (the paper's Spark/HDFS path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+from repro.utils.mem import TPU_V5E, HardwareSpec
+
+
+class WorkloadClass(enum.Enum):
+    VMEM_RESIDENT = "vmem_resident"
+    HBM_LOCAL = "hbm_local"
+    DISTRIBUTED = "distributed"
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One aggregation round's load descriptor (the paper's (w_s, n))."""
+
+    update_bytes: int          # w_s
+    n_clients: int             # n
+    dtype_bytes: int = 4
+
+    @property
+    def total_bytes(self) -> int:  # S = w_s * n
+        return self.update_bytes * self.n_clients
+
+    @property
+    def num_params(self) -> int:
+        return self.update_bytes // self.dtype_bytes
+
+
+# fraction of HBM usable for update storage (rest: program, output, fp32
+# accumulators, XLA workspace)
+HBM_HEADROOM = 0.75
+
+
+def classify(load: Workload, hw: HardwareSpec = TPU_V5E) -> WorkloadClass:
+    s = load.total_bytes
+    if s <= hw.vmem_bytes * 4:
+        # small enough that even a few streamed passes stay VMEM-friendly
+        return WorkloadClass.VMEM_RESIDENT
+    if s <= hw.hbm_bytes * HBM_HEADROOM:
+        return WorkloadClass.HBM_LOCAL
+    return WorkloadClass.DISTRIBUTED
+
+
+def max_clients_single_node(update_bytes: int,
+                            hw: HardwareSpec = TPU_V5E) -> int:
+    """The paper's Fig. 1/2 quantity: max n for one node at given w_s."""
+    return int(hw.hbm_bytes * HBM_HEADROOM // max(update_bytes, 1))

@@ -1,0 +1,13 @@
+"""Data pipeline: synthetic token streams, non-IID federated partitioning,
+and host-side batch sharding."""
+from repro.data.synthetic import SyntheticLM, make_batch
+from repro.data.partition import dirichlet_partition, shard_partition
+from repro.data.loader import FederatedLoader
+
+__all__ = [
+    "SyntheticLM",
+    "make_batch",
+    "dirichlet_partition",
+    "shard_partition",
+    "FederatedLoader",
+]

@@ -1,0 +1,5 @@
+"""Federated-learning runtime: clients, server rounds, orchestration."""
+from repro.fl.client import Client
+from repro.fl.server import FederatedServer, RoundResult
+
+__all__ = ["Client", "FederatedServer", "RoundResult"]

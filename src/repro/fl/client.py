@@ -1,0 +1,71 @@
+"""FL client: local training on private data, emits a model update.
+
+Update semantics (IBMFL-compatible):
+  * fedavg/iteravg/robust fusions — the update is the client's POST-
+    training weights (the paper aggregates weights, Eq. (1)).
+  * gradavg/fedavgm/fedadam — the update is the weight DELTA (pseudo-
+    gradient) after local steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import Model
+from repro.optim import Optimizer, apply_updates, clip_by_global_norm
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Client:
+    client_id: int
+    model: Model
+    optimizer: Optimizer
+    local_steps: int = 1
+    clip_norm: Optional[float] = None
+    send_delta: bool = False     # True for gradavg-family fusions
+
+    def __post_init__(self):
+        loss_fn = self.model.loss
+
+        def one_step(params, opt_state, batch, step):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, batch)
+            if self.clip_norm:
+                grads = clip_by_global_norm(grads, self.clip_norm)
+            ups, opt_state = self.optimizer.update(
+                grads, opt_state, step, params
+            )
+            return apply_updates(params, ups), opt_state, loss
+
+        self._step = jax.jit(one_step)
+
+    def train_round(
+        self, global_params: PyTree, batch_fn: Callable[[int], Dict],
+        round_idx: int,
+    ) -> Tuple[PyTree, float]:
+        """Runs ``local_steps`` steps from the global params. Returns
+        (update, last_loss)."""
+        params = global_params
+        opt_state = self.optimizer.init(params)
+        loss = jnp.inf
+        for s in range(self.local_steps):
+            batch = batch_fn(s)
+            params, opt_state, loss = self._step(
+                params, opt_state, batch, jnp.asarray(s, jnp.int32)
+            )
+        if self.send_delta:
+            update = jax.tree_util.tree_map(
+                lambda new, old: (
+                    new.astype(jnp.float32) - old.astype(jnp.float32)
+                ),
+                params, global_params,
+            )
+        else:
+            update = params
+        return update, float(loss)

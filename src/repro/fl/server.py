@@ -1,0 +1,94 @@
+"""FL server: orchestrates rounds through the AggregationService.
+
+The server is deliberately thin — client selection, broadcast, collect,
+aggregate, apply — because the aggregation SERVICE is the paper's object
+of study. The server consumes RoundReports (which engine ran, monitor
+state, seamless-transition routing) and exposes them to benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.service import AggregationService, RoundReport
+from repro.data.loader import FederatedLoader
+from repro.fl.client import Client
+from repro.models.base import Model
+from repro.utils.pytree import flat_vector_to_tree
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class RoundResult:
+    round_idx: int
+    mean_client_loss: float
+    report: RoundReport
+    n_selected: int
+
+
+class FederatedServer:
+    def __init__(
+        self,
+        model: Model,
+        clients: Sequence[Client],
+        loader: FederatedLoader,
+        service: AggregationService,
+        rng_seed: int = 0,
+        clients_per_round: Optional[int] = None,
+    ):
+        self.model = model
+        self.clients = list(clients)
+        self.loader = loader
+        self.service = service
+        self.rng = np.random.default_rng(rng_seed)
+        self.clients_per_round = clients_per_round or len(self.clients)
+        self.params = model.init(jax.random.PRNGKey(rng_seed))
+        self.results: List[RoundResult] = []
+
+    def run_round(self, round_idx: int) -> RoundResult:
+        sel = self.rng.choice(
+            len(self.clients), size=self.clients_per_round, replace=False
+        )
+        updates, weights, losses = [], [], []
+        send_delta = any(self.clients[i].send_delta for i in sel)
+        for i in sel:
+            c = self.clients[i]
+            batch_fn = lambda s, i=i: self.loader.client_batch(
+                c.client_id, round_idx * 1000 + s
+            )
+            upd, loss = c.train_round(self.params, batch_fn, round_idx)
+            updates.append(upd)
+            weights.append(self.loader.client_weight(c.client_id))
+            losses.append(loss)
+
+        fused, report = self.service.aggregate(
+            updates=updates, weights=weights, template=self.params,
+        )
+        if send_delta:
+            # pseudo-gradient: apply fused delta to the global weights
+            self.params = jax.tree_util.tree_map(
+                lambda p, d: (
+                    p.astype(jnp.float32) + d.astype(jnp.float32)
+                ).astype(p.dtype),
+                self.params, fused,
+            )
+        else:
+            self.params = jax.tree_util.tree_map(
+                lambda p, f: f.astype(p.dtype), self.params, fused
+            )
+        res = RoundResult(
+            round_idx=round_idx,
+            mean_client_loss=float(np.mean(losses)),
+            report=report,
+            n_selected=len(sel),
+        )
+        self.results.append(res)
+        return res
+
+    def run(self, n_rounds: int) -> List[RoundResult]:
+        return [self.run_round(r) for r in range(n_rounds)]

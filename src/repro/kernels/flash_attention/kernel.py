@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: FlashAttention-2-style causal GQA attention with an
+optional sliding window.
+
+Grid: (batch*q_heads, T // BLOCK_Q, S // BLOCK_K), kv-tile innermost. The
+fp32 accumulator, running max m and denominator l live in VMEM scratch and
+persist across the kv dimension (the out block index ignores it); the
+output is written on the last kv step. Tiles are (BLOCK_Q x hd) and
+(BLOCK_K x hd) — hd in {64, 128, 256} is lane-aligned, BLOCK_Q/BLOCK_K are
+sublane multiples. GQA is handled by indexing the kv head as qh // group
+in the BlockSpec index maps, so no KV duplication in HBM or VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+BLOCK_Q = 256
+BLOCK_K = 256
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  causal: bool, window: int, block_q: int, block_k: int,
+                  n_k: int, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = kj * block_k
+
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window > 0:
+        live = jnp.logical_and(
+            live, k_start + block_k - 1 > q_start - window
+        )
+
+    @pl.when(live)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window > 0:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                             # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,   # (B, T, nq, hd)
+    k: jnp.ndarray,   # (B, S, nkv, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = BLOCK_Q,
+    block_k: int = BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, T, nq, hd = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    group = nq // nkv
+    bq = min(block_q, T)
+    bk = min(block_k, S)
+    assert T % bq == 0 and S % bk == 0, "seq dims must tile"
+    scale = hd ** -0.5
+
+    # (B, H, T, hd) layout for clean 2D tiles per (batch, head)
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * nq, T, hd)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * nkv, S, hd)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * nkv, S, hd)
+
+    n_k = S // bk
+    grid = (B * nq, T // bq, n_k)
+
+    def kv_index(h, i, j):
+        # map flat q-head index -> flat kv-head index (GQA)
+        b = h // nq
+        qh_ = h % nq
+        return (b * nkv + qh_ // group, j, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, causal=causal, window=window, block_q=bq,
+            block_k=bk, n_k=n_k, scale=scale,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, hd), kv_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * nq, T, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),   # acc
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # denominator l
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return jnp.moveaxis(out.reshape(B, nq, T, hd), 1, 2)

@@ -1,0 +1,4 @@
+"""Jit'd public wrapper for the flash-attention kernel."""
+from repro.kernels.flash_attention.kernel import flash_attention
+
+__all__ = ["flash_attention"]

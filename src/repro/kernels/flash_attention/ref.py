@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive full softmax)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B, T, nq, hd), k/v (B, S, nkv, hd) -> (B, T, nq, hd).
+
+    Naive O(T*S) reference with GQA head grouping.
+    """
+    B, T, nq, hd = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    group = nq // nkv
+    qf = q.astype(jnp.float32).reshape(B, T, nkv, group, hd) * hd ** -0.5
+    s = jnp.einsum("btngh,bsnh->bngts", qf, k.astype(jnp.float32))
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bngts,bsnh->btngh", p, v.astype(jnp.float32))
+    return o.reshape(B, T, nq, hd).astype(q.dtype)

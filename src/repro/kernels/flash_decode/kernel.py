@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a (ring)
+KV cache.
+
+Decode is the memory-roofline step: per token, the whole live cache
+streams HBM->VMEM once. This kernel tiles the cache sequence dim,
+keeps the online-softmax state (acc, m, l) in VMEM scratch across the
+sequence grid dim, and evaluates the ring-buffer validity mask in
+registers — one pass, no fp32 cache copy, no score materialization
+beyond a (group x BLOCK_S) tile.
+
+Grid: (batch*n_kv, S // BLOCK_S), sequence innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+BLOCK_S = 512
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, block_s: int, n_s: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (group, hd)
+    k = k_ref[0].astype(jnp.float32)              # (bs, hd)
+    v = v_ref[0].astype(jnp.float32)
+    hd = q.shape[-1]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * hd ** -0.5
+    # ring validity: slot index <= pos OR the ring has wrapped
+    pos = pos_ref[0]
+    S_total = n_s * block_s
+    idx = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    live = (idx <= pos) | (pos >= S_total)
+    s = jnp.where(live, s, NEG_INF)
+
+    m_new = jnp.maximum(m_ref[...], jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_ref[...] - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(
+    q: jnp.ndarray,        # (B, 1, nq, hd)
+    k_cache: jnp.ndarray,  # (B, S, nkv, hd)
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,      # scalar int32: tokens written so far - 1
+    *,
+    block_s: int = BLOCK_S,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, _, nq, hd = q.shape
+    S, nkv = k_cache.shape[1], k_cache.shape[2]
+    group = nq // nkv
+    bs = min(block_s, S)
+    assert S % bs == 0
+    n_s = S // bs
+
+    qg = q.reshape(B, nkv, group, hd).reshape(B * nkv, group, hd)
+    kh = jnp.moveaxis(k_cache, 2, 1).reshape(B * nkv, S, hd)
+    vh = jnp.moveaxis(v_cache, 2, 1).reshape(B * nkv, S, hd)
+    pos_arr = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32), (B * nkv,)
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_s=bs, n_s=n_s),
+        grid=(B * nkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, s: (h,)),
+            pl.BlockSpec((1, group, hd), lambda h, s: (h, 0, 0)),
+            pl.BlockSpec((1, bs, hd), lambda h, s: (h, s, 0)),
+            pl.BlockSpec((1, bs, hd), lambda h, s: (h, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, hd), lambda h, s: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * nkv, group, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, hd), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qg, kh, vh)
+    return out.reshape(B, 1, nq, hd)

@@ -1,0 +1,4 @@
+"""Jit'd public wrapper for the flash-decode kernel."""
+from repro.kernels.flash_decode.kernel import flash_decode
+
+__all__ = ["flash_decode"]

@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the flash-decode kernel (= the model's
+decode_attention, re-exported so the kernel's contract is explicit)."""
+from repro.models.layers.attention import decode_attention as decode_attention_ref
+
+__all__ = ["decode_attention_ref"]

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: streaming weighted-sum fusion.
+
+The TPU adaptation of the paper's Numba single-node path. The (n, P)
+update matrix streams through VMEM in (CLIENT_TILE x PARAM_TILE) blocks;
+each parameter tile's fp32 accumulator lives in the output VMEM block and
+is revisited across the client-tile grid dimension — one HBM pass over the
+updates, one HBM write of the result, MXU-shaped (the inner op is a
+(1, TN) x (TN, TP) matmul).
+
+Grid: (P // PARAM_TILE, n // CLIENT_TILE); the output block index ignores
+the client dim, so Pallas keeps it resident in VMEM across that dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# lane-aligned defaults: PARAM_TILE a multiple of 128 (lanes), CLIENT_TILE
+# a multiple of 8 (sublanes). VMEM budget @ defaults:
+# 256*2048*4 B (updates tile) + 2048*4 (acc) ~= 2.1 MiB.
+PARAM_TILE = 2048
+CLIENT_TILE = 256
+
+
+def _wsum_kernel(w_ref, u_ref, out_ref):
+    """w: (1, TN) fp32; u: (TN, TP); out: (1, TP) fp32 accumulator."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[...].astype(jnp.float32)
+    w = w_ref[...]
+    out_ref[...] += jnp.dot(w, u, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("param_tile", "client_tile", "interpret")
+)
+def weighted_sum_pallas(
+    updates: jnp.ndarray,        # (n, P) any float dtype
+    weights: jnp.ndarray,        # (n,) fp32
+    *,
+    param_tile: int = PARAM_TILE,
+    client_tile: int = CLIENT_TILE,
+    interpret: bool = True,      # CPU container: interpret mode
+) -> jnp.ndarray:
+    n, P = updates.shape
+    tn = min(client_tile, n)
+    tp = min(param_tile, P)
+    # pad to tile multiples (weights pad with 0 => no contribution)
+    n_pad = (-n) % tn
+    p_pad = (-P) % tp
+    if n_pad or p_pad:
+        updates = jnp.pad(updates, ((0, n_pad), (0, p_pad)))
+        weights = jnp.pad(weights, (0, n_pad))
+    N, PP = updates.shape
+    w2 = weights.astype(jnp.float32).reshape(1, N)
+
+    out = pl.pallas_call(
+        _wsum_kernel,
+        grid=(PP // tp, N // tn),
+        in_specs=[
+            pl.BlockSpec((1, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((tn, tp), lambda i, j: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((1, tp), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, PP), jnp.float32),
+        interpret=interpret,
+    )(w2, updates)
+    return out[0, :P]

@@ -1,0 +1,25 @@
+"""Jit'd public wrappers for the fused-fusion kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fusion.base import EPS
+from repro.kernels.fused_fusion.kernel import weighted_sum_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fedavg_fused(updates: jnp.ndarray, weights: jnp.ndarray,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Paper Eq. (1) with the streaming Pallas weighted-sum."""
+    wsum = weighted_sum_pallas(updates, weights, interpret=interpret)
+    return wsum / (jnp.sum(weights.astype(jnp.float32)) + EPS)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def iteravg_fused(updates: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    n = updates.shape[0]
+    w = jnp.ones((n,), jnp.float32)
+    return weighted_sum_pallas(updates, w, interpret=interpret) / (n + EPS)

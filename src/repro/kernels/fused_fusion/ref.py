@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused weighted-sum fusion kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weighted_sum_ref(updates: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """updates (n, P), weights (n,) -> (P,) fp32 weighted sum."""
+    return jnp.einsum(
+        "np,n->p", updates.astype(jnp.float32), weights.astype(jnp.float32)
+    )
+
+
+def fedavg_ref(updates: jnp.ndarray, weights: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    """The paper's Eq. (1)."""
+    w = weights.astype(jnp.float32)
+    return weighted_sum_ref(updates, weights) / (jnp.sum(w) + eps)

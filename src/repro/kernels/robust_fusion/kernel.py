@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: tiled coordinate-wise median / trimmed mean.
+
+Robust fusions need every client's value per coordinate, so the tiling is
+columnar: each grid step loads a (n x PARAM_TILE) strip into VMEM, sorts
+along the client axis in-register, and emits the statistic for that strip.
+One HBM pass; n is bounded by VMEM (n * PARAM_TILE * 4 bytes <= ~8 MiB for
+the default tile), which is exactly the VMEM_RESIDENT workload class —
+larger n goes through the distributed engine's all-to-all path instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PARAM_TILE = 1024
+
+
+def _trimmed_kernel(u_ref, out_ref, *, trim: int):
+    u = u_ref[...].astype(jnp.float32)          # (n, TP)
+    n = u.shape[0]
+    s = jnp.sort(u, axis=0)
+    if trim > 0:
+        s = jax.lax.slice_in_dim(s, trim, n - trim, axis=0)
+    out_ref[...] = jnp.mean(s, axis=0, keepdims=True)
+
+
+def _exact_median_kernel(u_ref, out_ref):
+    u = u_ref[...].astype(jnp.float32)
+    n = u.shape[0]
+    s = jnp.sort(u, axis=0)
+    mid = n // 2
+    if n % 2 == 1:
+        med = s[mid]
+    else:
+        med = 0.5 * (s[mid - 1] + s[mid])
+    out_ref[...] = med[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("param_tile", "interpret"))
+def coordmedian_pallas(updates: jnp.ndarray, *, param_tile: int = PARAM_TILE,
+                       interpret: bool = True) -> jnp.ndarray:
+    n, P = updates.shape
+    tp = min(param_tile, P)
+    p_pad = (-P) % tp
+    if p_pad:
+        updates = jnp.pad(updates, ((0, 0), (0, p_pad)))
+    PP = updates.shape[1]
+    out = pl.pallas_call(
+        _exact_median_kernel,
+        grid=(PP // tp,),
+        in_specs=[pl.BlockSpec((n, tp), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, tp), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, PP), jnp.float32),
+        interpret=interpret,
+    )(updates)
+    return out[0, :P]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("trim", "param_tile", "interpret")
+)
+def trimmedmean_pallas(updates: jnp.ndarray, trim: int,
+                       *, param_tile: int = PARAM_TILE,
+                       interpret: bool = True) -> jnp.ndarray:
+    n, P = updates.shape
+    tp = min(param_tile, P)
+    p_pad = (-P) % tp
+    if p_pad:
+        updates = jnp.pad(updates, ((0, 0), (0, p_pad)))
+    PP = updates.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_trimmed_kernel, trim=trim),
+        grid=(PP // tp,),
+        in_specs=[pl.BlockSpec((n, tp), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, tp), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, PP), jnp.float32),
+        interpret=interpret,
+    )(updates)
+    return out[0, :P]

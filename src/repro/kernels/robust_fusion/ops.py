@@ -1,0 +1,7 @@
+"""Jit'd public wrappers for the robust-fusion kernels."""
+from repro.kernels.robust_fusion.kernel import (
+    coordmedian_pallas,
+    trimmedmean_pallas,
+)
+
+__all__ = ["coordmedian_pallas", "trimmedmean_pallas"]

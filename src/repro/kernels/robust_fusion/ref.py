@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the robust (coordinate-wise) fusion kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def coordmedian_ref(updates: jnp.ndarray) -> jnp.ndarray:
+    """(n, P) -> (P,) per-coordinate median (fp32)."""
+    return jnp.median(updates.astype(jnp.float32), axis=0)
+
+
+def trimmedmean_ref(updates: jnp.ndarray, trim: int) -> jnp.ndarray:
+    """(n, P) -> (P,) mean of each coordinate with the ``trim`` smallest
+    and largest values dropped."""
+    n = updates.shape[0]
+    s = jnp.sort(updates.astype(jnp.float32), axis=0)
+    if trim > 0:
+        s = s[trim: n - trim]
+    return jnp.mean(s, axis=0)

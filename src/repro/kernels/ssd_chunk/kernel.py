@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: SSD (Mamba2) chunked scan, one (batch, head) lane.
+
+The SSM hot spot: within a chunk the recurrence collapses to two
+MXU-shaped matmuls (the (L x L) decay-masked C·B tile and the state
+read/write einsums); across chunks the (N x P) state carries in VMEM
+scratch. Grid = (batch*heads, n_chunks) with chunks innermost — scratch
+persists across the chunk dimension and re-initializes at chunk 0, so
+the whole per-head scan runs without touching HBM for the state.
+
+VMEM @ defaults (L=256, N=64, P=64, fp32): inputs ~196 KiB + (L x L)
+decay tile 256 KiB + state 16 KiB — comfortably resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(lam_ref, b_ref, c_ref, x_ref, y_ref, h_ref):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    lam = lam_ref[0, 0].astype(jnp.float32)       # (L,)
+    B_ = b_ref[0, 0].astype(jnp.float32)          # (L, N)
+    C_ = c_ref[0, 0].astype(jnp.float32)          # (L, N)
+    x_ = x_ref[0, 0].astype(jnp.float32)          # (L, P)
+    L = lam.shape[0]
+
+    cum = jnp.cumsum(lam)
+    cb = jnp.dot(C_, B_.T, preferred_element_type=jnp.float32)  # (L, L)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    )
+    w = jnp.where(causal, cb * decay, 0.0)
+    y = jnp.dot(w, x_, preferred_element_type=jnp.float32)      # (L, P)
+    # inter-chunk: read the carried state
+    y = y + jnp.dot(
+        C_ * jnp.exp(cum)[:, None], h_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+    # state update to chunk end
+    dte = jnp.exp(cum[-1] - cum)
+    S = jnp.dot((B_ * dte[:, None]).T, x_,
+                preferred_element_type=jnp.float32)             # (N, P)
+    h_ref[...] = h_ref[...] * jnp.exp(cum[-1]) + S
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(lam, Bm, Cm, xdt, *, interpret: bool = True):
+    """lam (G, nc, L); Bm/Cm (G, nc, L, N); xdt (G, nc, L, P) where
+    G = batch*heads lanes. Returns y (G, nc, L, P)."""
+    G, nc, L = lam.shape
+    N = Bm.shape[-1]
+    P = xdt.shape[-1]
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(G, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, P), lambda g, c: (g, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L, P), lambda g, c: (g, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, nc, L, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(lam, Bm, Cm, xdt)

@@ -1,0 +1,34 @@
+"""Jit'd wrapper: full (B, T, H, ...) SSD via the per-lane Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(lam, Bm, Cm, xdt, *, chunk: int = 256, interpret: bool = True):
+    """lam (B,T,H); Bm/Cm (B,T,N); xdt (B,T,H,P) -> y (B,T,H,P) fp32.
+
+    Mirrors models.layers.mamba2 semantics (B/C shared across heads)."""
+    B, T, H = lam.shape
+    N = Bm.shape[-1]
+    P = xdt.shape[-1]
+    L = min(chunk, T)
+    if T % L:
+        L = T
+    nc = T // L
+    # lanes = (B, H): broadcast B/C across heads
+    lam_l = lam.transpose(0, 2, 1).reshape(B * H, nc, L)
+    B_l = jnp.broadcast_to(
+        Bm[:, None], (B, H, T, N)
+    ).reshape(B * H, nc, L, N)
+    C_l = jnp.broadcast_to(
+        Cm[:, None], (B, H, T, N)
+    ).reshape(B * H, nc, L, N)
+    x_l = xdt.transpose(0, 2, 1, 3).reshape(B * H, nc, L, P)
+    y = ssd_chunk_pallas(lam_l, B_l, C_l, x_l, interpret=interpret)
+    return y.reshape(B, H, T, P).transpose(0, 2, 1, 3)

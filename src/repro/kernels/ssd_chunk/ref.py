@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the SSD (Mamba2) chunk kernel.
+
+One head's chunked scan: inputs per chunk c of length L —
+  lam (L,)    log-decay dt*A (negative)
+  B   (L, N)  input projection
+  C   (L, N)  output projection
+  xdt (L, P)  dt-scaled inputs
+carrying state h (N, P). Mirrors models/layers/mamba2.chunk_step (which
+tests assert against the full model)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(lam, Bm, Cm, xdt, h0):
+    """lam (nc, L); Bm/Cm (nc, L, N); xdt (nc, L, P); h0 (N, P).
+    Returns (y (nc, L, P), h_final (N, P))."""
+    nc, L = lam.shape
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def step(h, inp):
+        lam_, B_, C_, x_ = inp
+        cum = jnp.cumsum(lam_)                        # (L,)
+        cb = jnp.einsum("tm,sm->ts", C_, B_)          # (L, L)
+        decay = jnp.exp(cum[:, None] - cum[None, :])
+        w = cb * jnp.where(causal, decay, 0.0)
+        y = jnp.einsum("ts,sp->tp", w, x_)
+        y = y + jnp.einsum("tm,mp->tp", C_ * jnp.exp(cum)[:, None], h)
+        dte = jnp.exp(cum[-1] - cum)                  # (L,)
+        S = jnp.einsum("l,lm,lp->mp", dte, B_, x_)
+        h_new = h * jnp.exp(cum[-1]) + S
+        return h_new, y
+
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (lam.astype(jnp.float32), Bm.astype(jnp.float32),
+                          Cm.astype(jnp.float32), xdt.astype(jnp.float32)))
+    return ys, h

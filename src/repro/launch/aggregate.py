@@ -1,0 +1,69 @@
+"""Standalone aggregation driver over the paper's Table-I CNN workloads.
+
+Simulates n clients writing updates of a chosen model size to the
+UpdateStore, runs the monitor, and fuses with the adaptive service —
+the paper's end-to-end flow (Fig. 12/13) in one command.
+
+  PYTHONPATH=src python -m repro.launch.aggregate --model CNN4.6 \
+      --clients 64 --fusion fedavg
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import CNN_SUITE
+from repro.core import AggregationService, UpdateStore, Workload, classify
+from repro.utils.mem import bytes_to_human
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="CNN4.6", choices=sorted(CNN_SUITE))
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--fusion", default="fedavg")
+    ap.add_argument("--local-strategy", default="jnp")
+    ap.add_argument("--threshold-frac", type=float, default=0.8)
+    ap.add_argument("--timeout", type=float, default=5.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    spec = CNN_SUITE[args.model]
+    n_params = spec.num_params
+    rng = np.random.default_rng(args.seed)
+    store = UpdateStore()
+    svc = AggregationService(
+        fusion=args.fusion, store=store,
+        local_strategy=args.local_strategy,
+        threshold_frac=args.threshold_frac, monitor_timeout=args.timeout,
+    )
+    load = Workload(update_bytes=spec.bytes_fp32, n_clients=args.clients)
+    print(f"[aggregate] model={args.model} w_s={bytes_to_human(spec.bytes_fp32)} "
+          f"n={args.clients} S={bytes_to_human(load.total_bytes)} "
+          f"class={classify(load).value}")
+
+    t0 = time.time()
+    write_lat = []
+    for i in range(args.clients):
+        u = rng.normal(size=(n_params,)).astype(np.float32)
+        write_lat.append(store.write(f"client{i:05d}", u,
+                                     weight=float(rng.integers(1, 100))))
+    print(f"[aggregate] {args.clients} updates written "
+          f"(modeled avg write {np.mean(write_lat)*1e3:.1f} ms, "
+          f"wall {time.time()-t0:.2f}s)")
+
+    fused, report = svc.aggregate(from_store=True,
+                                  expected_clients=args.clients)
+    print(f"[aggregate] engine={report.plan.engine} "
+          f"class={report.plan.workload_class.value} "
+          f"monitor_ready={report.monitor.ready} "
+          f"fuse={report.fuse_seconds:.3f}s "
+          f"est={report.plan.est_seconds:.4f}s(model) "
+          f"route_next_to_store={report.route_next_to_store}")
+    print(f"[aggregate] fused[:5]={np.asarray(fused[:5])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+combination lowers, compiles, and fits — and extract the roofline terms.
+
+For each combo this script:
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+  2. constructs the right step (train_step / prefill / serve decode_step /
+     aggregate_step) from ShapeDtypeStruct stand-ins (no allocation),
+  3. ``jax.jit(fn, in_shardings=...).lower(...).compile()``,
+  4. records ``memory_analysis()`` (fits per chip?), ``cost_analysis()``
+     (per-device FLOPs / bytes), and collective traffic parsed from the
+     optimized HLO,
+  5. writes results/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+  python -m repro.launch.dryrun --arch dbrx-132b --shape agg_64  # paper step
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ARCHITECTURES,
+    INPUT_SHAPES,
+    applicable_shapes,
+    get_config,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.runtime_flags import unrolled_layers
+from repro.launch.steps import (
+    decode_specs,
+    make_aggregate_step,
+    make_decode_step,
+    make_optimizer,
+    make_prefill_step,
+    make_train_step,
+    prefill_specs,
+    train_specs,
+)
+from repro.utils.hlo import analyze_collectives
+from repro.utils.mem import TPU_V5E, bytes_to_human
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"
+)
+
+
+# gradient-accumulation factors for the biggest training combos (§Perf):
+# activation transients scale ~1/m at the cost of m x weight all-gathers
+MICROBATCHES = {
+    ("llava-next-34b", "train_4k"): 4,
+    ("dbrx-132b", "train_4k"): 4,
+}
+
+
+def _jit_for(arch: str, shape_name: str, mesh, agg_clients: int = 64):
+    """Returns (jitted fn, lower args, metadata)."""
+    cfg = get_config(arch)
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "params": cfg.num_params(),
+        "active_params": cfg.num_active_params(),
+    }
+    if shape_name.startswith("agg_"):
+        n_clients = int(shape_name.split("_")[1])
+        spec_fn = make_aggregate_step(mesh, n_clients)
+        step, args, in_sh, out_sh = spec_fn(cfg)
+        fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        meta["kind"] = "aggregate"
+        return fn, args, meta
+
+    shape = INPUT_SHAPES[shape_name]
+    meta["kind"] = shape.kind
+    if shape.kind == "train":
+        opt = make_optimizer(cfg)
+        model, args, shardings = train_specs(cfg, shape, mesh, opt)
+        mb = MICROBATCHES.get((arch, shape_name), 1)
+        meta["microbatches"] = mb
+        step = make_train_step(model, opt, mesh, microbatches=mb)
+        fn = jax.jit(step, in_shardings=shardings, donate_argnums=(0, 1))
+        return fn, args, meta
+    if shape.kind == "prefill":
+        model, args, shardings = prefill_specs(cfg, shape, mesh)
+        step = make_prefill_step(model, mesh)
+        fn = jax.jit(step, in_shardings=shardings)
+        return fn, args, meta
+    # decode
+    force_local = shape_name == "long_500k"
+    model, args, shardings, out_sh = decode_specs(
+        cfg, shape, mesh, force_local=force_local
+    )
+    step = make_decode_step(
+        model, mesh, batch=shape.global_batch, force_local=force_local
+    )
+    fn = jax.jit(step, in_shardings=shardings, out_shardings=out_sh,
+                 donate_argnums=(1,))
+    return fn, args, meta
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: str = RESULTS_DIR, force: bool = False,
+            verbose: bool = True, unroll: bool = False) -> dict:
+    """``unroll=True`` unrolls layer stacks so cost_analysis counts every
+    layer (XLA reports while-loop bodies once). Inner tile scans (flash
+    attention, SSD chunks, the CE chunk loop) remain loops — their FLOPs
+    are reconstructed analytically in the roofline (benchmarks/roofline)."""
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_name}.json"
+    )
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_chips": n_chips, "ok": False, "unrolled_layers": unroll,
+    }
+    import contextlib
+    ctx = unrolled_layers() if unroll else contextlib.nullcontext()
+    try:
+        fn, args, meta = _jit_for(arch, shape_name, mesh)
+        record.update(meta)
+        with mesh, ctx:
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = analyze_collectives(hlo)
+
+        record.update({
+            "ok": True,
+            "lower_seconds": round(t_lower, 2),
+            "compile_seconds": round(t_compile, 2),
+            "per_device": {
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+                "flops": ca.get("flops"),
+                "bytes_accessed": ca.get("bytes accessed"),
+            },
+            "collectives": {
+                "counts": coll.counts,
+                "bytes_moved": coll.bytes_moved,
+                "buffer_bytes": coll.buffer_bytes,
+                "total_bytes": coll.total_bytes,
+            },
+        })
+        arg_b = record["per_device"]["argument_bytes"] or 0
+        tmp_b = record["per_device"]["temp_bytes"] or 0
+        peak = arg_b + tmp_b
+        record["per_device"]["peak_bytes_est"] = peak
+        record["fits_hbm"] = bool(peak <= TPU_V5E.hbm_bytes)
+        if verbose:
+            print(
+                f"[dryrun] {arch:18s} {shape_name:12s} {mesh_name:10s} OK  "
+                f"args={bytes_to_human(arg_b)} temp={bytes_to_human(tmp_b)} "
+                f"flops/dev={record['per_device']['flops'] or 0:.3e} "
+                f"coll={bytes_to_human(coll.total_bytes)} "
+                f"compile={t_compile:.1f}s fits_hbm={record['fits_hbm']}"
+            )
+    except Exception as e:  # noqa: BLE001 — record the failure, don't die
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[dryrun] {arch} {shape_name} {mesh_name} FAIL: "
+                  f"{record['error']}")
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out-dir", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for arch, cfg in ARCHITECTURES.items():
+            for shape in applicable_shapes(cfg):
+                combos.append((arch, shape.name))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        combos = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for arch, shape in combos:
+        rec = run_one(arch, shape, args.multi_pod, args.out_dir, args.force)
+        n_fail += 0 if rec.get("ok") else 1
+    print(f"[dryrun] done: {len(combos) - n_fail}/{len(combos)} OK")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Batched serving driver: prefill a batch of prompts, then decode with
+per-layer KV/state caches (CPU-runnable on reduced configs).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+def generate(model, params, prompt: jnp.ndarray, n_new: int,
+             cache_len: int, temperature: float = 0.0, seed: int = 0):
+    """Greedy/temperature decode. prompt: (B, T0) int32."""
+    B, T0 = prompt.shape
+    cache = model.init_cache(B, cache_len)
+    step = jax.jit(
+        lambda p, c, t, pos: model.decode_step(p, c, t, pos)
+    )
+    rng = jax.random.PRNGKey(seed)
+    toks = [prompt]
+    logits = None
+    # teacher-forced prefill through the decode path (cache warmup)
+    for t in range(T0):
+        cache, logits = step(params, cache, prompt[:, t: t + 1],
+                             jnp.int32(t))
+    cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out = [cur]
+    for i in range(n_new - 1):
+        cache, logits = step(params, cache, cur, jnp.int32(T0 + i))
+        if temperature > 0:
+            rng, k = jax.random.split(rng)
+            cur = jax.random.categorical(
+                k, logits / temperature, axis=-1
+            )[:, None].astype(jnp.int32)
+        else:
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(cur)
+    return jnp.concatenate(toks + out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len)),
+        jnp.int32,
+    )
+    t0 = time.time()
+    out = generate(model, params, prompt, args.tokens, args.cache_len,
+                   args.temperature)
+    dt = time.time() - t0
+    total_new = args.batch * args.tokens
+    print(f"[serve] arch={cfg.arch_id} batch={args.batch} "
+          f"new_tokens={args.tokens} -> {total_new/dt:.1f} tok/s (CPU)")
+    print("[serve] sample token ids:", np.asarray(out[0, :24]).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,211 @@
+"""Parameter/input/cache sharding assignment for the production mesh.
+
+Weights get 2-D shardings ("model" = tensor/expert parallel, the data axes
+= FSDP): a rule engine over (path, shape) with name-aware special cases
+and a divisibility-checked automatic fallback. Stacked layer dims (the
+scan axis) are never sharded — slicing a sharded stack inside ``scan``
+would reshard every iteration.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axis_names, n_data_shards
+
+PyTree = Any
+
+# params under these roots are stacked along leading scan dims
+_STACK_LEAD = {
+    "layers": 1, "enc_layers": 1, "dec_layers": 1,
+    "mamba": 1, "slstm": 1, "mlstm": 2,
+}
+REPLICATE_BELOW = 65536  # small leaves are replicated
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+        for p in path
+    )
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    names = mesh.axis_names
+    model_n = mesh.shape.get("model", 1)
+    data_axes = data_axis_names(mesh)
+    data_n = n_data_shards(mesh)
+    size = int(np.prod(shape)) if shape else 1
+
+    if size < REPLICATE_BELOW or not shape:
+        return P()
+
+    root = path.split("/")[0]
+    lead = _STACK_LEAD.get(root, 0)
+    last = path.split("/")[-1]
+
+    # -- special cases -------------------------------------------------------
+    def _fits(dim: int, axis: int) -> bool:
+        return dim % axis == 0 and dim >= axis
+
+    if last == "embed":              # (vocab, d): vocab-sharded table
+        if "model" in names and _fits(shape[0], model_n):
+            return P("model", None)
+        if "model" in names and _fits(shape[1], model_n):
+            return P(None, "model")  # odd vocab (whisper): shard d instead
+        return P(None, None)
+    if last == "head":               # (d, vocab): logits vocab-sharded
+        if "model" in names and _fits(shape[1], model_n):
+            return P(None, "model")
+        if "model" in names and _fits(shape[0], model_n):
+            return P("model", None)
+        return P(None, None)
+
+    spec: list = [None] * len(shape)
+    free = [i for i in range(lead, len(shape))]
+
+    def assign(axis_name: str, axis_size: int, prefer: Optional[int],
+               from_end: bool):
+        if axis_name not in names or axis_size <= 1:
+            return
+        cands = []
+        if prefer is not None and prefer in free and \
+                shape[prefer] % axis_size == 0 and shape[prefer] >= axis_size:
+            cands = [prefer]
+        else:
+            idxs = list(reversed(free)) if from_end else list(free)
+            cands = [
+                i for i in idxs
+                if shape[i] % axis_size == 0 and shape[i] >= axis_size
+            ]
+        if cands:
+            i = cands[0]
+            spec[i] = axis_name
+            free.remove(i)
+
+    # attention projections (L, d, n_heads, hd): prefer heads for "model"
+    prefer_model = None
+    if re.search(r"(attn|xattn)/w[qkv]$", path) and len(shape) == 2 + lead:
+        prefer_model = lead + 1          # the heads dim
+    if re.search(r"(attn|xattn)/w[qkv]$", path) and len(shape) == 3 + lead:
+        prefer_model = lead + 1
+    if re.search(r"(attn|xattn)/wo$", path) and len(shape) == 3 + lead:
+        prefer_model = lead              # (nq, hd, d): heads dim
+    if "/moe/" in path and last in ("w_gate", "w_up", "w_down"):
+        prefer_model = lead              # expert dim -> expert parallelism
+
+    assign("model", model_n, prefer_model, from_end=True)
+    # FSDP over the (pod, data) product on the first remaining eligible dim
+    if len(data_axes) == 1:
+        assign(data_axes[0], data_n, None, from_end=False)
+    elif len(data_axes) == 2:
+        cands = [
+            i for i in free
+            if shape[i] % data_n == 0 and shape[i] >= data_n
+        ]
+        if cands:
+            spec[cands[0]] = data_axes
+            free.remove(cands[0])
+        else:
+            # try just the larger "data" axis
+            assign("data", mesh.shape.get("data", 1), None, from_end=False)
+    return P(*spec)
+
+
+def param_shardings(spec_tree: PyTree, mesh: Mesh,
+                    fsdp: bool = True) -> PyTree:
+    """tree of ShapeDtypeStructs -> tree of NamedShardings.
+
+    ``fsdp=False`` strips the data axes (weights shard over "model" only,
+    replicated across data): the DECODE layout — FSDP'd weights would be
+    all-gathered on every generated token, which the roofline shows
+    dominating the per-token collective term."""
+    data_axes = set(data_axis_names(mesh))
+
+    def strip(spec: P) -> P:
+        entries = []
+        for e in spec:
+            if e is None:
+                entries.append(None)
+            elif isinstance(e, (tuple, list)):
+                kept = tuple(a for a in e if a not in data_axes)
+                entries.append(
+                    kept if len(kept) > 1 else (kept[0] if kept else None)
+                )
+            else:
+                entries.append(None if e in data_axes else e)
+        return P(*entries)
+
+    def go(path, leaf):
+        spec = spec_for_param(_path_str(path), leaf.shape, mesh)
+        if not fsdp:
+            spec = strip(spec)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(go, spec_tree)
+
+
+def batch_shardings(spec_tree: PyTree, mesh: Mesh) -> PyTree:
+    """Train/prefill inputs: batch dim over the data axes."""
+    dp = data_axis_names(mesh)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    dn = n_data_shards(mesh)
+
+    def go(leaf):
+        if leaf.shape and leaf.shape[0] % dn == 0 and leaf.shape[0] >= dn:
+            return NamedSharding(
+                mesh, P(dp_spec, *([None] * (len(leaf.shape) - 1)))
+            )
+        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+
+    return jax.tree_util.tree_map(go, spec_tree)
+
+
+def cache_shardings(spec_tree: PyTree, mesh: Mesh, batch: int) -> PyTree:
+    """Decode caches: batch over the data axes when divisible, else the
+    cache sequence dim (context parallelism); the last divisible feature
+    dim (kv heads, else head_dim; SSM channels/state) over model — the
+    32k caches are hundreds of GB and MUST shard on both mesh axes."""
+    dp = data_axis_names(mesh)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    dn = n_data_shards(mesh)
+    model_n = mesh.shape.get("model", 1)
+    batch_ok = batch % dn == 0 and batch >= dn
+
+    def go(path, leaf):
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        used_data = False
+        if shape and shape[0] == batch and batch_ok:
+            spec[0] = dp_spec
+            used_data = True
+        # attention KV ring buffers: (B, S, n_kv, hd) with a long S dim.
+        # Context-parallel layout: S over model (+ data when batch isn't
+        # shardable). Sharding n_kv/hd instead forces an SPMD reshard
+        # against the head-sharded q — XLA replicates the cache per layer.
+        is_attn_kv = len(shape) == 4 and shape[1] >= 2048
+        if is_attn_kv:
+            axes = [] if used_data else list(dp)
+            axes.append("model")
+            total = int(np.prod([mesh.shape[a] for a in axes]))
+            if shape[1] % total == 0 and shape[1] >= total:
+                spec[1] = tuple(axes) if len(axes) > 1 else axes[0]
+            elif shape[1] % model_n == 0 and shape[1] >= model_n:
+                spec[1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if not used_data and len(shape) >= 2:
+            if shape[1] % dn == 0 and shape[1] >= dn:
+                spec[1] = dp_spec  # context parallelism
+        # SSM/recurrent states: model axis on the last divisible feature dim
+        for i in range(len(shape) - 1, 0, -1):
+            if spec[i] is None and shape[i] % model_n == 0 \
+                    and shape[i] >= model_n:
+                spec[i] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(go, spec_tree)

@@ -1,0 +1,5 @@
+"""Model stack: the 10 assigned architectures as composable JAX modules."""
+from repro.models.base import Model
+from repro.models.registry import build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,110 @@
+"""Shared model machinery: embeddings, LM head, losses, the Model facade."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.runtime_flags import maybe_scan
+from repro.models.sharding import shard
+
+PyTree = Any
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * d ** -0.5).astype(dtype)
+
+
+def embed_tokens(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    h = embed[tokens]
+    return shard(h, "batch", None, None)
+
+
+def lm_logits(h: jax.Array, embed: jax.Array,
+              head: Optional[jax.Array]) -> jax.Array:
+    """h: (B, T, d) -> (B, T, vocab). Tied (embed.T) or separate head."""
+    if head is not None:
+        logits = jnp.einsum("btd,dv->btv", h, head)
+    else:
+        logits = jnp.einsum("btd,vd->btv", h, embed)
+    return shard(logits.astype(jnp.float32), "batch", None, "vocab")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy in fp32. logits (B,T,V), labels (B,T)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+LOSS_CHUNK = 256
+
+
+def next_token_loss(h: jax.Array, embed: jax.Array,
+                    head: Optional[jax.Array], labels: jax.Array,
+                    chunk: int = LOSS_CHUNK) -> jax.Array:
+    """Next-token CE without materializing full (B, T, V) logits.
+
+    Scans sequence chunks; each chunk's logits are built, consumed and
+    (via remat) rebuilt in backward — peak logits memory is
+    (B, chunk, V) instead of (B, T, V). Mandatory for the 152k–262k
+    vocabularies at 4k–32k sequence lengths.
+    """
+    B, T, d = h.shape
+    # shift: position t predicts labels[t+1]; last position is masked
+    labels_shift = jnp.concatenate(
+        [labels[:, 1:], jnp.zeros((B, 1), labels.dtype)], axis=1
+    )
+    mask = jnp.concatenate(
+        [jnp.ones((B, T - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)],
+        axis=1,
+    )
+    if T % chunk:
+        chunk = T
+    nc = T // chunk
+    hc = jnp.moveaxis(h.reshape(B, nc, chunk, d), 1, 0)
+    yc = jnp.moveaxis(labels_shift.reshape(B, nc, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, nc, chunk), 1, 0)
+
+    def body(carry, inp):
+        s, n = carry
+        h_, y_, m_ = inp
+        logits = lm_logits(h_, embed, head)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * m_
+        return (s + jnp.sum(nll), n + jnp.sum(m_)), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (s, n), _ = maybe_scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, yc, mc),
+    )
+    return s / jnp.maximum(n, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Functional model facade — what the launcher/dry-run/FL stack uses.
+
+    init(rng) -> params
+    loss(params, batch) -> (scalar loss, metrics dict)         [train]
+    prefill(params, batch) -> last-position logits (B, vocab)  [prefill]
+    init_cache(batch, length, dtype, force_local) -> cache     [decode]
+    decode_step(params, cache, token, pos) -> (cache, logits)  [decode]
+    """
+
+    config: ModelConfig
+    init: Callable[[jax.Array], PyTree]
+    loss: Callable[[PyTree, Dict[str, jax.Array]], Tuple[jax.Array, Dict]]
+    prefill: Callable[[PyTree, Dict[str, jax.Array]], jax.Array]
+    init_cache: Callable[..., List]
+    decode_step: Callable[..., Tuple[List, jax.Array]]

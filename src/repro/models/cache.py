@@ -1,0 +1,62 @@
+"""Decode-time caches.
+
+Attention layers hold (k, v) ring buffers — full-length for global layers,
+window-length for sliding-window layers (this is what makes gemma3-style
+long-context decode sub-quadratic in memory). SSM layers hold O(1) states.
+
+Caches are per-layer python lists (decode unrolls layers), so layer types
+and cache shapes may differ freely within one model.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import shard
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array  # (B, S_l, n_kv, hd) — keys stored pre-rotated (RoPE applied)
+    v: jax.Array  # (B, S_l, n_kv, hd)
+
+
+def init_attn_cache(batch: int, length: int, n_kv: int, head_dim: int,
+                    dtype) -> AttnCache:
+    z = jnp.zeros((batch, length, n_kv, head_dim), dtype)
+    return AttnCache(k=z, v=z)
+
+
+def attn_cache_spec(batch: int, length: int, n_kv: int, head_dim: int,
+                    dtype) -> AttnCache:
+    s = jax.ShapeDtypeStruct((batch, length, n_kv, head_dim), dtype)
+    return AttnCache(k=s, v=s)
+
+
+def update_attn_cache(cache: AttnCache, k_new: jax.Array, v_new: jax.Array,
+                      pos: jax.Array) -> AttnCache:
+    """Write one token's (k, v) at ring slot ``pos % S_l``.
+
+    k_new/v_new: (B, 1, n_kv, hd); pos: scalar int32 (lockstep batch).
+    """
+    S = cache.k.shape[1]
+    slot = jnp.mod(pos, S)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+    return AttnCache(k=shard_cache(k), v=shard_cache(v))
+
+
+def shard_cache(x: jax.Array) -> jax.Array:
+    """Cache layout: batch over data when possible, else ctx (sequence)."""
+    return shard(x, "batch", "ctx", "kv", None)
+
+
+def cache_valid_mask(cache_len: int, pos: jax.Array, batch: int) -> jax.Array:
+    """(B, S_l) mask of live slots after ``pos+1`` tokens have been written.
+
+    Slots fill in order; once the ring wraps, every slot is live.
+    """
+    idx = jnp.arange(cache_len)
+    live = (idx <= pos) | (pos >= cache_len)
+    return jnp.broadcast_to(live[None, :], (batch, cache_len))

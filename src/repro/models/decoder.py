@@ -1,0 +1,254 @@
+"""Generic GQA decoder: dense, MoE, and VLM families.
+
+Train/prefill scan over a stacked layer pytree (compile-time O(1 layer));
+decode unrolls layers in Python so per-layer caches may have heterogeneous
+shapes (window-length ring buffers for sliding-window layers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import (
+    Model,
+    cross_entropy,
+    next_token_loss,
+    embed_tokens,
+    init_embedding,
+    lm_logits,
+)
+from repro.models.cache import (
+    AttnCache,
+    attn_cache_spec,
+    cache_valid_mask,
+    init_attn_cache,
+    update_attn_cache,
+)
+from repro.models.layers.attention import (
+    reshard_for_attention,
+    AttnParams,
+    attention_output,
+    blockwise_attention,
+    decode_attention,
+    init_attention,
+    project_qkv,
+)
+from repro.models.layers.mlp import init_mlp, mlp
+from repro.models.layers.moe import init_moe, moe
+from repro.models.layers.norms import rms_norm
+from repro.models.layers.rope import apply_rope
+from repro.models.runtime_flags import maybe_scan
+from repro.models.sharding import shard
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig) -> Dict[str, PyTree]:
+    ka, km = jax.random.split(key)
+    dtype = cfg.param_dtype
+    layer: Dict[str, PyTree] = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": init_attention(
+            ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, cfg.qkv_bias, dtype,
+        ),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.moe is not None:
+        layer["moe"] = init_moe(
+            km, cfg.d_model, cfg.d_ff, cfg.moe.n_experts, cfg.moe.n_shared,
+            dtype,
+        )
+    else:
+        layer["mlp"] = init_mlp(km, cfg.d_model, cfg.d_ff, dtype)
+    return layer
+
+
+def init_decoder(key, cfg: ModelConfig) -> Dict[str, PyTree]:
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    params: Dict[str, PyTree] = {
+        "embed": init_embedding(ke, cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_embedding(
+            kh, cfg.vocab, cfg.d_model, cfg.param_dtype
+        ).T
+    return params
+
+
+def layer_windows(cfg: ModelConfig, force_local: bool = False) -> list:
+    """Per-layer window sizes as a static python list (0 = global).
+    Implements the local:global pattern (gemma3: 5 local then 1 global)."""
+    w, ratio = cfg.attn.sliding_window, cfg.attn.local_to_global
+    if w == 0:
+        return [0] * cfg.n_layers
+    if ratio == 0 or force_local:
+        return [w] * cfg.n_layers
+    return [0 if i % (ratio + 1) == ratio else w for i in range(cfg.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill) — scan over layers
+# ---------------------------------------------------------------------------
+
+
+def _layer_forward(cfg: ModelConfig, layer: Dict[str, PyTree],
+                   h: jax.Array, positions: jax.Array,
+                   window) -> Tuple[jax.Array, jax.Array]:
+    """One decoder layer. Returns (h, moe_aux)."""
+    x = rms_norm(h, layer["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(layer["attn"], x, positions, cfg.rope_theta)
+    q, k, v = reshard_for_attention(q, k, v)
+    attn = blockwise_attention(q, k, v, causal=True, window=window)
+    h = h + attention_output(layer["attn"], attn)
+    h = shard(h, "batch", "seq", None)
+    x = rms_norm(h, layer["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = moe(layer["moe"], x, cfg.moe.top_k, cfg.moe.capacity_factor)
+    else:
+        y, aux = mlp(layer["mlp"], x), jnp.zeros((), jnp.float32)
+    h = h + y
+    h = shard(h, "batch", "seq", None)
+    return h, aux
+
+
+def decoder_hidden(
+    params: Dict[str, PyTree],
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    patch_embeds: Optional[jax.Array] = None,
+    remat: bool = True,
+) -> Tuple[jax.Array, jax.Array, int]:
+    """Embeds (+ VLM patch prefix), scans layers. Returns
+    (hidden (B, T', d), total moe aux, text_offset)."""
+    h = embed_tokens(params["embed"], tokens)
+    offset = 0
+    if patch_embeds is not None:
+        h = jnp.concatenate([patch_embeds.astype(h.dtype), h], axis=1)
+        offset = patch_embeds.shape[1]
+        h = shard(h, "batch", "seq", None)
+    B, T = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    windows = jnp.asarray(layer_windows(cfg), jnp.int32)
+
+    def body(carry, xs):
+        hh, aux = carry
+        layer, win = xs
+        hh, a = _layer_forward(cfg, layer, hh, positions, win)
+        return (hh, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, aux), _ = maybe_scan(body, (h, jnp.zeros((), jnp.float32)),
+                             (params["layers"], windows))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux, offset
+
+
+def decoder_loss(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    h, aux, offset = decoder_hidden(
+        params, cfg, batch["tokens"], batch.get("patch_embeds")
+    )
+    if offset:
+        h = h[:, offset:, :]
+    loss = next_token_loss(
+        h, params["embed"], params.get("head"), batch["labels"]
+    )
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux / cfg.n_layers
+    return loss, {"ce": loss, "moe_aux": aux}
+
+
+def decoder_prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Last-position logits (B, vocab)."""
+    h, _, _ = decoder_hidden(
+        params, cfg, batch["tokens"], batch.get("patch_embeds"), remat=False
+    )
+    return lm_logits(h[:, -1:, :], params["embed"], params.get("head"))[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# decode — unrolled layers, per-layer ring caches
+# ---------------------------------------------------------------------------
+
+
+def decoder_init_cache(cfg: ModelConfig, batch: int, length: int,
+                       dtype=None, force_local: bool = False,
+                       spec_only: bool = False) -> List[AttnCache]:
+    dtype = dtype or cfg.param_dtype
+    wins = layer_windows(cfg, force_local)
+    mk = attn_cache_spec if spec_only else init_attn_cache
+    caches = []
+    for li in range(cfg.n_layers):
+        s = min(length, wins[li]) if wins[li] > 0 else length
+        caches.append(
+            mk(batch, s, cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
+        )
+    return caches
+
+
+def _take_layer(layers: PyTree, i: int) -> PyTree:
+    return jax.tree_util.tree_map(lambda l: l[i], layers)
+
+
+def decoder_decode_step(
+    params, cfg: ModelConfig, cache: List[AttnCache], token: jax.Array,
+    pos: jax.Array, force_local: bool = False,
+) -> Tuple[List[AttnCache], jax.Array]:
+    """One decode step. token (B, 1) int32, pos scalar int32 (tokens so
+    far). Returns (new_cache, logits (B, vocab))."""
+    B = token.shape[0]
+    h = embed_tokens(params["embed"], token)          # (B, 1, d)
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    new_cache: List[AttnCache] = []
+    for li in range(cfg.n_layers):
+        layer = _take_layer(params["layers"], li)
+        x = rms_norm(h, layer["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(layer["attn"], x, positions, cfg.rope_theta)
+        c = update_attn_cache(cache[li], k, v, pos)
+        # windowed layers use ring caches, which bound the horizon already
+        valid = cache_valid_mask(c.k.shape[1], pos, B)
+        attn = decode_attention(q, c.k, c.v, valid)
+        h = h + attention_output(layer["attn"], attn)
+        x = rms_norm(h, layer["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = moe(layer["moe"], x, cfg.moe.top_k,
+                       cfg.moe.capacity_factor)
+        else:
+            y = mlp(layer["mlp"], x)
+        h = h + y
+        new_cache.append(c)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(h, params["embed"], params.get("head"))[:, 0]
+    return new_cache, logits
+
+
+# ---------------------------------------------------------------------------
+# facade
+# ---------------------------------------------------------------------------
+
+
+def build_decoder(cfg: ModelConfig) -> Model:
+    return Model(
+        config=cfg,
+        init=lambda rng: init_decoder(rng, cfg),
+        loss=lambda p, b: decoder_loss(p, cfg, b),
+        prefill=lambda p, b: decoder_prefill(p, cfg, b),
+        init_cache=functools.partial(decoder_init_cache, cfg),
+        decode_step=lambda p, c, t, pos, **kw: decoder_decode_step(
+            p, cfg, c, t, pos, **kw
+        ),
+    )

@@ -1,0 +1,236 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The mel-spectrogram + conv frontend is stubbed per the task carve-out:
+inputs are precomputed frame embeddings (B, n_frames, d_model). The
+encoder is a bidirectional transformer over frames; the decoder adds
+cross-attention to the encoder output. Decode caches: self-attn ring
+buffer + precomputed cross-attn K/V per layer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import (
+    Model,
+    cross_entropy,
+    next_token_loss,
+    embed_tokens,
+    init_embedding,
+    lm_logits,
+)
+from repro.models.cache import (
+    AttnCache,
+    attn_cache_spec,
+    cache_valid_mask,
+    init_attn_cache,
+    update_attn_cache,
+)
+from repro.models.layers.attention import (
+    reshard_for_attention,
+    AttnParams,
+    attention_output,
+    blockwise_attention,
+    cross_attention,
+    decode_attention,
+    init_attention,
+    project_qkv,
+)
+from repro.models.layers.mlp import init_mlp, mlp
+from repro.models.layers.norms import rms_norm
+from repro.models.runtime_flags import maybe_scan
+from repro.models.sharding import shard
+
+PyTree = Any
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    dtype = cfg.param_dtype
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": init_attention(
+            ka, cfg.d_model, cfg.n_heads, cfg.n_heads,
+            cfg.resolved_head_dim, False, dtype,
+        ),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    ka, kx, km = jax.random.split(key, 3)
+    dtype = cfg.param_dtype
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": init_attention(
+            ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, False, dtype,
+        ),
+        "lnx": jnp.zeros((cfg.d_model,), dtype),
+        "xattn": init_attention(
+            kx, cfg.d_model, cfg.n_heads, cfg.n_heads,
+            cfg.resolved_head_dim, False, dtype,
+        ),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> Dict[str, PyTree]:
+    ke, kenc, kdec = jax.random.split(key, 3)
+    enc_keys = jax.random.split(kenc, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": init_embedding(ke, cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array,
+           remat: bool = True) -> jax.Array:
+    """frames: (B, S, d) stub embeddings -> encoder output (B, S, d)."""
+    h = shard(frames, "batch", None, None)
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(hh, layer):
+        x = rms_norm(hh, layer["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(layer["attn"], x, positions, cfg.rope_theta)
+        q, k, v = reshard_for_attention(q, k, v)
+        attn = blockwise_attention(q, k, v, causal=False)
+        hh = hh + attention_output(layer["attn"], attn)
+        x = rms_norm(hh, layer["ln2"], cfg.norm_eps)
+        hh = hh + mlp(layer["mlp"], x)
+        return hh, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = maybe_scan(body, h, params["enc_layers"])
+    return rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _enc_kv(layer, enc_out: jax.Array, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output for one layer."""
+    p: AttnParams = layer["xattn"]
+    k = jnp.einsum("bsd,dnh->bsnh", enc_out, p.wk)
+    v = jnp.einsum("bsd,dnh->bsnh", enc_out, p.wv)
+    return k, v
+
+
+def decoder_forward(params, cfg: ModelConfig, tokens: jax.Array,
+                    enc_out: jax.Array, remat: bool = True) -> jax.Array:
+    h = embed_tokens(params["embed"], tokens)
+    B, T = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def body(hh, layer):
+        x = rms_norm(hh, layer["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(layer["attn"], x, positions, cfg.rope_theta)
+        q, k, v = reshard_for_attention(q, k, v)
+        attn = blockwise_attention(q, k, v, causal=True)
+        hh = hh + attention_output(layer["attn"], attn)
+        x = rms_norm(hh, layer["lnx"], cfg.norm_eps)
+        ek, ev = _enc_kv(layer, enc_out, cfg)
+        hh = hh + cross_attention(layer["xattn"], x, ek, ev)
+        x = rms_norm(hh, layer["ln2"], cfg.norm_eps)
+        hh = hh + mlp(layer["mlp"], x)
+        hh = shard(hh, "batch", "seq", None)
+        return hh, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = maybe_scan(body, h, params["dec_layers"])
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def encdec_loss(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    enc_out = encode(params, cfg, batch["audio_frames"])
+    h = decoder_forward(params, cfg, batch["tokens"], enc_out)
+    loss = next_token_loss(h, params["embed"], None, batch["labels"])
+    return loss, {"ce": loss}
+
+
+def encdec_prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    enc_out = encode(params, cfg, batch["audio_frames"], remat=False)
+    h = decoder_forward(params, cfg, batch["tokens"], enc_out, remat=False)
+    return lm_logits(h[:, -1:, :], params["embed"], None)[:, 0]
+
+
+# -- decode -----------------------------------------------------------------
+
+
+class EncDecCache(NamedTuple):
+    self_kv: AttnCache        # decoder self-attn ring cache
+    cross_k: jax.Array        # (B, S_enc, nH, hd) precomputed
+    cross_v: jax.Array
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, length: int,
+                      dtype=None, force_local: bool = False,
+                      spec_only: bool = False) -> List[EncDecCache]:
+    dtype = dtype or cfg.param_dtype
+    S_enc = cfg.n_audio_frames
+    caches = []
+    for _ in range(cfg.n_layers):
+        if spec_only:
+            kv = attn_cache_spec(batch, length, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim, dtype)
+            x = jax.ShapeDtypeStruct(
+                (batch, S_enc, cfg.n_heads, cfg.resolved_head_dim), dtype
+            )
+        else:
+            kv = init_attn_cache(batch, length, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim, dtype)
+            x = jnp.zeros(
+                (batch, S_enc, cfg.n_heads, cfg.resolved_head_dim), dtype
+            )
+        caches.append(EncDecCache(self_kv=kv, cross_k=x, cross_v=x))
+    return caches
+
+
+def encdec_decode_step(params, cfg: ModelConfig, cache: List[EncDecCache],
+                       token: jax.Array, pos: jax.Array,
+                       force_local: bool = False):
+    B = token.shape[0]
+    h = embed_tokens(params["embed"], token)
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    new_cache: List[EncDecCache] = []
+    for li in range(cfg.n_layers):
+        layer = jax.tree_util.tree_map(lambda l: l[li], params["dec_layers"])
+        x = rms_norm(h, layer["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(layer["attn"], x, positions, cfg.rope_theta)
+        c = update_attn_cache(cache[li].self_kv, k, v, pos)
+        valid = cache_valid_mask(c.k.shape[1], pos, B)
+        attn = decode_attention(q, c.k, c.v, valid)
+        h = h + attention_output(layer["attn"], attn)
+        x = rms_norm(h, layer["lnx"], cfg.norm_eps)
+        h = h + cross_attention(
+            layer["xattn"], x, cache[li].cross_k, cache[li].cross_v
+        )
+        x = rms_norm(h, layer["ln2"], cfg.norm_eps)
+        h = h + mlp(layer["mlp"], x)
+        new_cache.append(EncDecCache(self_kv=c, cross_k=cache[li].cross_k,
+                                     cross_v=cache[li].cross_v))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return new_cache, lm_logits(h, params["embed"], None)[:, 0]
+
+
+def build_encdec(cfg: ModelConfig) -> Model:
+    return Model(
+        config=cfg,
+        init=lambda rng: init_encdec(rng, cfg),
+        loss=lambda p, b: encdec_loss(p, cfg, b),
+        prefill=lambda p, b: encdec_prefill(p, cfg, b),
+        init_cache=functools.partial(encdec_init_cache, cfg),
+        decode_step=lambda p, c, t, pos, **kw: encdec_decode_step(
+            p, cfg, c, t, pos, **kw
+        ),
+    )

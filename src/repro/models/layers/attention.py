@@ -1,0 +1,364 @@
+"""Grouped-query attention: blockwise (flash-style) prefill + cached decode.
+
+Pure-jnp implementation used everywhere lowering must succeed (the Pallas
+flash kernel in ``repro.kernels.flash_attention`` is numerically checked
+against THIS module's math and is switched in on real TPU builds).
+
+Memory discipline: scores are never materialized beyond a
+(q_chunk x kv_chunk) tile — mandatory for the 32k prefill shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.rope import apply_rope
+from repro.models.sharding import shard
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array  # (d, nq, hd)
+    wk: jax.Array  # (d, nkv, hd)
+    wv: jax.Array  # (d, nkv, hd)
+    wo: jax.Array  # (nq, hd, d)
+    bq: Optional[jax.Array]  # (nq, hd) | None
+    bk: Optional[jax.Array]
+    bv: Optional[jax.Array]
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   qkv_bias: bool, dtype) -> AttnParams:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s_in = d_model ** -0.5
+    s_out = (n_heads * head_dim) ** -0.5
+    mk = lambda k, shape, s: (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+    return AttnParams(
+        wq=mk(kq, (d_model, n_heads, head_dim), s_in),
+        wk=mk(kk, (d_model, n_kv, head_dim), s_in),
+        wv=mk(kv, (d_model, n_kv, head_dim), s_in),
+        wo=mk(ko, (n_heads, head_dim, d_model), s_out),
+        bq=jnp.zeros((n_heads, head_dim), dtype) if qkv_bias else None,
+        bk=jnp.zeros((n_kv, head_dim), dtype) if qkv_bias else None,
+        bv=jnp.zeros((n_kv, head_dim), dtype) if qkv_bias else None,
+    )
+
+
+def project_qkv(p: AttnParams, x: jax.Array, positions: jax.Array,
+                rope_theta: float):
+    """x: (B, T, d) -> q (B,T,nq,hd), k/v (B,T,nkv,hd), rope applied."""
+    q = jnp.einsum("btd,dnh->btnh", x, p.wq)
+    k = jnp.einsum("btd,dnh->btnh", x, p.wk)
+    v = jnp.einsum("btd,dnh->btnh", x, p.wv)
+    if p.bq is not None:
+        q = q + p.bq
+        k = k + p.bk
+        v = v + p.bv
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _chunked(x: jax.Array, chunk: int) -> jax.Array:
+    """(B, T, ...) -> (n_chunks, B, chunk, ...)."""
+    B, T = x.shape[:2]
+    n = T // chunk
+    return jnp.moveaxis(x.reshape(B, n, chunk, *x.shape[2:]), 1, 0)
+
+
+def reshard_for_attention(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Re-shard q/k/v for the blockwise tile loops.
+
+    The residual stream is sequence-sharded over ``model`` (cheap to keep
+    resident), but slicing an S-sharded k/v inside the tile scan emits a
+    halo exchange PER TILE (measured: tens of thousands of small
+    all-gathers/permutes per step). Gathering k/v's sequence dim ONCE here
+    and sharding q's heads over ``model`` (when divisible — GQA kv heads
+    are few and stay replicated) turns that into 2 activation-sized
+    collectives per layer: the Megatron attention layout, entered from a
+    sequence-parallel residual.
+    """
+    from repro.models.sharding import current_rules
+
+    rules = current_rules()
+    if rules is None:
+        return q, k, v
+    model_n = rules.mesh.shape.get("model", 1)
+    if q.shape[2] % model_n:
+        # non-divisible head counts: measured BOTH alternatives (§Perf) —
+        # pad-sharding q and replicating q each cost MORE collective
+        # traffic than leaving the sequence-sharded layout alone
+        return q, k, v
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, None, None)
+    v = shard(v, "batch", None, None, None)
+    return q, k, v
+
+
+def _tile_dead(causal: bool, window, q_start, q_chunk, k_start, kv_chunk):
+    """True when a (q, kv) tile is fully masked and can be skipped."""
+    dead = jnp.asarray(False)
+    if causal:
+        dead = jnp.logical_or(dead, k_start > q_start + q_chunk - 1)
+    dead = jnp.logical_or(
+        dead, (window > 0) & (k_start + kv_chunk - 1 <= q_start - window)
+    )
+    return dead
+
+
+def _tile_mask(causal: bool, win_eff, q_start, q_chunk, k_start, kv_chunk):
+    qpos = q_start + jnp.arange(q_chunk)
+    kpos = k_start + jnp.arange(kv_chunk)
+    mask = jnp.ones((q_chunk, kv_chunk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    mask &= qpos[:, None] - kpos[None, :] < win_eff
+    return mask
+
+
+def blockwise_attention(
+    q: jax.Array,           # (B, T, nq, hd)
+    k: jax.Array,           # (B, S, nkv, hd)
+    v: jax.Array,           # (B, S, nkv, hd)
+    *,
+    causal: bool = True,
+    window=0,               # 0 = full causal; may be a traced int32 scalar
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    q_offset: int = 0,      # absolute position of q[0] relative to k[0]
+) -> jax.Array:
+    """FlashAttention-style blockwise attention with a custom VJP.
+
+    Forward: online softmax over (q_chunk x kv_chunk) tiles; only one tile
+    of scores is ever live. Backward: recomputes tile probabilities from
+    the saved logsumexp (the flash backward), so NOTHING per-tile is saved
+    — without this, ``lax.scan``'s reverse pass would checkpoint every
+    tile's softmax (O(T*S) memory, unlowerable at 32k).
+
+    Fully-masked tiles are skipped with ``lax.cond`` in both passes.
+    ``window`` may be a traced scalar (per-layer dynamic patterns under
+    ``lax.scan``, e.g. gemma3's 5:1 local:global); 0 disables windowing.
+    """
+    B, T, nq, hd = q.shape
+    S, nkv = k.shape[1], k.shape[2]
+    group = nq // nkv
+    q_chunk = min(q_chunk, T)
+    kv_chunk = min(kv_chunk, S)
+    if T % q_chunk:
+        q_chunk = T  # fallback; shapes in this repo keep chunks divisible
+    if S % kv_chunk:
+        kv_chunk = S
+    scale = hd ** -0.5
+    n_qc, n_kc = T // q_chunk, S // kv_chunk
+    no_window = jnp.iinfo(jnp.int32).max
+
+    def _forward(qf, kf, vf, window):
+        """Returns out (B,T,nq,hd) fp32-accurate and lse (nqc,B,nkv,group,qc)."""
+        win_eff = jnp.where(window > 0, window, no_window)
+        qc = _chunked(qf.reshape(B, T, nkv, group, hd), q_chunk)
+        kc = _chunked(kf, kv_chunk)
+        vc = _chunked(vf, kv_chunk)
+
+        def per_q_chunk(carry, inp):
+            qi, q_blk = inp
+            q_start = qi * q_chunk + q_offset
+
+            def kv_step(state, kv_inp):
+                ki, k_blk, v_blk = kv_inp
+                acc, m, l = state
+                k_start = ki * kv_chunk
+
+                def attend(_):
+                    s = jnp.einsum(
+                        "bqngh,bknh->bngqk", q_blk, k_blk,
+                        preferred_element_type=jnp.float32,
+                    ) * scale
+                    mask = _tile_mask(causal, win_eff, q_start, q_chunk,
+                                      k_start, kv_chunk)
+                    s = jnp.where(mask, s, NEG_INF)
+                    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                    p = jnp.exp(s - m_new[..., None])
+                    alpha = jnp.exp(m - m_new)
+                    l_new = l * alpha + jnp.sum(p, axis=-1)
+                    acc_new = acc * alpha[..., None] + jnp.einsum(
+                        "bngqk,bknh->bngqh", p.astype(v_blk.dtype), v_blk,
+                        preferred_element_type=jnp.float32,
+                    )
+                    return acc_new, m_new, l_new
+
+                dead = _tile_dead(causal, window, q_start, q_chunk,
+                                  k_start, kv_chunk)
+                new_state = jax.lax.cond(
+                    dead, lambda _: (acc, m, l), attend, operand=None
+                )
+                return new_state, None
+
+            acc0 = jnp.zeros((B, nkv, group, q_chunk, hd), jnp.float32)
+            m0 = jnp.full((B, nkv, group, q_chunk), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, nkv, group, q_chunk), jnp.float32)
+            (acc, m, l), _ = jax.lax.scan(
+                kv_step, (acc0, m0, l0), (jnp.arange(n_kc), kc, vc)
+            )
+            lsafe = jnp.maximum(l, 1e-30)
+            out = acc / lsafe[..., None]
+            out = jnp.moveaxis(out, 3, 1).reshape(B, q_chunk, nkv * group, hd)
+            lse = m + jnp.log(lsafe)                  # (B, nkv, group, qc)
+            return carry, (out.astype(qf.dtype), lse)
+
+        _, (outs, lses) = jax.lax.scan(
+            per_q_chunk, None, (jnp.arange(n_qc), qc)
+        )
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, T, nq, hd)
+        return out, lses
+
+    @jax.custom_vjp
+    def attn(qf, kf, vf, window):
+        return _forward(qf, kf, vf, window)[0]
+
+    def attn_fwd(qf, kf, vf, window):
+        out, lses = _forward(qf, kf, vf, window)
+        return out, (qf, kf, vf, window, out, lses)
+
+    def attn_bwd(res, dout):
+        qf, kf, vf, window, out, lses = res
+        win_eff = jnp.where(window > 0, window, no_window)
+        qcs = _chunked(qf.reshape(B, T, nkv, group, hd), q_chunk)
+        kcs = _chunked(kf, kv_chunk)
+        vcs = _chunked(vf, kv_chunk)
+        docs = _chunked(dout.reshape(B, T, nkv, group, hd), q_chunk)
+        outs = _chunked(out.reshape(B, T, nkv, group, hd), q_chunk)
+        # delta_i = sum_h dout_i * out_i  (per query position, fp32)
+        deltas = jnp.sum(
+            docs.astype(jnp.float32) * outs.astype(jnp.float32), axis=-1
+        )                                             # (nqc,B,qc,nkv,group)
+        deltas = jnp.moveaxis(deltas, 2, 4)           # (nqc,B,nkv,group,qc)
+
+        def per_kv_chunk(dq_acc, kv_inp):
+            ki, k_blk, v_blk = kv_inp
+            k_start = ki * kv_chunk
+
+            def per_q_chunk(state, q_inp):
+                dk_blk, dv_blk = state
+                qi, q_blk, do_blk, lse_blk, dl_blk = q_inp
+                q_start = qi * q_chunk + q_offset
+
+                def attend(_):
+                    s = jnp.einsum(
+                        "bqngh,bknh->bngqk", q_blk, k_blk,
+                        preferred_element_type=jnp.float32,
+                    ) * scale
+                    mask = _tile_mask(causal, win_eff, q_start, q_chunk,
+                                      k_start, kv_chunk)
+                    s = jnp.where(mask, s, NEG_INF)
+                    p = jnp.exp(s - lse_blk[..., None])   # (B,n,g,qc,kc) f32
+                    pb = p.astype(k_blk.dtype)
+                    do_r = jnp.moveaxis(do_blk, 1, 3)     # (B,n,g,qc,hd)
+                    dv_c = jnp.einsum("bngqk,bngqh->bknh", pb, do_r,
+                                      preferred_element_type=jnp.float32)
+                    dp = jnp.einsum("bngqh,bknh->bngqk", do_r, v_blk,
+                                    preferred_element_type=jnp.float32)
+                    ds = p * (dp - dl_blk[..., None]) * scale
+                    dsb = ds.astype(k_blk.dtype)
+                    dq_c = jnp.einsum("bngqk,bknh->bngqh", dsb, k_blk,
+                                      preferred_element_type=jnp.float32)
+                    dk_c = jnp.einsum("bngqk,bngqh->bknh", dsb,
+                                      jnp.moveaxis(q_blk, 1, 3),
+                                      preferred_element_type=jnp.float32)
+                    return dk_blk + dk_c, dv_blk + dv_c, dq_c
+
+                dead = _tile_dead(causal, window, q_start, q_chunk,
+                                  k_start, kv_chunk)
+                dk_new, dv_new, dq_c = jax.lax.cond(
+                    dead,
+                    lambda _: (
+                        dk_blk, dv_blk,
+                        jnp.zeros((B, nkv, group, q_chunk, hd), jnp.float32),
+                    ),
+                    attend,
+                    operand=None,
+                )
+                return (dk_new, dv_new), dq_c
+
+            z = jnp.zeros((B, kv_chunk, nkv, hd), jnp.float32)
+            (dk_blk, dv_blk), dq_chunks = jax.lax.scan(
+                per_q_chunk, (z, z),
+                (jnp.arange(n_qc), qcs, docs, lses, deltas),
+            )
+            return dq_acc + dq_chunks, (dk_blk, dv_blk)
+
+        dq0 = jnp.zeros((n_qc, B, nkv, group, q_chunk, hd), jnp.float32)
+        dq_acc, (dks, dvs) = jax.lax.scan(
+            per_kv_chunk, dq0, (jnp.arange(n_kc), kcs, vcs)
+        )
+        # reassemble: dq (nqc,B,n,g,qc,hd) -> (B,T,nq,hd)
+        dq = jnp.moveaxis(jnp.moveaxis(dq_acc, 4, 2), 0, 1)
+        dq = dq.reshape(B, T, nq, hd).astype(qf.dtype)
+        dk = jnp.moveaxis(dks, 0, 1).reshape(B, S, nkv, hd).astype(kf.dtype)
+        dv = jnp.moveaxis(dvs, 0, 1).reshape(B, S, nkv, hd).astype(vf.dtype)
+        return dq, dk, dv, None
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn(q, k, v, jnp.asarray(window, jnp.int32))
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, nq, hd)
+    k_cache: jax.Array,      # (B, S, nkv, hd)  (circular for windowed layers)
+    v_cache: jax.Array,
+    valid_mask: jax.Array,   # (B, S) bool — which cache slots are live
+) -> jax.Array:
+    """Single-token attention against a cache. Scores are (B, nq, S).
+
+    The cache stays in its storage dtype (bf16): the matmuls accumulate in
+    fp32 via ``preferred_element_type`` — casting the cache itself would
+    materialize a full fp32 copy of every layer's KV (the dominant decode
+    memory term at 32k).
+    """
+    B, _, nq, hd = q.shape
+    nkv = k_cache.shape[2]
+    group = nq // nkv
+    scale = hd ** -0.5
+    qf = q.reshape(B, nkv, group, hd)
+    s = jnp.einsum(
+        "bngh,bsnh->bngs", qf, k_cache,
+        preferred_element_type=jnp.float32,
+    ) * scale
+    s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bngs,bsnh->bngh", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, nq, hd).astype(q.dtype)
+
+
+def cross_attention(
+    p: AttnParams,
+    x: jax.Array,            # (B, T, d) decoder stream
+    enc_k: jax.Array,        # (B, S, nkv, hd) precomputed encoder keys
+    enc_v: jax.Array,
+) -> jax.Array:
+    """Full (non-causal) cross-attention; S is small (encoder frames)."""
+    B, T, _ = x.shape
+    q = jnp.einsum("btd,dnh->btnh", x, p.wq)
+    if p.bq is not None:
+        q = q + p.bq
+    nq, hd = q.shape[2], q.shape[3]
+    nkv = enc_k.shape[2]
+    group = nq // nkv
+    scale = hd ** -0.5
+    qf = q.reshape(B, T, nkv, group, hd).astype(jnp.float32)
+    s = jnp.einsum("btngh,bsnh->bngts", qf, enc_k.astype(jnp.float32)) * scale
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngts,bsnh->btngh", pr, enc_v.astype(jnp.float32))
+    o = o.reshape(B, T, nq, hd).astype(x.dtype)
+    return jnp.einsum("btnh,nhd->btd", o, p.wo)
+
+
+def attention_output(p: AttnParams, attn: jax.Array) -> jax.Array:
+    """(B, T, nq, hd) @ wo -> (B, T, d)."""
+    return jnp.einsum("btnh,nhd->btd", attn, p.wo)

@@ -1,0 +1,32 @@
+"""SwiGLU MLP (the dense FFN used by every transformer-family arch here)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MLPParams(NamedTuple):
+    w_gate: jax.Array  # (d, ff)
+    w_up: jax.Array    # (d, ff)
+    w_down: jax.Array  # (ff, d)
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> MLPParams:
+    kg, ku, kd = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    mk = lambda k, shape, s: (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+    return MLPParams(
+        w_gate=mk(kg, (d_model, d_ff), s_in),
+        w_up=mk(ku, (d_model, d_ff), s_in),
+        w_down=mk(kd, (d_ff, d_model), s_out),
+    )
+
+
+def mlp(p: MLPParams, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("btd,df->btf", x, p.w_gate)
+    u = jnp.einsum("btd,df->btf", x, p.w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("btf,fd->btd", h, p.w_down)

@@ -1,0 +1,38 @@
+"""Normalization layers (pure functions over param dicts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm computed in fp32, cast back to the input dtype.
+
+    Uses the gemma-style ``(1 + scale)`` parameterization so zero-init
+    scales are the identity transform.
+    """
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32):
+    return jnp.zeros((d,), dtype=dtype)
+
+
+def group_norm(x: jnp.ndarray, scale: jnp.ndarray, n_groups: int,
+               eps: float = 1e-6) -> jnp.ndarray:
+    """Per-head group norm used by the xLSTM/Mamba gated-norm paths.
+
+    x: (..., d) normalized independently in ``n_groups`` equal groups.
+    """
+    dtype = x.dtype
+    *lead, d = x.shape
+    g = x.astype(jnp.float32).reshape(*lead, n_groups, d // n_groups)
+    mean = jnp.mean(g, axis=-1, keepdims=True)
+    var = jnp.var(g, axis=-1, keepdims=True)
+    y = (g - mean) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(*lead, d)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)

@@ -1,0 +1,28 @@
+"""Rotary position embeddings."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for half the head dimension (fp32)."""
+    half = head_dim // 2
+    exponents = jnp.arange(half, dtype=jnp.float32) / half
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate ``x`` of shape (B, T, H, D) by per-token ``positions`` (B, T).
+
+    Split-halves convention (as in Llama/NeoX): rotate (x1, x2) ->
+    (x1*cos - x2*sin, x2*cos + x1*sin).
+    """
+    B, T, H, D = x.shape
+    inv_freq = rope_frequencies(D, theta)                  # (D/2,)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # (B, T, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]                   # (B, T, 1, D/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : D // 2], x32[..., D // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

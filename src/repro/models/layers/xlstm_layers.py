@@ -1,0 +1,350 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-
+parallel) and sLSTM (scalar memory, block-diagonal recurrence, scanned).
+
+TPU adaptation: the mLSTM runs in the chunkwise formulation (intra-chunk
+parallel tiles + inter-chunk state scan — same schedule as Mamba2's SSD, so
+the same MXU/VMEM blocking applies) with log-domain stabilization (the
+paper's m-state). The sLSTM is inherently sequential and runs as a
+``lax.scan`` over time with all heads vectorized.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.norms import group_norm
+
+NEG = -1e30
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+
+class MLSTMParams(NamedTuple):
+    w_up: jax.Array        # (d, d_inner) x branch
+    w_z: jax.Array         # (d, d_inner) output-gate branch
+    conv_w: jax.Array      # (4, d_inner) causal depthwise conv on x branch
+    w_q: jax.Array         # (d_inner, d_qk)
+    w_k: jax.Array         # (d_inner, d_qk)
+    w_v: jax.Array         # (d_inner, d_v)
+    w_if: jax.Array        # (d_inner, 2*nh) input/forget gate pre-acts
+    b_if: jax.Array        # (2*nh,)
+    gn_scale: jax.Array    # (d_v,)
+    w_out: jax.Array       # (d_v, d)
+
+
+class MLSTMDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    d_qk: int
+    d_v: int
+    n_heads: int
+    chunk: int
+
+    @property
+    def h_qk(self) -> int:
+        return self.d_qk // self.n_heads
+
+    @property
+    def h_v(self) -> int:
+        return self.d_v // self.n_heads
+
+
+def mlstm_dims(cfg) -> MLSTMDims:
+    x = cfg.xlstm
+    d_inner = 2 * cfg.d_model
+    return MLSTMDims(
+        d_model=cfg.d_model,
+        d_inner=d_inner,
+        d_qk=int(d_inner * x.mlstm_qk_dim_factor),
+        d_v=int(d_inner * x.mlstm_v_dim_factor),
+        n_heads=cfg.n_heads,
+        chunk=x.chunk,
+    )
+
+
+def init_mlstm(key, dims: MLSTMDims, dtype) -> MLSTMParams:
+    ks = jax.random.split(key, 8)
+    d, di = dims.d_model, dims.d_inner
+    mk = lambda k, shape, s: (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+    nh = dims.n_heads
+    return MLSTMParams(
+        w_up=mk(ks[0], (d, di), d ** -0.5),
+        w_z=mk(ks[1], (d, di), d ** -0.5),
+        conv_w=mk(ks[2], (4, di), 0.3),
+        w_q=mk(ks[3], (di, dims.d_qk), di ** -0.5),
+        w_k=mk(ks[4], (di, dims.d_qk), di ** -0.5),
+        w_v=mk(ks[5], (di, dims.d_v), di ** -0.5),
+        w_if=(jax.random.normal(ks[6], (di, 2 * nh), jnp.float32) * di ** -0.5),
+        # forget-gate bias init positive: long memory at init
+        b_if=jnp.concatenate([jnp.zeros((nh,)), jnp.full((nh,), 3.0)]),
+        gn_scale=jnp.zeros((dims.d_v,), dtype),
+        w_out=mk(ks[7], (dims.d_v, d), dims.d_v ** -0.5),
+    )
+
+
+def _mlstm_qkvif(p: MLSTMParams, dims: MLSTMDims, x: jax.Array):
+    """x: (B, T, d) -> q,k,v (B,T,nh,h*), i_raw,f_log (B,T,nh), z (B,T,di)."""
+    B, T, _ = x.shape
+    nh = dims.n_heads
+    xb = jnp.einsum("btd,de->bte", x, p.w_up)
+    z = jnp.einsum("btd,de->bte", x, p.w_z)
+    # causal conv + silu on the x branch (width 4)
+    W = p.conv_w.shape[0]
+    pad = jnp.pad(xb, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(pad[:, k: k + T, :] * p.conv_w[k] for k in range(W))
+    xc = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    q = jnp.einsum("bte,ef->btf", xc, p.w_q).reshape(B, T, nh, dims.h_qk)
+    k = jnp.einsum("bte,ef->btf", xc, p.w_k).reshape(B, T, nh, dims.h_qk)
+    v = jnp.einsum("bte,ef->btf", xb, p.w_v).reshape(B, T, nh, dims.h_v)
+    gates = (
+        jnp.einsum("bte,eg->btg", xc.astype(jnp.float32), p.w_if) + p.b_if
+    )
+    i_raw = gates[..., :nh]                        # (B, T, nh)
+    f_log = jax.nn.log_sigmoid(gates[..., nh:])    # (B, T, nh)
+    return q, k, v, i_raw, f_log, z, xb
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array      # (B, nh, h_qk, h_v) matrix memory (scaled by exp(-m))
+    n: jax.Array      # (B, nh, h_qk) normalizer
+    m: jax.Array      # (B, nh) running log stabilizer
+    conv: jax.Array   # (B, 3, d_inner) conv tail for decode
+
+
+def init_mlstm_state(batch: int, dims: MLSTMDims, dtype) -> MLSTMState:
+    nh = dims.n_heads
+    return MLSTMState(
+        C=jnp.zeros((batch, nh, dims.h_qk, dims.h_v), jnp.float32),
+        n=jnp.zeros((batch, nh, dims.h_qk), jnp.float32),
+        m=jnp.full((batch, nh), 0.0, jnp.float32),
+        conv=jnp.zeros((batch, 3, dims.d_inner), dtype),
+    )
+
+
+def mlstm_forward(p: MLSTMParams, dims: MLSTMDims, x: jax.Array) -> jax.Array:
+    """Chunkwise-parallel mLSTM. x: (B, T, d) -> (B, T, d)."""
+    B, T, d = x.shape
+    nh, hq, hv = dims.n_heads, dims.h_qk, dims.h_v
+    L = min(dims.chunk, T)
+    if T % L:
+        L = T
+    nc = T // L
+    q, k, v, i_raw, f_log, z, _ = _mlstm_qkvif(p, dims, x)
+    scale = hq ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    ch = lambda a: jnp.moveaxis(a.reshape(B, nc, L, *a.shape[2:]), 1, 0)
+    qc, kc, vc = ch(qf), ch(kf), ch(vf)            # (nc, B, L, nh, .)
+    ic, fc = ch(i_raw), ch(f_log)                  # (nc, B, L, nh)
+
+    def chunk_step(state, inp):
+        q_, k_, v_, i_, f_ = inp
+        C, n, m = state
+        b = jnp.cumsum(f_, axis=1)                 # (B, L, nh)
+        btot = b[:, -1, :]                         # (B, nh)
+        # intra-chunk log weights D[t,s] = b_t - b_s + i_s  (s <= t)
+        D = (
+            b[:, :, None, :] - b[:, None, :, :] + i_[:, None, :, :]
+        )                                          # (B, t, s, nh)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(causal[None, :, :, None], D, NEG)
+        d_state = b + m[:, None, :]                # (B, L, nh): inter term
+        m_t = jnp.maximum(jnp.max(D, axis=2), d_state)  # (B, L, nh)
+        w = jnp.exp(D - m_t[:, :, None, :])        # (B, t, s, nh)
+        sc = jnp.exp(d_state - m_t)                # (B, L, nh)
+
+        qk = jnp.einsum("blhq,bshq->blsh", q_, k_)  # (B, t, s, nh)
+        num = jnp.einsum("blsh,blsh,bshv->blhv", qk, w, v_)
+        num = num + jnp.einsum("blhq,bhqv,blh->blhv", q_, C, sc)
+        nvec = jnp.einsum("blsh,bshq->blhq", w, k_) + jnp.einsum(
+            "bhq,blh->blhq", n, sc
+        )
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("blhq,blhq->blh", q_, nvec)),
+            jnp.exp(-m_t),
+        )
+        h = num / den[..., None]                   # (B, L, nh, hv)
+
+        # carry update (log-domain)
+        g = b[:, -1:, :] - b + i_                  # (B, L, nh) decay-to-end + i
+        m_local = jnp.max(g, axis=1)               # (B, nh)
+        m_new = jnp.maximum(m + btot, m_local)
+        wC = jnp.exp(g - m_new[:, None, :])        # (B, L, nh)
+        C_new = (
+            C * jnp.exp(m + btot - m_new)[..., None, None]
+            + jnp.einsum("blh,blhq,blhv->bhqv", wC, k_, v_)
+        )
+        n_new = n * jnp.exp(m + btot - m_new)[..., None] + jnp.einsum(
+            "blh,blhq->bhq", wC, k_
+        )
+        return (C_new, n_new, m_new), h
+
+    C0 = jnp.zeros((B, nh, hq, hv), jnp.float32)
+    n0 = jnp.zeros((B, nh, hq), jnp.float32)
+    m0 = jnp.zeros((B, nh), jnp.float32)
+    # checkpoint: avoid saving every chunk's (L, L, nh) weight tile
+    chunk_step_ck = jax.checkpoint(chunk_step, prevent_cse=False)
+    _, hs = jax.lax.scan(chunk_step_ck, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, nh * hv).astype(x.dtype)
+    h = group_norm(h, p.gn_scale, n_groups=nh)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)[..., : h.shape[-1]]
+    return jnp.einsum("btv,vd->btd", h, p.w_out)
+
+
+def mlstm_decode_step(
+    p: MLSTMParams, dims: MLSTMDims, state: MLSTMState, x: jax.Array
+) -> Tuple[MLSTMState, jax.Array]:
+    """One-token recurrent mLSTM step. x: (B, 1, d)."""
+    B = x.shape[0]
+    nh, hq, hv = dims.n_heads, dims.h_qk, dims.h_v
+    xb = jnp.einsum("btd,de->bte", x, p.w_up)
+    z = jnp.einsum("btd,de->bte", x, p.w_z)
+    window = jnp.concatenate([state.conv, xb], axis=1)      # (B, 4, di)
+    conv = jnp.einsum("bwc,wc->bc", window, p.conv_w)[:, None, :]
+    xc = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    q = jnp.einsum("bte,ef->btf", xc, p.w_q).reshape(B, nh, hq)
+    k = jnp.einsum("bte,ef->btf", xc, p.w_k).reshape(B, nh, hq)
+    v = jnp.einsum("bte,ef->btf", xb, p.w_v).reshape(B, nh, hv)
+    gates = jnp.einsum("bte,eg->bg", xc.astype(jnp.float32), p.w_if) + p.b_if
+    i_raw, f_log = gates[:, :nh], jax.nn.log_sigmoid(gates[:, nh:])
+
+    m_new = jnp.maximum(f_log + state.m, i_raw)
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(f_log + state.m - m_new)
+    qf = q.astype(jnp.float32) * hq ** -0.5
+    C = state.C * f[..., None, None] + i[..., None, None] * (
+        k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    )
+    n = state.n * f[..., None] + i[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhq,bhqv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhq,bhq->bh", qf, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, nh * hv).astype(x.dtype)
+    h = group_norm(h, p.gn_scale, n_groups=nh)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)[..., : h.shape[-1]]
+    out = jnp.einsum("btv,vd->btd", h, p.w_out)
+    return MLSTMState(C=C, n=n, m=m_new, conv=window[:, 1:, :]), out
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+
+class SLSTMParams(NamedTuple):
+    w_in: jax.Array        # (d, 4d) i,f,z,o pre-activations from input
+    r: jax.Array           # (nh, 4, hd, hd) block-diagonal recurrence
+    b: jax.Array           # (4d,)
+    gn_scale: jax.Array    # (d,)
+    w_gate: jax.Array      # (d, up) gated FFN after the cell
+    w_upp: jax.Array       # (d, up)
+    w_down: jax.Array      # (up, d)
+
+
+class SLSTMDims(NamedTuple):
+    d_model: int
+    n_heads: int
+    up: int
+
+    @property
+    def h(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def slstm_dims(cfg) -> SLSTMDims:
+    return SLSTMDims(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        up=int(cfg.d_model * cfg.xlstm.proj_factor),
+    )
+
+
+def init_slstm(key, dims: SLSTMDims, dtype) -> SLSTMParams:
+    ks = jax.random.split(key, 5)
+    d, nh, hd = dims.d_model, dims.n_heads, dims.h
+    mk = lambda k, shape, s: (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+    b = jnp.zeros((4 * d,))
+    # forget-gate bias positive
+    b = b.at[d: 2 * d].set(3.0)
+    return SLSTMParams(
+        w_in=mk(ks[0], (d, 4 * d), d ** -0.5),
+        r=(jax.random.normal(ks[1], (nh, 4, hd, hd), jnp.float32) * hd ** -0.5),
+        b=b,
+        gn_scale=jnp.zeros((d,), dtype),
+        w_gate=mk(ks[2], (d, dims.up), d ** -0.5),
+        w_upp=mk(ks[3], (d, dims.up), d ** -0.5),
+        w_down=mk(ks[4], (dims.up, d), dims.up ** -0.5),
+    )
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, nh, hd)
+    n: jax.Array
+    m: jax.Array
+    h: jax.Array
+
+
+def init_slstm_state(batch: int, dims: SLSTMDims) -> SLSTMState:
+    z = jnp.zeros((batch, dims.n_heads, dims.h), jnp.float32)
+    return SLSTMState(c=z, n=z + 1e-6, m=z, h=z)
+
+
+def _slstm_cell(p: SLSTMParams, dims: SLSTMDims, state: SLSTMState,
+                pre: jax.Array) -> SLSTMState:
+    """pre: (B, 4d) input pre-activation (x W + b). Adds recurrence and
+    advances the cell one step."""
+    B = pre.shape[0]
+    d, nh, hd = dims.d_model, dims.n_heads, dims.h
+    rec = jnp.einsum("bhx,hgxy->bghy", state.h, p.r)   # (B, 4, nh, hd)
+    g = pre.reshape(B, 4, nh, hd) + rec
+    i_raw, f_raw, z_raw, o_raw = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    f_log = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(f_log + state.m, i_raw)
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(f_log + state.m - m_new)
+    c = f * state.c + i * jnp.tanh(z_raw)
+    n = f * state.n + i
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, m=m_new, h=h)
+
+
+def slstm_forward(p: SLSTMParams, dims: SLSTMDims, x: jax.Array) -> jax.Array:
+    """Sequential scan over time. x: (B, T, d) -> (B, T, d)."""
+    B, T, d = x.shape
+    pre = jnp.einsum("btd,dg->btg", x.astype(jnp.float32), p.w_in) + p.b
+
+    def step(state, pre_t):
+        new = _slstm_cell(p, dims, state, pre_t)
+        return new, new.h
+
+    state0 = init_slstm_state(B, dims)
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(pre, 0, 1))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, d).astype(x.dtype)
+    h = group_norm(h, p.gn_scale, n_groups=dims.n_heads)
+    # gated FFN
+    gte = jnp.einsum("btd,du->btu", h, p.w_gate)
+    up = jnp.einsum("btd,du->btu", h, p.w_upp)
+    y = jax.nn.gelu(gte.astype(jnp.float32)).astype(x.dtype) * up
+    return jnp.einsum("btu,ud->btd", y, p.w_down)
+
+
+def slstm_decode_step(
+    p: SLSTMParams, dims: SLSTMDims, state: SLSTMState, x: jax.Array
+) -> Tuple[SLSTMState, jax.Array]:
+    B = x.shape[0]
+    pre = (
+        jnp.einsum("btd,dg->bg", x.astype(jnp.float32), p.w_in) + p.b
+    )
+    new = _slstm_cell(p, dims, state, pre)
+    h = new.h.reshape(B, 1, dims.d_model).astype(x.dtype)
+    h = group_norm(h, p.gn_scale, n_groups=dims.n_heads)
+    gte = jnp.einsum("btd,du->btu", h, p.w_gate)
+    up = jnp.einsum("btd,du->btu", h, p.w_upp)
+    y = jax.nn.gelu(gte.astype(jnp.float32)).astype(x.dtype) * up
+    return new, jnp.einsum("btu,ud->btd", y, p.w_down)

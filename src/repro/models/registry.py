@@ -1,0 +1,21 @@
+"""Model registry: ModelConfig -> Model facade by family."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.base import Model
+from repro.models.decoder import build_decoder
+from repro.models.encdec import build_encdec
+from repro.models.xlstm import build_xlstm
+from repro.models.zamba import build_zamba
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return build_decoder(cfg)
+    if cfg.family == "audio":
+        return build_encdec(cfg)
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        return build_xlstm(cfg)
+    if cfg.family in ("ssm", "hybrid") and cfg.ssm is not None:
+        return build_zamba(cfg)
+    raise ValueError(f"unknown family {cfg.family!r} for {cfg.arch_id}")

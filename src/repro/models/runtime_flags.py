@@ -1,0 +1,46 @@
+"""Process-wide model-lowering flags.
+
+``scan_layers=False`` unrolls layer stacks instead of ``lax.scan``-ing
+them. The dry-run unrolls so ``compiled.cost_analysis()`` counts every
+layer (XLA reports while-loop bodies once); interactive/CPU runs keep
+scan for O(1-layer) compile times.
+"""
+from __future__ import annotations
+
+import contextlib
+
+scan_layers: bool = True
+
+
+@contextlib.contextmanager
+def unrolled_layers():
+    global scan_layers
+    prev = scan_layers
+    scan_layers = False
+    try:
+        yield
+    finally:
+        scan_layers = prev
+
+
+def maybe_scan(body, init, xs, length=None):
+    """lax.scan when scan_layers else a python loop over the leading dim."""
+    import jax
+    import jax.numpy as jnp
+
+    if scan_layers:
+        return jax.lax.scan(body, init, xs, length=length)
+    n = length
+    if n is None:
+        n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs) if xs is not None else None
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys

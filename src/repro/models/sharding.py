@@ -1,0 +1,134 @@
+"""Logical sharding annotations for the model stack.
+
+Models call ``shard(x, "batch", "seq", None)`` at layer boundaries. When an
+``AxisRules`` context is active (set by the launcher/dry-run), the logical
+names resolve to mesh axes and a ``with_sharding_constraint`` is applied;
+otherwise the call is the identity, so smoke tests on one CPU device are
+untouched.
+
+Logical axes used across the stack:
+  batch   - data-parallel batch dim
+  seq     - sequence dim (sequence parallelism for the residual stream)
+  embed   - residual-stream feature dim (usually unsharded)
+  heads   - attention-head dim (tensor parallelism)
+  kv      - kv-head dim
+  ff      - MLP hidden dim
+  expert  - MoE expert dim (expert parallelism)
+  vocab   - vocabulary dim
+  ctx     - decode-time KV-cache sequence dim (context parallelism)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: contextvars.ContextVar[Optional["AxisRules"]] = contextvars.ContextVar(
+    "repro_axis_rules", default=None
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Maps logical axis names to (tuples of) mesh axis names."""
+
+    mesh: Mesh
+    rules: Dict[str, Optional[Tuple[str, ...]]]
+
+    def spec(self, *logical: Optional[str]) -> P:
+        axes = []
+        for name in logical:
+            if name is None:
+                axes.append(None)
+                continue
+            m = self.rules.get(name)
+            if m is None:
+                axes.append(None)
+            elif isinstance(m, str):
+                axes.append(m)
+            else:
+                axes.append(tuple(m) if len(m) > 1 else m[0])
+        return P(*axes)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    token = _ACTIVE.set(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _ACTIVE.get()
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o rules)."""
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"rank {x.ndim} vs {logical}")
+    spec = rules.spec(*logical)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec)
+    )
+
+
+# Default logical->mesh mappings -------------------------------------------
+
+def train_rules(mesh: Mesh) -> AxisRules:
+    """Training/prefill: batch over (pod, data), tensor dims over model,
+    residual-stream sequence over model (sequence parallelism)."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return AxisRules(
+        mesh=mesh,
+        rules={
+            "batch": data_axes,
+            "seq": ("model",),
+            "embed": None,
+            "heads": ("model",),
+            "kv": ("model",),
+            "ff": ("model",),
+            "expert": ("model",),
+            "vocab": ("model",),
+            "ctx": None,
+            "dmodel": None,
+        },
+    )
+
+
+def decode_rules(mesh: Mesh, batch: int) -> AxisRules:
+    """Decode: batch over (pod, data) when divisible; the KV-cache
+    sequence dim over model (context-parallel attention — softmax over a
+    sharded key axis costs only tiny cross-shard reductions), extended to
+    the data axes too when the batch isn't shardable (long_500k)."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    batch_sharded = batch % n_data == 0 and batch >= n_data
+    return AxisRules(
+        mesh=mesh,
+        rules={
+            "batch": data_axes if batch_sharded else None,
+            "seq": None,
+            "embed": None,
+            "heads": ("model",),
+            "kv": None,
+            "ff": ("model",),
+            "expert": ("model",),
+            "vocab": ("model",),
+            "ctx": ("model",) if batch_sharded else data_axes + ("model",),
+            # feature dim of token activations, matching the FSDP'd (data-
+            # sharded) weight contraction dim: keeps the all-expert decode
+            # mix as partial-dot + psum instead of weight all-gathers
+            "dmodel": data_axes,
+        },
+    )

@@ -1,0 +1,197 @@
+"""xLSTM language model (arXiv:2405.04517): mLSTM blocks with periodic
+sLSTM blocks (xLSTM[a:b] ratio), pre-norm residual stream.
+
+Layer pattern for ``slstm_every = k``: blocks are grouped into segments of
+(k-1) mLSTM blocks + 1 sLSTM block; train/prefill scans segments (outer)
+and the mLSTM stack (inner) so compile size stays O(1 block). Decode
+unrolls and carries recurrent states — O(1) memory in context length, so
+long_500k applies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import (
+    Model,
+    cross_entropy,
+    next_token_loss,
+    embed_tokens,
+    init_embedding,
+    lm_logits,
+)
+from repro.models.layers.norms import rms_norm
+from repro.models.layers.xlstm_layers import (
+    MLSTMState,
+    SLSTMState,
+    init_mlstm,
+    init_mlstm_state,
+    init_slstm,
+    init_slstm_state,
+    mlstm_decode_step,
+    mlstm_dims,
+    mlstm_forward,
+    slstm_decode_step,
+    slstm_dims,
+    slstm_forward,
+)
+from repro.models.runtime_flags import maybe_scan
+from repro.models.sharding import shard
+
+PyTree = Any
+
+
+def _segment_shape(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_segments, mlstm_per_segment). slstm_every=k -> segments of
+    (k-1) mLSTM + 1 sLSTM."""
+    k = cfg.xlstm.slstm_every
+    if k == 0:
+        return 1, cfg.n_layers
+    assert cfg.n_layers % k == 0, "n_layers must divide into segments"
+    return cfg.n_layers // k, k - 1
+
+
+def init_xlstm(key, cfg: ModelConfig) -> Dict[str, PyTree]:
+    ke, km, ks = jax.random.split(key, 3)
+    n_seg, m_per = _segment_shape(cfg)
+    mdims = mlstm_dims(cfg)
+    sdims = slstm_dims(cfg)
+    dtype = cfg.param_dtype
+
+    def seg_m(k):
+        return jax.vmap(lambda kk: {
+            "norm": jnp.zeros((cfg.d_model,), dtype),
+            "cell": init_mlstm(kk, mdims, dtype),
+        })(jax.random.split(k, m_per))
+
+    m_keys = jax.random.split(km, n_seg)
+    s_keys = jax.random.split(ks, n_seg)
+    params = {
+        "embed": init_embedding(ke, cfg.vocab, cfg.d_model, dtype),
+        "mlstm": jax.vmap(seg_m)(m_keys),  # (n_seg, m_per, ...)
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.xlstm.slstm_every:
+        params["slstm"] = jax.vmap(lambda k: {
+            "norm": jnp.zeros((cfg.d_model,), dtype),
+            "cell": init_slstm(k, sdims, dtype),
+        })(s_keys)
+    return params
+
+
+def xlstm_hidden(params, cfg: ModelConfig, tokens: jax.Array,
+                 remat: bool = True) -> jax.Array:
+    mdims = mlstm_dims(cfg)
+    sdims = slstm_dims(cfg)
+    h = embed_tokens(params["embed"], tokens)
+    n_seg, m_per = _segment_shape(cfg)
+
+    def m_body(hh, layer):
+        x = rms_norm(hh, layer["norm"], cfg.norm_eps)
+        hh = hh + mlstm_forward(layer["cell"], mdims, x)
+        return shard(hh, "batch", "seq", None), None
+
+    if remat:
+        m_body = jax.checkpoint(m_body, prevent_cse=False)
+
+    def seg_body(hh, seg):
+        hh, _ = maybe_scan(m_body, hh, seg["m"])
+        if cfg.xlstm.slstm_every:
+            s = seg["s"]
+            x = rms_norm(hh, s["norm"], cfg.norm_eps)
+            hh = hh + slstm_forward(s["cell"], sdims, x)
+            hh = shard(hh, "batch", "seq", None)
+        return hh, None
+
+    segs = {"m": params["mlstm"]}
+    if cfg.xlstm.slstm_every:
+        segs["s"] = params["slstm"]
+    if remat:
+        seg_body = jax.checkpoint(seg_body, prevent_cse=False)
+    h, _ = maybe_scan(seg_body, h, segs)
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def xlstm_loss(params, cfg: ModelConfig, batch):
+    h = xlstm_hidden(params, cfg, batch["tokens"])
+    loss = next_token_loss(h, params["embed"], None, batch["labels"])
+    return loss, {"ce": loss}
+
+
+def xlstm_prefill(params, cfg: ModelConfig, batch):
+    h = xlstm_hidden(params, cfg, batch["tokens"], remat=False)
+    return lm_logits(h[:, -1:, :], params["embed"], None)[:, 0]
+
+
+# -- decode -----------------------------------------------------------------
+
+
+def xlstm_init_cache(cfg: ModelConfig, batch: int, length: int,
+                     dtype=None, force_local: bool = False,
+                     spec_only: bool = False) -> List:
+    """Recurrent states per block, in block order. ``length`` is unused —
+    xLSTM state is O(1) in context length (that's the point)."""
+    del length, force_local
+    dtype = dtype or cfg.param_dtype
+    mdims = mlstm_dims(cfg)
+    sdims = slstm_dims(cfg)
+    n_seg, m_per = _segment_shape(cfg)
+    caches: List = []
+    for _ in range(n_seg):
+        for _ in range(m_per):
+            caches.append(init_mlstm_state(batch, mdims, dtype))
+        if cfg.xlstm.slstm_every:
+            caches.append(init_slstm_state(batch, sdims))
+    if spec_only:
+        caches = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), caches
+        )
+    return caches
+
+
+def xlstm_decode_step(params, cfg: ModelConfig, cache: List,
+                      token: jax.Array, pos: jax.Array,
+                      force_local: bool = False):
+    del pos, force_local  # recurrent: position only lives in the state
+    mdims = mlstm_dims(cfg)
+    sdims = slstm_dims(cfg)
+    n_seg, m_per = _segment_shape(cfg)
+    h = embed_tokens(params["embed"], token)
+    new_cache: List = []
+    ci = 0
+    for si in range(n_seg):
+        for mi in range(m_per):
+            layer = jax.tree_util.tree_map(
+                lambda l: l[si][mi], params["mlstm"]
+            )
+            x = rms_norm(h, layer["norm"], cfg.norm_eps)
+            st, y = mlstm_decode_step(layer["cell"], mdims, cache[ci], x)
+            h = h + y
+            new_cache.append(st)
+            ci += 1
+        if cfg.xlstm.slstm_every:
+            layer = jax.tree_util.tree_map(lambda l: l[si], params["slstm"])
+            x = rms_norm(h, layer["norm"], cfg.norm_eps)
+            st, y = slstm_decode_step(layer["cell"], sdims, cache[ci], x)
+            h = h + y
+            new_cache.append(st)
+            ci += 1
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return new_cache, lm_logits(h, params["embed"], None)[:, 0]
+
+
+def build_xlstm(cfg: ModelConfig) -> Model:
+    return Model(
+        config=cfg,
+        init=lambda rng: init_xlstm(rng, cfg),
+        loss=lambda p, b: xlstm_loss(p, cfg, b),
+        prefill=lambda p, b: xlstm_prefill(p, cfg, b),
+        init_cache=functools.partial(xlstm_init_cache, cfg),
+        decode_step=lambda p, c, t, pos, **kw: xlstm_decode_step(
+            p, cfg, c, t, pos, **kw
+        ),
+    )

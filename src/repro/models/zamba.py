@@ -1,0 +1,235 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): a Mamba2 backbone with ONE
+shared transformer block (attention + MLP) whose weights are re-used at
+every interleave point (every ``hybrid_shared_every``-th Mamba layer).
+
+Train/prefill: inner scan over each segment's stacked Mamba layers, the
+shared block applied between segments (python loop over n_segments — the
+shared block's params are a single copy, so HLO stays small).
+Decode: unrolled; Mamba layers carry (conv, ssm) state, the shared block
+keeps a (windowed) ring KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import (
+    Model,
+    cross_entropy,
+    next_token_loss,
+    embed_tokens,
+    init_embedding,
+    lm_logits,
+)
+from repro.models.cache import (
+    AttnCache,
+    attn_cache_spec,
+    cache_valid_mask,
+    init_attn_cache,
+    update_attn_cache,
+)
+from repro.models.layers.attention import (
+    reshard_for_attention,
+    attention_output,
+    blockwise_attention,
+    decode_attention,
+    init_attention,
+    project_qkv,
+)
+from repro.models.layers.mamba2 import (
+    Mamba2Cache,
+    dims_from_config,
+    init_mamba2,
+    init_mamba2_cache,
+    mamba2_decode_step,
+    mamba2_forward,
+)
+from repro.models.layers.mlp import init_mlp, mlp
+from repro.models.layers.norms import rms_norm
+from repro.models.runtime_flags import maybe_scan
+from repro.models.sharding import shard
+
+PyTree = Any
+
+
+def _segments(cfg: ModelConfig) -> List[int]:
+    """Mamba-layer counts per segment; the shared block runs after every
+    full segment (not after a trailing partial one)."""
+    k = cfg.hybrid_shared_every
+    if k == 0:
+        return [cfg.n_layers]
+    n_full = cfg.n_layers // k
+    rem = cfg.n_layers - n_full * k
+    return [k] * n_full + ([rem] if rem else [])
+
+
+def init_zamba(key, cfg: ModelConfig) -> Dict[str, PyTree]:
+    ke, km, ka, kf = jax.random.split(key, 4)
+    dims = dims_from_config(cfg)
+    dtype = cfg.param_dtype
+    segs = _segments(cfg)
+
+    def init_m(k):
+        return {
+            "norm": jnp.zeros((cfg.d_model,), dtype),
+            "cell": init_mamba2(k, dims, dtype),
+        }
+
+    m_keys = jax.random.split(km, cfg.n_layers)
+    mamba = jax.vmap(init_m)(m_keys)
+    params = {
+        "embed": init_embedding(ke, cfg.vocab, cfg.d_model, dtype),
+        "mamba": mamba,  # stacked (n_layers, ...); sliced per segment
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.hybrid_shared_every:
+        params["shared"] = {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attention(
+                ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.resolved_head_dim, False, dtype,
+            ),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": init_mlp(kf, cfg.d_model, cfg.d_ff, dtype),
+        }
+    return params
+
+
+def _shared_block(params, cfg: ModelConfig, h: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    s = params["shared"]
+    x = rms_norm(h, s["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(s["attn"], x, positions, cfg.rope_theta)
+    q, k, v = reshard_for_attention(q, k, v)
+    attn = blockwise_attention(
+        q, k, v, causal=True, window=cfg.attn.sliding_window
+    )
+    h = h + attention_output(s["attn"], attn)
+    x = rms_norm(h, s["ln2"], cfg.norm_eps)
+    h = h + mlp(s["mlp"], x)
+    return shard(h, "batch", "seq", None)
+
+
+def zamba_hidden(params, cfg: ModelConfig, tokens: jax.Array,
+                 remat: bool = True) -> jax.Array:
+    dims = dims_from_config(cfg)
+    h = embed_tokens(params["embed"], tokens)
+    B, T = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    segs = _segments(cfg)
+
+    def m_body(hh, layer):
+        x = rms_norm(hh, layer["norm"], cfg.norm_eps)
+        hh = hh + mamba2_forward(layer["cell"], dims, x)
+        return shard(hh, "batch", "seq", None), None
+
+    if remat:
+        m_body = jax.checkpoint(m_body, prevent_cse=False)
+    off = 0
+    for si, seg_len in enumerate(segs):
+        seg = jax.tree_util.tree_map(
+            lambda l: l[off: off + seg_len], params["mamba"]
+        )
+        h, _ = maybe_scan(m_body, h, seg)
+        off += seg_len
+        if cfg.hybrid_shared_every and seg_len == cfg.hybrid_shared_every:
+            h = _shared_block(params, cfg, h, positions)
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def zamba_loss(params, cfg: ModelConfig, batch):
+    h = zamba_hidden(params, cfg, batch["tokens"])
+    loss = next_token_loss(h, params["embed"], None, batch["labels"])
+    return loss, {"ce": loss}
+
+
+def zamba_prefill(params, cfg: ModelConfig, batch):
+    h = zamba_hidden(params, cfg, batch["tokens"], remat=False)
+    return lm_logits(h[:, -1:, :], params["embed"], None)[:, 0]
+
+
+# -- decode -----------------------------------------------------------------
+
+
+def zamba_init_cache(cfg: ModelConfig, batch: int, length: int,
+                     dtype=None, force_local: bool = False,
+                     spec_only: bool = False) -> List:
+    """[mamba states ... interleaved with shared-block AttnCaches].
+
+    The shared block's cache is windowed (cfg.attn.sliding_window), which
+    keeps long_500k memory bounded; each invocation point has its OWN kv
+    cache (weights are shared, activations are not).
+    """
+    dtype = dtype or cfg.param_dtype
+    dims = dims_from_config(cfg)
+    segs = _segments(cfg)
+    w = cfg.attn.sliding_window
+    s_attn = min(length, w) if w > 0 else length
+    caches: List = []
+    for seg_len in segs:
+        for _ in range(seg_len):
+            caches.append(init_mamba2_cache(batch, dims, dtype))
+        if cfg.hybrid_shared_every and seg_len == cfg.hybrid_shared_every:
+            caches.append(
+                init_attn_cache(batch, s_attn, cfg.n_kv_heads,
+                                cfg.resolved_head_dim, dtype)
+            )
+    if spec_only:
+        caches = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), caches
+        )
+    return caches
+
+
+def zamba_decode_step(params, cfg: ModelConfig, cache: List,
+                      token: jax.Array, pos: jax.Array,
+                      force_local: bool = False):
+    del force_local
+    dims = dims_from_config(cfg)
+    B = token.shape[0]
+    h = embed_tokens(params["embed"], token)
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    segs = _segments(cfg)
+    new_cache: List = []
+    ci = 0
+    li = 0
+    for seg_len in segs:
+        for _ in range(seg_len):
+            layer = jax.tree_util.tree_map(lambda l: l[li], params["mamba"])
+            x = rms_norm(h, layer["norm"], cfg.norm_eps)
+            st, y = mamba2_decode_step(layer["cell"], dims, cache[ci], x)
+            h = h + y
+            new_cache.append(st)
+            ci += 1
+            li += 1
+        if cfg.hybrid_shared_every and seg_len == cfg.hybrid_shared_every:
+            s = params["shared"]
+            x = rms_norm(h, s["ln1"], cfg.norm_eps)
+            q, k, v = project_qkv(s["attn"], x, positions, cfg.rope_theta)
+            c = update_attn_cache(cache[ci], k, v, pos)
+            valid = cache_valid_mask(c.k.shape[1], pos, B)
+            attn = decode_attention(q, c.k, c.v, valid)
+            h = h + attention_output(s["attn"], attn)
+            x = rms_norm(h, s["ln2"], cfg.norm_eps)
+            h = h + mlp(s["mlp"], x)
+            new_cache.append(c)
+            ci += 1
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return new_cache, lm_logits(h, params["embed"], None)[:, 0]
+
+
+def build_zamba(cfg: ModelConfig) -> Model:
+    return Model(
+        config=cfg,
+        init=lambda rng: init_zamba(rng, cfg),
+        loss=lambda p, b: zamba_loss(p, cfg, b),
+        prefill=lambda p, b: zamba_prefill(p, cfg, b),
+        init_cache=functools.partial(zamba_init_cache, cfg),
+        decode_step=lambda p, c, t, pos, **kw: zamba_decode_step(
+            p, cfg, c, t, pos, **kw
+        ),
+    )

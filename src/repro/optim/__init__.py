@@ -1,0 +1,22 @@
+"""Pure-JAX optimizers (no optax in this environment)."""
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    sgd,
+    apply_updates,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.schedule import constant, cosine_decay, warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "apply_updates",
+    "global_norm",
+    "clip_by_global_norm",
+    "constant",
+    "cosine_decay",
+    "warmup_cosine",
+]

@@ -1,0 +1,31 @@
+"""Shared utilities: pytree flattening, HLO analysis, memory math, logging."""
+from repro.utils.pytree import (
+    tree_size_bytes,
+    tree_num_params,
+    tree_to_flat_vector,
+    flat_vector_to_tree,
+    tree_shape_dtype,
+    tree_zeros_like_spec,
+    tree_allclose,
+)
+from repro.utils.hlo import collective_bytes, count_collectives
+from repro.utils.mem import (
+    HardwareSpec,
+    TPU_V5E,
+    bytes_to_human,
+)
+
+__all__ = [
+    "tree_size_bytes",
+    "tree_num_params",
+    "tree_to_flat_vector",
+    "flat_vector_to_tree",
+    "tree_shape_dtype",
+    "tree_zeros_like_spec",
+    "tree_allclose",
+    "collective_bytes",
+    "count_collectives",
+    "HardwareSpec",
+    "TPU_V5E",
+    "bytes_to_human",
+]

@@ -1,0 +1,177 @@
+"""Analytic FLOP/byte models per (architecture x input shape).
+
+Why analytic: XLA's ``cost_analysis()`` counts while-loop bodies once, so
+any scanned computation (layer stacks, flash-attention tiles, SSD chunks,
+the chunked CE loss) is undercounted in the compiled artifact. The
+roofline's compute term therefore uses these closed-form counts; the
+measured HLO numbers are reported alongside for reference.
+
+Definitions (per GLOBAL step, fp operations, multiply-add = 2 FLOPs):
+
+  MODEL_FLOPS   — the useful math: 6·N_active·tokens (train) or
+                  2·N_active·tokens (prefill/decode) + exact attention
+                  term (causal/windowed).
+  EXEC_FLOPS    — what actually executes: MODEL_FLOPS inflated by
+                  (a) full-remat recompute (+1 forward in training),
+                  (b) MoE capacity over-provisioning (capacity_factor),
+                  (c) attention block-skip granularity (tile-rounded
+                  causal mask).
+
+The ratio MODEL/EXEC is §Roofline's "useful compute" metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FlopsReport:
+    model_flops: float
+    exec_flops: float
+    attn_flops: float          # included in both totals
+    hbm_bytes_analytic: float  # per-device streaming traffic estimate
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / max(self.exec_flops, 1.0)
+
+
+def _attn_tokens_sq(cfg: ModelConfig, T: int, tile: int = 512,
+                    exact: bool = False) -> tuple[float, float]:
+    """(useful, executed) sum over layers of per-query average key count.
+
+    Causal: T(T+1)/2 useful; executed rounds the mask to (tile x tile)
+    blocks (the lax.cond skip granularity). Windowed layers clip to the
+    window. Returns per-batch-element totals summed over layers.
+    """
+    from repro.models.decoder import layer_windows
+
+    if cfg.family in ("ssm",) and cfg.xlstm is not None:
+        return 0.0, 0.0
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(cfg.hybrid_shared_every, 1)
+        wins = [cfg.attn.sliding_window] * n_attn
+    elif cfg.family == "audio":
+        wins = [0] * cfg.n_layers  # decoder self-attn; encoder added below
+    else:
+        wins = layer_windows(cfg)
+    useful = exec_ = 0.0
+    n_tiles = max(T // tile, 1)
+    for w in wins:
+        if w and w < T:
+            u = T * min(w, T)  # each query sees <= window keys
+            blocks = n_tiles * (min(w, T) // tile + 2)
+        else:
+            u = T * (T + 1) / 2
+            blocks = n_tiles * (n_tiles + 1) / 2
+        useful += u
+        exec_ += blocks * tile * tile
+    return useful, exec_
+
+
+def flops_for(cfg: ModelConfig, shape: InputShape,
+              n_chips: int = 256) -> FlopsReport:
+    B, T = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    nq = cfg.n_heads
+    n_active = cfg.num_active_params()
+    n_total = cfg.num_params()
+    itemsize = 2  # bf16 params
+
+    if shape.kind == "train":
+        tokens = B * T
+        dense_model = 6.0 * n_active * tokens
+        # remat: +1 forward recompute => (2+4+2)/6 = 4/3 of the 6N·D
+        dense_exec = 8.0 * n_active * tokens
+        if cfg.moe is not None:
+            # capacity-padded expert matmuls (dropped slots still compute)
+            m = cfg.moe
+            expert = 3 * cfg.d_model * cfg.d_ff
+            routed_model = 6.0 * cfg.n_layers * m.top_k * expert * tokens
+            routed_exec = routed_model * m.capacity_factor * (8 / 6)
+            dense_exec += routed_exec - routed_model * (8 / 6)
+        u_sq, e_sq = _attn_tokens_sq(cfg, T)
+        attn_model = 6.0 * 2 * B * nq * hd * u_sq      # qk + av, fwd+bwd
+        attn_exec = 8.0 * 2 * B * nq * hd * e_sq       # + remat recompute
+        if cfg.family == "audio":
+            S = cfg.n_audio_frames
+            enc = 2.0 * B * cfg.n_heads * hd * cfg.n_encoder_layers * S * S
+            attn_model += 6.0 * enc / 2
+            attn_exec += 8.0 * enc / 2
+        mf = dense_model + attn_model
+        ef = dense_exec + attn_exec
+        # HBM traffic/device: params+grads+moments churn + activations
+        param_traffic = n_total * (itemsize * 3 + 4 * 4) / n_chips
+        act_traffic = (
+            tokens * cfg.d_model * itemsize * cfg.n_layers * 8 / n_chips
+        )
+        return FlopsReport(mf, ef, attn_model, param_traffic + act_traffic)
+
+    if shape.kind == "prefill":
+        tokens = B * T
+        dense = 2.0 * n_active * tokens
+        dense_exec = dense
+        if cfg.moe is not None:
+            m = cfg.moe
+            expert = 3 * cfg.d_model * cfg.d_ff
+            routed = 2.0 * cfg.n_layers * m.top_k * expert * tokens
+            dense_exec += routed * (m.capacity_factor - 1.0)
+        u_sq, e_sq = _attn_tokens_sq(cfg, T)
+        attn_model = 2.0 * 2 * B * nq * hd * u_sq
+        attn_exec = 2.0 * 2 * B * nq * hd * e_sq
+        if cfg.family == "audio":
+            S = cfg.n_audio_frames
+            enc = 2.0 * 2 * B * cfg.n_heads * hd * cfg.n_encoder_layers * S * S
+            attn_model += enc
+            attn_exec += enc
+        param_traffic = n_active * itemsize / n_chips
+        act_traffic = tokens * cfg.d_model * itemsize * cfg.n_layers * 4 / n_chips
+        return FlopsReport(
+            dense + attn_model, dense_exec + attn_exec, attn_model,
+            param_traffic + act_traffic,
+        )
+
+    # decode: ONE token per sequence against a length-T cache
+    tokens = B
+    dense = 2.0 * n_active * tokens
+    dense_exec = dense
+    if cfg.moe is not None:
+        m = cfg.moe
+        expert = 3 * cfg.d_model * cfg.d_ff
+        routed = 2.0 * cfg.n_layers * m.top_k * expert * tokens
+        dense_exec += routed * (m.capacity_factor - 1.0)
+    # attention reads the whole (or windowed) cache once per layer
+    from repro.models.decoder import layer_windows
+
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        attn = 0.0
+        state_bytes = 0.0
+    elif cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(cfg.hybrid_shared_every, 1)
+        w = cfg.attn.sliding_window
+        S_eff = min(w, T) if w else T
+        attn = 2.0 * 2 * B * nq * hd * S_eff * n_attn
+        state_bytes = 0.0
+    else:
+        force_local = shape.name == "long_500k"
+        wins = layer_windows(cfg, force_local=force_local)
+        S_layers = sum(min(w, T) if w else T for w in wins)
+        attn = 2.0 * 2 * B * nq * hd * S_layers
+        state_bytes = 0.0
+    param_traffic = n_active * itemsize / n_chips
+    # decode is cache-bandwidth-bound: the whole live cache streams once
+    from repro.models import build_model
+    from repro.utils.pytree import tree_size_bytes
+
+    model = build_model(cfg)
+    cache = model.init_cache(
+        B, T, spec_only=True, force_local=shape.name == "long_500k"
+    )
+    cache_traffic = tree_size_bytes(cache) / n_chips
+    return FlopsReport(
+        dense + attn, dense_exec + attn, attn,
+        param_traffic + cache_traffic + state_bytes,
+    )

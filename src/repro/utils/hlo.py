@@ -1,0 +1,231 @@
+"""HLO-text analysis: collective-byte accounting for the roofline.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes but (a) NOT collective
+traffic and (b) counts while-loop (lax.scan) bodies ONCE. This module
+parses the optimized HLO text computation-by-computation, walks the call
+graph (entry -> while bodies / conditional branches), extracts loop trip
+counts from the loop-condition constants, and sums collective bytes with
+the correct multiplicity.
+
+Byte model per op (ring algorithms, per-device bytes crossing links):
+  all-gather        result * (g-1)/g
+  all-reduce        result * 2(g-1)/g
+  reduce-scatter    result * (g-1)           (result is the scattered shard)
+  all-to-all        result * (g-1)/g
+  collective-permute result * 1
+Unknown group size falls back to the full buffer (upper bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_REPLICA_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# computation header: `%name (params) -> type {` or `ENTRY %name (...) {`
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->.*\{\s*$")
+_CALLED_RE = re.compile(
+    r"(?:body|condition|to_apply|calls|branch_computations)=\{?%?([\w\.\-]+(?:, *%?[\w\.\-]+)*)\}?"
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1 if dims == "" else int(
+            np.prod([int(d) for d in dims.split(",") if d])
+        )
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _REPLICA_GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _REPLICA_GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        if first:
+            return len(first.split(","))
+    return 0
+
+
+def _header_name(line: str) -> Optional[str]:
+    """Computation header: starts at column 0 with '%name (' or
+    'ENTRY %name (' and ends with '{'. Param lists may contain nested
+    parens (tuple types), so only the prefix is parsed."""
+    if not line or line[0].isspace():
+        return None
+    if not line.rstrip().endswith("{"):
+        return None
+    s = line
+    if s.startswith("ENTRY"):
+        s = s[len("ENTRY"):].lstrip()
+    if not (s.startswith("%") or s[:1].isalpha()):
+        return None
+    s = s.lstrip("%")
+    name = re.split(r"[\s(]", s, 1)[0]
+    return name or None
+
+
+def split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        name = _header_name(line)
+        if name is not None:
+            cur = name
+            comps[cur] = []
+            continue
+        if cur is not None:
+            s = line.strip()
+            if s == "}":
+                cur = None
+                continue
+            comps[cur].append(s)
+    return comps
+
+
+def entry_name(hlo_text: str) -> Optional[str]:
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            return _header_name(line)
+    return None
+
+
+def _loop_trip_count(cond_lines: List[str]) -> int:
+    """Largest s32/u32 constant in the loop condition ~= trip count."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"[su]32\[\]\s+constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, float]
+    bytes_moved: Dict[str, float]
+    buffer_bytes: Dict[str, float]
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_moved.values()))
+
+    @property
+    def total_count(self) -> float:
+        return float(sum(self.counts.values()))
+
+
+def analyze_collectives(hlo_text: str) -> CollectiveStats:
+    comps = split_computations(hlo_text)
+    entry = entry_name(hlo_text)
+    counts = {k: 0.0 for k in _COLLECTIVES}
+    moved = {k: 0.0 for k in _COLLECTIVES}
+    raw = {k: 0.0 for k in _COLLECTIVES}
+
+    def line_collective(s: str):
+        for coll in _COLLECTIVES:
+            if re.search(rf"\b{coll}(?:-start)?\(", s):
+                if f"{coll}-done(" in s:
+                    return None
+                return coll
+        return None
+
+    visited_stack: List[str] = []
+
+    def walk(comp: str, mult: float):
+        if comp not in comps or comp in visited_stack:
+            return
+        visited_stack.append(comp)
+        for s in comps[comp]:
+            coll = line_collective(s)
+            if coll is not None:
+                lhs = s.split(f" {coll}", 1)[0]
+                nbytes = _shape_bytes(lhs)
+                if nbytes:
+                    g = _group_size(s)
+                    if coll == "all-gather":
+                        f = (g - 1) / g if g > 1 else 1.0
+                    elif coll == "all-reduce":
+                        f = 2 * (g - 1) / g if g > 1 else 1.0
+                    elif coll == "reduce-scatter":
+                        f = (g - 1) if g > 1 else 1.0
+                    elif coll == "all-to-all":
+                        f = (g - 1) / g if g > 1 else 1.0
+                    else:
+                        f = 1.0
+                    counts[coll] += mult
+                    moved[coll] += nbytes * f * mult
+                    raw[coll] += nbytes * mult
+                continue
+            if " while(" in s or s.startswith("while(") or re.search(r"=\s*\S*\s*while\(", s):
+                mb = re.search(r"body=%?([\w\.\-]+)", s)
+                mc = re.search(r"condition=%?([\w\.\-]+)", s)
+                if mb:
+                    trips = 1
+                    if mc and mc.group(1) in comps:
+                        trips = _loop_trip_count(comps[mc.group(1)])
+                    walk(mb.group(1), mult * trips)
+                continue
+            if "conditional(" in s:
+                mbr = re.search(r"branch_computations=\{([^}]*)\}", s)
+                branches = []
+                if mbr:
+                    branches = [
+                        b.strip().lstrip("%") for b in mbr.group(1).split(",")
+                    ]
+                else:
+                    branches = re.findall(
+                        r"(?:true_computation|false_computation)=%?([\w\.\-]+)", s
+                    )
+                # conservative: a data-dependent branch may always be taken
+                for b in branches:
+                    walk(b, mult)
+                continue
+            for attr in ("calls", "to_apply"):
+                m = re.search(rf"{attr}=%?([\w\.\-]+)", s)
+                if m:
+                    walk(m.group(1), mult)
+        visited_stack.pop()
+
+    if entry:
+        walk(entry, 1.0)
+    else:  # fallback: flat scan, no multiplicity
+        for comp in comps:
+            walk(comp, 1.0)
+    return CollectiveStats(counts=counts, bytes_moved=moved, buffer_bytes=raw)
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return analyze_collectives(hlo_text).total_bytes
+
+
+def count_collectives(hlo_text: str) -> Dict[str, float]:
+    return analyze_collectives(hlo_text).counts

@@ -1,0 +1,96 @@
+"""Pytree helpers used across the aggregation service and model stack.
+
+The aggregation engines treat a model update as an arbitrary pytree of
+arrays (exactly how IBMFL treats a model update as a list of ndarrays).
+These helpers provide the flat-vector view used by fusion kernels and the
+bookkeeping (sizes, parameter counts) used by the workload classifier.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_num_params(tree: PyTree) -> int:
+    """Total number of scalar parameters in a pytree of arrays."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(int(np.prod(l.shape)) if hasattr(l, "shape") else 1 for l in leaves))
+
+
+def tree_size_bytes(tree: PyTree) -> int:
+    """Total byte size of a pytree of arrays (or ShapeDtypeStructs)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        shape = getattr(leaf, "shape", ())
+        dtype = np.dtype(getattr(leaf, "dtype", np.float32))
+        total += int(np.prod(shape)) * dtype.itemsize
+    return total
+
+
+def tree_shape_dtype(tree: PyTree) -> PyTree:
+    """Map a pytree of arrays to ShapeDtypeStructs (no data)."""
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree
+    )
+
+
+def tree_to_flat_vector(tree: PyTree, dtype=None) -> jnp.ndarray:
+    """Concatenate every leaf into a single 1-D vector.
+
+    This is the canonical layout the fusion kernels operate on: fusion
+    algorithms are elementwise (or act per-coordinate across clients), so a
+    flat view loses nothing and lets one kernel serve every architecture.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), dtype=dtype or jnp.float32)
+    flat = [jnp.ravel(l) for l in leaves]
+    vec = jnp.concatenate(flat)
+    if dtype is not None:
+        vec = vec.astype(dtype)
+    return vec
+
+
+def flat_vector_to_tree(vec: jnp.ndarray, like: PyTree) -> PyTree:
+    """Inverse of :func:`tree_to_flat_vector` given a template pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out = []
+    offset = 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        chunk = jax.lax.dynamic_slice_in_dim(vec, offset, n, 0)
+        out.append(chunk.reshape(leaf.shape).astype(leaf.dtype))
+        offset += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_zeros_like_spec(spec: PyTree) -> PyTree:
+    """Materialize zeros for a pytree of ShapeDtypeStructs."""
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def tree_allclose(a: PyTree, b: PyTree, rtol=1e-5, atol=1e-6) -> bool:
+    """Structural + numerical equality of two pytrees."""
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    if ta != tb:
+        return False
+    return all(
+        np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+        for x, y in zip(la, lb)
+    )
+
+
+def tree_map_with_path_names(fn: Callable[[str, Any], Any], tree: PyTree) -> PyTree:
+    """tree_map with a '/'-joined string path as the first argument."""
+
+    def _go(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        return fn(name, leaf)
+
+    return jax.tree_util.tree_map_with_path(_go, tree)

@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the real single CPU device (the dry-run alone forces 512
+# host devices, in its own process). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

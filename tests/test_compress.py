@@ -1,0 +1,72 @@
+"""Quantized transport + error feedback (beyond-paper, core/compress.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compress import (
+    ErrorFeedbackCompressor,
+    compression_ratio,
+    dequantize,
+    quantize,
+)
+from repro.core.fusion import FedAvg
+from repro.core.local import LocalEngine
+
+RNG = np.random.default_rng(21)
+
+
+def test_quantize_roundtrip_error_bounded():
+    v = jnp.asarray(RNG.normal(size=(5000,)).astype(np.float32))
+    q, s = quantize(v)
+    back = dequantize(q, s)
+    # error bounded by half a quantization step per block
+    err = np.abs(np.asarray(back - v))
+    step = np.repeat(np.asarray(s), 2048)[: v.shape[0]]
+    assert (err <= step / 2 + 1e-7).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 5000), seed=st.integers(0, 99))
+def test_quantize_shapes_property(n, seed):
+    r = np.random.default_rng(seed)
+    v = jnp.asarray(r.normal(size=(n,)).astype(np.float32) * 10)
+    q, s = quantize(v)
+    assert q.shape == (n,) and q.dtype == jnp.int8
+    back = dequantize(q, s)
+    assert back.shape == (n,)
+    assert np.isfinite(np.asarray(back)).all()
+
+
+def test_error_feedback_compensates():
+    """Mean of EF-compressed repeated updates converges to the true mean
+    (the residual carries what quantization dropped)."""
+    block = 256
+    ef = ErrorFeedbackCompressor(block=block)
+    true = jnp.asarray(RNG.normal(size=(1024,)).astype(np.float32) * 1e-3)
+    acc = np.zeros(1024, np.float64)
+    T = 30
+    for t in range(T):
+        q, s = ef.compress(0, true)
+        acc += np.asarray(dequantize(q, s, block), np.float64)
+    np.testing.assert_allclose(acc / T, np.asarray(true), atol=2e-5)
+
+
+def test_compressed_fedavg_close_to_exact():
+    n, p = 16, 4096
+    u = RNG.normal(size=(n, p)).astype(np.float32)
+    w = RNG.uniform(1, 10, size=(n,)).astype(np.float32)
+    ef = ErrorFeedbackCompressor()
+    deq = np.stack([
+        np.asarray(dequantize(*ef.compress(i, jnp.asarray(u[i]))))
+        for i in range(n)
+    ])
+    eng = LocalEngine(strategy="jnp")
+    exact = np.asarray(eng.fuse(FedAvg(), u, w))
+    approx = np.asarray(eng.fuse(FedAvg(), deq, w))
+    scale = np.abs(u).max()
+    assert np.abs(exact - approx).max() < scale / 127  # one q-step
+
+
+def test_compression_ratio():
+    assert 3.9 < compression_ratio(1 << 20) <= 4.0

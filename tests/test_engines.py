@@ -1,0 +1,110 @@
+"""Engine equivalence (paper §IV-C): every engine computes the same fusion
+formula. Single-device in-process; 8-device via subprocess (the dry-run
+alone may force host device counts, never the test process)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DistributedEngine, LocalEngine
+from repro.core.fusion import (
+    ClippedAvg,
+    CoordMedian,
+    FedAvg,
+    GeometricMedian,
+    IterAvg,
+    Krum,
+    TrimmedMean,
+    Zeno,
+)
+
+ALL_FUSIONS = [
+    FedAvg(), IterAvg(), ClippedAvg(clip_norm=3.0), CoordMedian(),
+    TrimmedMean(beta=0.2), Krum(n_byzantine=2), Zeno(n_suspect=2),
+    GeometricMedian(),
+]
+
+
+@pytest.fixture(scope="module")
+def data(rng=np.random.default_rng(1)):
+    u = rng.normal(size=(13, 257)).astype(np.float32)
+    w = rng.uniform(1, 5, size=(13,)).astype(np.float32)
+    return u, w
+
+
+@pytest.mark.parametrize("fusion", ALL_FUSIONS, ids=lambda f: f.name)
+def test_local_pallas_matches_jnp(fusion, data):
+    u, w = data
+    a = np.asarray(LocalEngine(strategy="jnp").fuse(fusion, u, w))
+    b = np.asarray(LocalEngine(strategy="pallas").fuse(fusion, u, w))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("fusion", ALL_FUSIONS, ids=lambda f: f.name)
+def test_distributed_1dev_matches_local(fusion, data):
+    u, w = data
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    a = np.asarray(LocalEngine(strategy="jnp").fuse(fusion, u, w))
+    b = np.asarray(DistributedEngine(mesh=mesh).fuse(fusion, u, w))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_streamed_memory_cap_matches_full(data):
+    u, w = data
+    full = np.asarray(LocalEngine(strategy="jnp").fuse(FedAvg(), u, w))
+    row_bytes = u.shape[1] * 4
+    capped = LocalEngine(strategy="jnp", memory_cap_bytes=row_bytes * 3)
+    out = np.asarray(capped.fuse(FedAvg(), u, w))
+    np.testing.assert_allclose(out, full, rtol=1e-5, atol=1e-6)
+
+
+def test_memory_cap_rejects_nonstreamable(data):
+    u, w = data
+    capped = LocalEngine(strategy="jnp", memory_cap_bytes=u.shape[1] * 4 * 2)
+    with pytest.raises(MemoryError):
+        capped.fuse(CoordMedian(), u, w)
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    from repro.core import DistributedEngine, LocalEngine
+    from repro.core.fusion import (FedAvg, IterAvg, ClippedAvg, CoordMedian,
+                                   TrimmedMean, Krum, Zeno, GeometricMedian)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    rng = np.random.default_rng(1)
+    u = rng.normal(size=(13, 257)).astype(np.float32)
+    w = rng.uniform(1, 5, size=(13,)).astype(np.float32)
+    le = LocalEngine(strategy="jnp")
+    for hier in (False, True):
+        de = DistributedEngine(mesh=mesh, hierarchical=hier)
+        for f in (FedAvg(), IterAvg(), ClippedAvg(clip_norm=3.0),
+                  CoordMedian(), TrimmedMean(beta=0.2), Krum(n_byzantine=2),
+                  Zeno(n_suspect=2), GeometricMedian()):
+            if hier and not f.reducible:
+                continue
+            a = np.asarray(le.fuse(f, u, w))
+            b = np.asarray(de.fuse(f, u, w))
+            assert np.allclose(a, b, rtol=1e-4, atol=1e-5), (f.name, hier)
+    print("MULTI_DEVICE_OK")
+""")
+
+
+def test_multi_device_equivalence_subprocess():
+    """2x2x2 pod mesh on 8 forced host devices, all fusions + hierarchical."""
+    r = subprocess.run(
+        [sys.executable, "-c", _SUBPROC],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+    )
+    assert "MULTI_DEVICE_OK" in r.stdout, r.stderr[-3000:]

@@ -1,0 +1,170 @@
+"""Unit + property tests for the fusion-algorithm library."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.fusion import (
+    ClippedAvg,
+    CoordMedian,
+    FedAdam,
+    FedAvg,
+    FedAvgM,
+    GeometricMedian,
+    GradAvg,
+    IterAvg,
+    Krum,
+    TrimmedMean,
+    Zeno,
+    get_fusion,
+)
+
+RNG = np.random.default_rng(42)
+
+
+def _updates(n=8, p=33):
+    return (
+        RNG.normal(size=(n, p)).astype(np.float32),
+        RNG.uniform(1, 10, size=(n,)).astype(np.float32),
+    )
+
+
+def test_fedavg_matches_paper_eq1():
+    u, w = _updates()
+    out = np.asarray(FedAvg().fuse(jnp.asarray(u), jnp.asarray(w)))
+    expect = (u * w[:, None]).sum(0) / (w.sum() + 1e-6)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_iteravg_ignores_weights():
+    u, w = _updates()
+    a = np.asarray(IterAvg().fuse(jnp.asarray(u), jnp.asarray(w)))
+    b = np.asarray(IterAvg().fuse(jnp.asarray(u), jnp.ones_like(w)))
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+    np.testing.assert_allclose(a, u.mean(0), rtol=1e-4, atol=1e-5)
+
+
+def test_clippedavg_clips_outlier():
+    u, w = _updates()
+    u[0] *= 1e4  # one huge update
+    f = ClippedAvg(clip_norm=5.0)
+    out = np.asarray(f.fuse(jnp.asarray(u), jnp.asarray(w)))
+    assert np.isfinite(out).all()
+    # fused result must stay bounded by the clip norm
+    assert np.linalg.norm(out) <= 5.0 + 1e-3
+
+
+def test_coordmedian_robust_to_minority():
+    u, w = _updates(n=9)
+    u[:3] = 1e6  # 3 of 9 byzantine
+    out = np.asarray(CoordMedian().fuse(jnp.asarray(u), jnp.asarray(w)))
+    assert np.abs(out).max() < 100.0
+
+
+def test_trimmedmean_drops_extremes():
+    u = np.vstack([np.full((1, 5), -1e6), RNG.normal(size=(6, 5)),
+                   np.full((1, 5), 1e6)]).astype(np.float32)
+    out = np.asarray(TrimmedMean(beta=0.2).fuse(jnp.asarray(u), None))
+    np.testing.assert_allclose(out, u[1:7].mean(0), rtol=1e-4, atol=1e-4)
+
+
+def test_krum_rejects_byzantine():
+    u, w = _updates(n=10, p=16)
+    u[0] = 500.0  # attacker far from the cluster
+    out = np.asarray(
+        Krum(n_byzantine=1, m=1).fuse(jnp.asarray(u), jnp.asarray(w))
+    )
+    # selected update is one of the honest ones
+    dists = np.linalg.norm(u - out[None], axis=1)
+    assert dists.argmin() != 0
+
+
+def test_multikrum_averages_m():
+    u, w = _updates(n=10, p=16)
+    f = Krum(n_byzantine=1, m=3)
+    out = np.asarray(f.fuse(jnp.asarray(u), jnp.asarray(w)))
+    assert out.shape == (16,)
+
+
+def test_zeno_drops_suspicious():
+    u, w = _updates(n=6, p=8)
+    g_val = np.ones(8, np.float32)
+    u[0] = -50 * g_val  # opposes the validation gradient
+    f = Zeno(rho=1e-3, n_suspect=1)
+    f.set_val_grad(jnp.asarray(g_val))
+    out = np.asarray(f.fuse(jnp.asarray(u), jnp.asarray(w)))
+    np.testing.assert_allclose(out, u[1:].mean(0), rtol=1e-4, atol=1e-4)
+
+
+def test_geomedian_close_to_median_under_outlier():
+    u, w = _updates(n=9, p=4)
+    u[0] = 1e5
+    w = np.ones_like(w)
+    out = np.asarray(GeometricMedian(iters=32).fuse(
+        jnp.asarray(u), jnp.asarray(w)))
+    assert np.abs(out).max() < 1e3
+
+
+def test_server_optimizers_stateful():
+    u, w = _updates(n=4, p=6)
+    f = FedAvgM(lr=1.0, momentum=0.5)
+    out1 = np.asarray(f.fuse(jnp.asarray(u), jnp.asarray(w)))
+    out2 = np.asarray(f.fuse(jnp.asarray(u), jnp.asarray(w)))
+    # second round has momentum: v2 = 0.5 v1 + g = 1.5 g
+    np.testing.assert_allclose(out2, 1.5 * out1, rtol=1e-4, atol=1e-5)
+    a = FedAdam(lr=0.1)
+    o1 = np.asarray(a.fuse(jnp.asarray(u), jnp.asarray(w)))
+    assert np.isfinite(o1).all() and o1.shape == (6,)
+
+
+# -- property tests ----------------------------------------------------------
+
+small_mat = hnp.arrays(
+    np.float32, st.tuples(st.integers(2, 12), st.integers(1, 24)),
+    elements=st.floats(-100, 100, width=32),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(u=small_mat, seed=st.integers(0, 2**16))
+def test_fedavg_permutation_invariant(u, seed):
+    r = np.random.default_rng(seed)
+    w = r.uniform(1, 5, size=u.shape[0]).astype(np.float32)
+    perm = r.permutation(u.shape[0])
+    a = np.asarray(FedAvg().fuse(jnp.asarray(u), jnp.asarray(w)))
+    b = np.asarray(FedAvg().fuse(jnp.asarray(u[perm]), jnp.asarray(w[perm])))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(u=small_mat)
+def test_median_within_bounds(u):
+    out = np.asarray(CoordMedian().fuse(jnp.asarray(u), None))
+    assert (out >= u.min(0) - 1e-5).all()
+    assert (out <= u.max(0) + 1e-5).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(u=small_mat, c=st.floats(0.1, 10.0))
+def test_fedavg_scale_equivariant(u, c):
+    w = np.ones(u.shape[0], np.float32)
+    a = np.asarray(FedAvg().fuse(jnp.asarray(u * c), jnp.asarray(w)))
+    b = np.asarray(FedAvg().fuse(jnp.asarray(u), jnp.asarray(w)))
+    np.testing.assert_allclose(a, c * b, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(u=small_mat)
+def test_fedavg_equal_weights_is_iteravg(u):
+    w = np.full(u.shape[0], 7.0, np.float32)
+    a = np.asarray(FedAvg().fuse(jnp.asarray(u), jnp.asarray(w)))
+    b = np.asarray(IterAvg().fuse(jnp.asarray(u), jnp.asarray(w)))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_registry_complete():
+    for name in ("fedavg", "iteravg", "gradavg", "clippedavg", "coordmedian",
+                 "trimmedmean", "krum", "zeno", "geomedian", "fedavgm",
+                 "fedadam"):
+        assert get_fusion(name).name == name

@@ -1,0 +1,230 @@
+"""Algorithm-1 semantics: classification, planning, monitor, seamless
+transition, store round-trip."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AggregationService,
+    Monitor,
+    Planner,
+    UpdateStore,
+    Workload,
+    WorkloadClass,
+    classify,
+    get_fusion,
+    max_clients_single_node,
+)
+from repro.utils.mem import TPU_V5E
+from repro.utils.pytree import tree_to_flat_vector
+
+RNG = np.random.default_rng(5)
+
+
+# -- workload classification ---------------------------------------------------
+
+
+def test_classify_thresholds():
+    assert classify(Workload(update_bytes=1 << 20, n_clients=4)) is \
+        WorkloadClass.VMEM_RESIDENT
+    assert classify(Workload(update_bytes=10 << 20, n_clients=100)) is \
+        WorkloadClass.HBM_LOCAL
+    assert classify(Workload(update_bytes=100 << 20, n_clients=1000)) is \
+        WorkloadClass.DISTRIBUTED
+
+
+def test_max_clients_matches_paper_shape():
+    """Paper Fig. 2: supportable clients fall as model size grows."""
+    sizes = [int(mb * 1e6) for mb in (4.6, 73, 179, 478, 956)]
+    caps = [max_clients_single_node(s) for s in sizes]
+    assert all(a > b for a, b in zip(caps, caps[1:]))
+
+
+# -- planner -------------------------------------------------------------------
+
+
+def test_planner_routes_small_local_large_distributed():
+    p = Planner(n_devices=256)
+    f = get_fusion("fedavg")
+    small = p.plan(Workload(update_bytes=5 << 20, n_clients=10), f)
+    assert small.engine == "local"
+    huge = p.plan(Workload(update_bytes=1 << 30, n_clients=10_000), f)
+    assert huge.engine == "distributed"
+
+
+def test_planner_infeasible_raises():
+    p = Planner(n_devices=1)
+    f = get_fusion("coordmedian")  # not streamable
+    with pytest.raises(MemoryError):
+        p.plan(Workload(update_bytes=1 << 30, n_clients=10_000), f)
+
+
+def test_planner_hierarchical_on_pods():
+    p = Planner(n_devices=512, n_pods=2)
+    f = get_fusion("fedavg")
+    plan = p.plan(Workload(update_bytes=1 << 30, n_clients=10_000), f)
+    assert plan.engine == "hierarchical"
+
+
+# -- monitor -------------------------------------------------------------------
+
+
+def test_monitor_threshold_and_timeout():
+    store = UpdateStore()
+    clock = {"t": 0.0}
+    mon = Monitor(store, threshold=3, timeout=1.0, poll_interval=0.1,
+                  clock=lambda: clock["t"],
+                  sleep=lambda s: clock.__setitem__("t", clock["t"] + s))
+    store.write("a", np.zeros(4, np.float32))
+    store.write("b", np.zeros(4, np.float32))
+    res = mon.wait()  # only 2 of 3 -> timeout path
+    assert not res.ready and res.count == 2 and res.waited >= 1.0
+
+    store.write("c", np.zeros(4, np.float32))
+    clock["t"] = 0.0
+    res = mon.wait()
+    assert res.ready and res.count == 3
+
+
+# -- store ---------------------------------------------------------------------
+
+
+def test_store_roundtrip_and_partition(tmp_path):
+    for backend, kw in (("memory", {}),
+                        ("disk", {"spool_dir": str(tmp_path)})):
+        store = UpdateStore(backend=backend, **kw)
+        tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                "b": np.ones(2, np.float32)}
+        lat = store.write("c1", tree, weight=3.0)
+        assert lat > 0
+        store.write("c2", np.zeros(8, np.float32), weight=1.0)
+        assert store.count() == 2
+        u, w = store.read("c1")
+        assert w == 3.0 and u.shape == (8,)
+        parts = store.partition(2)
+        assert sorted(sum(parts, [])) == ["c1", "c2"]
+        stacked, ws = store.read_stacked()
+        assert stacked.shape == (2, 8) and ws.tolist() == [3.0, 1.0]
+        store.clear()
+        assert store.count() == 0
+
+
+def test_store_write_latency_model():
+    """Fig. 12's average-write-time: scales with bytes, replication."""
+    s1 = UpdateStore(replication=1)
+    s2 = UpdateStore(replication=2)
+    u = np.zeros(1_000_000, np.float32)
+    assert s2.write("a", u) == pytest.approx(2 * s1.write("a", u))
+
+
+# -- service (Algorithm 1 end to end) ------------------------------------------
+
+
+def _mk_updates(n=6, shape=(50,)):
+    tmpl = {"w": jnp.zeros(shape)}
+    ups = [{"w": jnp.asarray(RNG.normal(size=shape), jnp.float32)}
+           for _ in range(n)]
+    ws = list(RNG.uniform(1, 5, n))
+    return tmpl, ups, ws
+
+
+def test_service_small_path_exact():
+    tmpl, ups, ws = _mk_updates()
+    svc = AggregationService(fusion="fedavg", local_strategy="jnp")
+    fused, rep = svc.aggregate(updates=ups, weights=ws, template=tmpl)
+    manual = sum(
+        w * tree_to_flat_vector(u) for u, w in zip(ups, ws)
+    ) / (sum(ws) + 1e-6)
+    np.testing.assert_allclose(
+        tree_to_flat_vector(fused), manual, rtol=1e-5, atol=1e-6
+    )
+    assert rep.plan.engine == "local"
+    assert not rep.route_next_to_store
+
+
+def test_service_store_path_with_monitor():
+    tmpl, ups, ws = _mk_updates()
+    store = UpdateStore()
+    svc = AggregationService(fusion="iteravg", store=store,
+                             monitor_timeout=0.5, local_strategy="jnp")
+    for i, u in enumerate(ups):
+        store.write(f"c{i}", u)
+    fused, rep = svc.aggregate(from_store=True, template=tmpl,
+                               expected_clients=len(ups))
+    assert rep.monitor is not None and rep.monitor.ready
+    manual = sum(tree_to_flat_vector(u) for u in ups) / len(ups)
+    np.testing.assert_allclose(
+        tree_to_flat_vector(fused), manual, rtol=1e-4, atol=1e-5
+    )
+
+
+def test_service_seamless_transition_flag():
+    """When the projected next-round load exceeds one chip, the service
+    tells clients to route updates to the store (paper §III-D3)."""
+    tmpl, ups, ws = _mk_updates(n=2, shape=(1 << 20,))  # 4 MiB updates
+    svc = AggregationService(fusion="fedavg", local_strategy="jnp")
+    _, rep = svc.aggregate(
+        updates=ups, weights=ws, template=tmpl,
+        expected_clients=100_000,  # next round: 100k clients x 4 MiB
+    )
+    assert rep.route_next_to_store
+
+
+def test_service_memory_capped_still_correct():
+    tmpl, ups, ws = _mk_updates(n=10, shape=(1000,))
+    svc = AggregationService(fusion="fedavg", local_strategy="jnp",
+                             memory_cap_bytes=3 * 4000)
+    fused, rep = svc.aggregate(updates=ups, weights=ws, template=tmpl)
+    manual = sum(
+        w * tree_to_flat_vector(u) for u, w in zip(ups, ws)
+    ) / (sum(ws) + 1e-6)
+    np.testing.assert_allclose(
+        tree_to_flat_vector(fused), manual, rtol=1e-5, atol=1e-6
+    )
+
+
+# -- planner property tests ----------------------------------------------------
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(wbytes=st.integers(1 << 10, 1 << 30), n=st.integers(1, 10_000))
+def test_planner_always_has_a_reducible_plan(wbytes, n):
+    p = Planner(n_devices=256)
+    plan = p.plan(Workload(update_bytes=wbytes, n_clients=n),
+                  get_fusion("fedavg"))
+    assert plan.feasible and plan.est_seconds > 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(wbytes=st.integers(1 << 16, 1 << 26), n1=st.integers(1, 5_000),
+       n2=st.integers(1, 5_000))
+def test_planner_cost_monotone_in_clients(wbytes, n1, n2):
+    """More clients never get cheaper for the same engine."""
+    if n1 > n2:
+        n1, n2 = n2, n1
+    p = Planner(n_devices=256)
+    f = get_fusion("fedavg")
+    for engine in ("local", "distributed"):
+        c1 = [x for x in p.candidate_plans(
+            Workload(update_bytes=wbytes, n_clients=n1), f)
+            if x.engine == engine]
+        c2 = [x for x in p.candidate_plans(
+            Workload(update_bytes=wbytes, n_clients=n2), f)
+            if x.engine == engine]
+        if c1 and c2:
+            assert c2[0].est_seconds >= c1[0].est_seconds - 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(wbytes=st.integers(1 << 10, 1 << 28), n=st.integers(1, 100_000))
+def test_classification_monotone(wbytes, n):
+    """Doubling the load never moves the class toward 'smaller'."""
+    order = [WorkloadClass.VMEM_RESIDENT, WorkloadClass.HBM_LOCAL,
+             WorkloadClass.DISTRIBUTED]
+    a = classify(Workload(update_bytes=wbytes, n_clients=n))
+    b = classify(Workload(update_bytes=wbytes, n_clients=2 * n))
+    assert order.index(b) >= order.index(a)
