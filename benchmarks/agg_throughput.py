@@ -1,0 +1,154 @@
+"""Aggregation ingest+fuse throughput: dense (seed behavior) vs the
+zero-materialization streamed pipeline vs the Pallas path.
+
+Measures one full aggregator round from a populated UpdateStore to the
+fused (P,) vector, per path:
+
+  dense_seed — the seed pipeline: ``read_stacked`` materializes the dense
+               (n, P) matrix on the host, then an eager (unjitted,
+               re-dispatched) fusion over the full matrix.
+  dense      — ``read_stacked`` + the bucketed cached-executable engine.
+  streamed   — ``UpdateStore.iter_chunks`` double-buffered blocks through
+               ``LocalEngine.fuse_stream`` (peak host ingest O(chunk*P)).
+  streamed_pallas — same pipeline with the fused Pallas kernel
+               (interpret mode on CPU: illustrative, not performant).
+
+Emits BENCH_aggregation.json with per-round seconds, rows/s and bytes/s.
+Acceptance target: streamed >= 2x dense_seed rows/s at n=4096, P=1M.
+
+Usage:
+  python benchmarks/agg_throughput.py --quick           # CI smoke
+  python benchmarks/agg_throughput.py --n 4096 --p 1000000
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LocalEngine, UpdateStore, get_fusion
+
+
+def populate(n: int, p: int, dtype: str, seed: int = 0) -> UpdateStore:
+    store = UpdateStore()
+    rng = np.random.default_rng(seed)
+    block = 256
+    for lo in range(0, n, block):
+        rows = min(block, n - lo)
+        u = rng.normal(size=(rows, p)).astype(dtype)
+        for i in range(rows):
+            store.write(f"c{lo + i:06d}", u[i], weight=1.0 + (lo + i) % 7)
+    return store
+
+
+def run_dense_seed(store: UpdateStore, fusion):
+    stacked, w = store.read_stacked()
+    u = jnp.asarray(stacked)
+    out = fusion.fuse(u, jnp.asarray(w))   # eager: fresh dispatch per round
+    return np.asarray(out)
+
+
+def make_dense_cached(strategy: str):
+    eng = LocalEngine(strategy=strategy)
+
+    def run(store: UpdateStore, fusion):
+        stacked, w = store.read_stacked()
+        return np.asarray(eng.fuse(fusion, stacked, w))
+
+    return run
+
+
+def make_streamed(strategy: str, chunk_bytes: int):
+    eng = LocalEngine(strategy=strategy)
+
+    def run(store: UpdateStore, fusion):
+        _, p, dtype = store.meta()
+        chunk = max(1, chunk_bytes // (p * dtype.itemsize))
+        fused, _ = eng.fuse_stream(fusion, store.iter_chunks(chunk))
+        return np.asarray(fused)
+
+    return run
+
+
+def bench(name, fn, store, fusion, rounds):
+    times = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        out = fn(store, fusion)
+        times.append(time.perf_counter() - t0)
+    return times, out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--p", type=int, default=1_000_000)
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--chunk-mb", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes + all paths (CI smoke)")
+    ap.add_argument("--pallas", action="store_true",
+                    help="include interpret-mode pallas at full scale")
+    ap.add_argument("--out", default="BENCH_aggregation.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.n, args.p = 512, 20_000
+
+    fusion = get_fusion("fedavg")
+    row_bytes = args.p * np.dtype(args.dtype).itemsize
+    print(f"populating store: n={args.n} P={args.p} "
+          f"({args.n * row_bytes / 1e9:.2f} GB)")
+    store = populate(args.n, args.p, args.dtype)
+
+    chunk_bytes = args.chunk_mb << 20
+    paths = {
+        "dense_seed": run_dense_seed,
+        "dense": make_dense_cached("jnp"),
+        "streamed": make_streamed("jnp", chunk_bytes),
+    }
+    if args.quick or args.pallas:
+        paths["streamed_pallas"] = make_streamed("pallas", chunk_bytes)
+
+    results = {}
+    ref = None
+    for name, fn in paths.items():
+        times, out = bench(name, fn, store, fusion, args.rounds)
+        if ref is None:
+            ref = out
+        else:
+            np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+        best = min(times)
+        results[name] = {
+            "seconds_per_round": [round(t, 4) for t in times],
+            "best_seconds": round(best, 4),
+            "rows_per_s": round(args.n / best, 1),
+            "bytes_per_s": round(args.n * row_bytes / best, 0),
+        }
+        print(f"{name:16s} best={best:8.3f}s "
+              f"rows/s={results[name]['rows_per_s']:>10} "
+              f"(rounds: {[f'{t:.2f}' for t in times]})")
+
+    speedup = (
+        results["streamed"]["rows_per_s"]
+        / results["dense_seed"]["rows_per_s"]
+    )
+    payload = {
+        "config": {
+            "n": args.n, "p": args.p, "dtype": args.dtype,
+            "chunk_mb": args.chunk_mb, "rounds": args.rounds,
+            "fusion": "fedavg", "host": "ci-cpu",
+        },
+        "results": results,
+        "speedup_streamed_vs_dense_seed": round(speedup, 2),
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"streamed vs dense_seed: {speedup:.2f}x  -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

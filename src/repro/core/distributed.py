@@ -13,21 +13,28 @@ Layouts (mesh axes: optional "pod", "data", "model"):
   * Krum / Zeno / GeoMedian: updates sharded P(None, all axes) — full
         client rows never materialize on one device; pairwise Gram blocks
         / score terms are computed per coordinate shard and psum'd.
+
+Compiled paths are PERSISTENT across rounds: the ``shard_map`` closures
+(which the seed rebuilt and re-``jax.jit``'d on every ``fuse()`` call)
+live in a per-engine CompiledCache keyed by (fusion, padded shape, dtype,
+path). Reducible rounds additionally bucket the client count to the next
+power of two (zero-weight padded rows), so elastic rounds with varying
+``n`` reuse ONE executable instead of re-tracing.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional, Sequence, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
 from repro.core.fusion.base import FusionAlgorithm
 from repro.core.fusion.robust import GeometricMedian, Krum, TrimmedMean, Zeno
+from repro.utils.compat import shard_map
+from repro.utils.jitcache import CompiledCache, bucket_rows, fusion_cache_key
 
 
 def _device_put(mesh: Mesh, x, spec: P):
@@ -55,6 +62,32 @@ class DistributedEngine:
             np.prod([self.mesh.shape[a] for a in self.client_axes])
         )
         self._n_param_shards = self.mesh.shape.get(self.param_axis, 1)
+        self.cache = CompiledCache(name=f"distributed:{id(self.mesh)}")
+
+    # -- shape bucketing -----------------------------------------------------
+    def _padded_rows(self, n: int, reducible: bool) -> int:
+        """Reducible rounds bucket n to a power of two (executable reuse);
+        order-statistic paths pad only to the shard multiple — they slice
+        padding by the REAL n inside the kernel, so their executables are
+        n-specific anyway."""
+        if reducible:
+            b = bucket_rows(n)
+            return b + ((-b) % self._n_client_shards)
+        return n + ((-n) % self._n_client_shards)
+
+    def is_warm(self, fusion, n: int, P_: int, dtype) -> bool:
+        """Would this round hit an already-compiled executable?"""
+        key = self._fuse_key(fusion, n, P_, dtype)
+        return key in self.cache
+
+    def _fuse_key(self, fusion, n: int, P_: int, dtype):
+        pn = self._padded_rows(n, fusion.reducible)
+        pad_p = (-P_) % (self._n_param_shards * self._n_client_shards)
+        n_real = None if fusion.reducible else n
+        return (
+            fusion_cache_key(fusion), pn, P_ + pad_p, np.dtype(dtype).str,
+            n_real, self.hierarchical,
+        )
 
     # -- public -------------------------------------------------------------
     def fuse(self, fusion: FusionAlgorithm, updates, weights) -> jax.Array:
@@ -63,7 +96,7 @@ class DistributedEngine:
         if weights is None:
             weights = jnp.ones((n,), jnp.float32)
         weights = fusion.effective_weights(jnp.asarray(weights, jnp.float32))
-        pad_n = (-n) % self._n_client_shards
+        pad_n = self._padded_rows(n, fusion.reducible) - n
         pad_p = (-P_) % (self._n_param_shards * self._n_client_shards)
         if pad_n or pad_p:
             updates = jnp.pad(jnp.asarray(updates), ((0, pad_n), (0, pad_p)))
@@ -76,7 +109,7 @@ class DistributedEngine:
     # -- dispatch -----------------------------------------------------------
     def _dispatch(self, fusion, updates, weights, n_real: int):
         if fusion.reducible:
-            return self._fuse_reducible(fusion, updates, weights)
+            return self._fuse_reducible(fusion, updates, weights, n_real)
         if fusion.coordinatewise:
             return self._fuse_coordinatewise(fusion, updates, weights, n_real)
         if isinstance(fusion, Krum):
@@ -89,69 +122,78 @@ class DistributedEngine:
             f"no distributed strategy for fusion {fusion.name!r}"
         )
 
-    # -- reducible: map-reduce ------------------------------------------------
-    def _fuse_reducible(self, fusion, updates, weights):
-        mesh = self.mesh
-        cspec = tuple(self.client_axes) if len(self.client_axes) > 1 else (
+    def _cspec(self):
+        return tuple(self.client_axes) if len(self.client_axes) > 1 else (
             self.client_axes[0] if self.client_axes else None
         )
-        in_u = P(cspec, self.param_axis)
-        in_w = P(cspec)
+
+    # -- reducible: map-reduce ------------------------------------------------
+    def _fuse_reducible(self, fusion, updates, weights, n_real):
+        mesh = self.mesh
+        in_u = P(self._cspec(), self.param_axis)
+        in_w = P(self._cspec())
         out = P(self.param_axis)
 
-        def mapper(u, w):
-            if fusion.needs_row_norms:
-                sq = jnp.sum(u.astype(jnp.float32) ** 2, axis=1)
-                if self._n_param_shards > 1:
-                    sq = jax.lax.psum(sq, self.param_axis)
-                wsum, tot = fusion.partial_with_norms(u, w, jnp.sqrt(sq))
-            else:
-                wsum, tot = fusion.partial(u, w)
-            if self.hierarchical:
-                # edge stage: reduce within the pod's client shards first,
-                # then the (smaller) cross-pod reduce — the paper's
-                # client-edge-cloud hierarchy on the pod axis.
-                for ax in reversed(self.client_axes):
-                    wsum = jax.lax.psum(wsum, ax)
-                    tot = jax.lax.psum(tot, ax)
-            else:
-                wsum = jax.lax.psum(wsum, self.client_axes)
-                tot = jax.lax.psum(tot, self.client_axes)
-            return fusion.combine(wsum, tot)
+        def build():
+            def mapper(u, w):
+                if fusion.needs_row_norms:
+                    sq = jnp.sum(u.astype(jnp.float32) ** 2, axis=1)
+                    if self._n_param_shards > 1:
+                        sq = jax.lax.psum(sq, self.param_axis)
+                    wsum, tot = fusion.partial_with_norms(u, w, jnp.sqrt(sq))
+                else:
+                    wsum, tot = fusion.partial(u, w)
+                if self.hierarchical:
+                    # edge stage: reduce within the pod's client shards
+                    # first, then the (smaller) cross-pod reduce — the
+                    # paper's client-edge-cloud hierarchy on the pod axis.
+                    for ax in reversed(self.client_axes):
+                        wsum = jax.lax.psum(wsum, ax)
+                        tot = jax.lax.psum(tot, ax)
+                else:
+                    wsum = jax.lax.psum(wsum, self.client_axes)
+                    tot = jax.lax.psum(tot, self.client_axes)
+                return wsum, tot
 
-        fn = shard_map(
-            mapper, mesh=mesh, in_specs=(in_u, in_w), out_specs=out,
-            check_vma=False,
-        )
+            return shard_map(
+                mapper, mesh=mesh, in_specs=(in_u, in_w),
+                out_specs=(out, P()), check_vma=False,
+            )
+
+        fn = self._key_get(fusion, updates, None, build)
         u = _device_put(mesh, updates, in_u)
         w = _device_put(mesh, jnp.asarray(weights, jnp.float32), in_w)
-        return jax.jit(fn)(u, w)
+        wsum, tot = fn(u, w)
+        # combine stays OUTSIDE the compiled closure: FedAvgM/FedAdam keep
+        # python-side server state that must update every round, not once
+        # at trace time.
+        return fusion.combine(wsum, tot)
 
     # -- coordinate-wise: shuffle (all_to_all) then local --------------------
     def _fuse_coordinatewise(self, fusion, updates, weights, n_real):
         mesh = self.mesh
-        cspec = tuple(self.client_axes) if len(self.client_axes) > 1 else (
-            self.client_axes[0] if self.client_axes else None
-        )
-        in_u = P(cspec, self.param_axis)
+        in_u = P(self._cspec(), self.param_axis)
         out = P((self.param_axis,) + tuple(self.client_axes))
 
-        def mapper(u):
-            for ax in self.client_axes:
-                u = jax.lax.all_to_all(
-                    u, ax, split_axis=1, concat_axis=0, tiled=True
-                )
-            # u now holds ALL padded client rows for a coordinate slice;
-            # drop padding rows so order statistics are exact.
-            u = u[:n_real]
-            return fusion.fuse(u, None)
+        def build():
+            def mapper(u):
+                for ax in self.client_axes:
+                    u = jax.lax.all_to_all(
+                        u, ax, split_axis=1, concat_axis=0, tiled=True
+                    )
+                # u now holds ALL padded client rows for a coordinate
+                # slice; drop padding rows so order statistics are exact.
+                u = u[:n_real]
+                return fusion.fuse(u, None)
 
-        fn = shard_map(
-            mapper, mesh=mesh, in_specs=(in_u,), out_specs=out,
-            check_vma=False,
-        )
+            return shard_map(
+                mapper, mesh=mesh, in_specs=(in_u,), out_specs=out,
+                check_vma=False,
+            )
+
+        fn = self._key_get(fusion, updates, n_real, build)
         u = _device_put(mesh, updates, in_u)
-        return jax.jit(fn)(u)
+        return fn(u)
 
     # -- Krum: psum'd Gram matrix --------------------------------------------
     def _fuse_krum(self, fusion: Krum, updates, weights, n_real):
@@ -160,19 +202,22 @@ class DistributedEngine:
         in_u = P(None, all_axes)
         out = P(all_axes)
 
-        def mapper(u):
-            uf = u.astype(jnp.float32)
-            gram = jax.lax.psum(uf @ uf.T, all_axes)
-            gram = gram[:n_real, :n_real]
-            idx = fusion.select_from_gram(gram)
-            return jnp.mean(uf[:n_real][idx], axis=0)
+        def build():
+            def mapper(u):
+                uf = u.astype(jnp.float32)
+                gram = jax.lax.psum(uf @ uf.T, all_axes)
+                gram = gram[:n_real, :n_real]
+                idx = fusion.select_from_gram(gram)
+                return jnp.mean(uf[:n_real][idx], axis=0)
 
-        fn = shard_map(
-            mapper, mesh=mesh, in_specs=(in_u,), out_specs=out,
-            check_vma=False,
-        )
+            return shard_map(
+                mapper, mesh=mesh, in_specs=(in_u,), out_specs=out,
+                check_vma=False,
+            )
+
+        fn = self._key_get(fusion, updates, n_real, build)
         u = _device_put(mesh, updates, in_u)
-        return jax.jit(fn)(u)
+        return fn(u)
 
     # -- Zeno: psum'd scores ---------------------------------------------------
     def _fuse_zeno(self, fusion: Zeno, updates, weights, n_real):
@@ -182,24 +227,27 @@ class DistributedEngine:
         out = P(all_axes)
         g_val = fusion._g_val
 
-        def mapper(u, g):
-            uf = u.astype(jnp.float32)
-            inner = jax.lax.psum(uf @ g, all_axes)[:n_real]
-            sq = jax.lax.psum(jnp.sum(uf * uf, axis=1), all_axes)[:n_real]
-            s = fusion.scores(inner, sq)
-            keep = max(n_real - fusion.n_suspect, 1)
-            _, idx = jax.lax.top_k(s, keep)
-            return jnp.mean(uf[:n_real][idx], axis=0)
+        def build():
+            def mapper(u, g):
+                uf = u.astype(jnp.float32)
+                inner = jax.lax.psum(uf @ g, all_axes)[:n_real]
+                sq = jax.lax.psum(jnp.sum(uf * uf, axis=1), all_axes)[:n_real]
+                s = fusion.scores(inner, sq)
+                keep = max(n_real - fusion.n_suspect, 1)
+                _, idx = jax.lax.top_k(s, keep)
+                return jnp.mean(uf[:n_real][idx], axis=0)
 
-        fn = shard_map(
-            mapper, mesh=mesh, in_specs=(in_u, P(all_axes)), out_specs=out,
-            check_vma=False,
-        )
+            return shard_map(
+                mapper, mesh=mesh, in_specs=(in_u, P(all_axes)),
+                out_specs=out, check_vma=False,
+            )
+
+        fn = self._key_get(fusion, updates, n_real, build)
         u = _device_put(mesh, updates, in_u)
         if g_val is None:
             g_val = jnp.mean(jnp.asarray(updates, jnp.float32), axis=0)
         g = _device_put(mesh, jnp.asarray(g_val, jnp.float32), P(all_axes))
-        return jax.jit(fn)(u, g)
+        return fn(u, g)
 
     # -- Geometric median: distributed Weiszfeld -------------------------------
     def _fuse_geomedian(self, fusion: GeometricMedian, updates, weights,
@@ -209,28 +257,40 @@ class DistributedEngine:
         in_u = P(None, all_axes)
         out = P(all_axes)
 
-        def mapper(u, w):
-            uf = u.astype(jnp.float32)[:n_real]
-            wf = w.astype(jnp.float32)[:n_real]
-            wf = wf / jnp.sum(wf)
-            z = jnp.einsum("np,n->p", uf, wf)
+        def build():
+            def mapper(u, w):
+                uf = u.astype(jnp.float32)[:n_real]
+                wf = w.astype(jnp.float32)[:n_real]
+                wf = wf / jnp.sum(wf)
+                z = jnp.einsum("np,n->p", uf, wf)
 
-            def step(z, _):
-                d2 = jax.lax.psum(
-                    jnp.sum((uf - z[None, :]) ** 2, axis=1), all_axes
-                )
-                d = jnp.sqrt(d2)
-                beta = wf / jnp.maximum(d, fusion.smooth)
-                beta = beta / jnp.sum(beta)
-                return jnp.einsum("np,n->p", uf, beta), None
+                def step(z, _):
+                    d2 = jax.lax.psum(
+                        jnp.sum((uf - z[None, :]) ** 2, axis=1), all_axes
+                    )
+                    d = jnp.sqrt(d2)
+                    beta = wf / jnp.maximum(d, fusion.smooth)
+                    beta = beta / jnp.sum(beta)
+                    return jnp.einsum("np,n->p", uf, beta), None
 
-            z, _ = jax.lax.scan(step, z, None, length=fusion.iters)
-            return z
+                z, _ = jax.lax.scan(step, z, None, length=fusion.iters)
+                return z
 
-        fn = shard_map(
-            mapper, mesh=mesh, in_specs=(in_u, P(None)), out_specs=out,
-            check_vma=False,
-        )
+            return shard_map(
+                mapper, mesh=mesh, in_specs=(in_u, P(None)), out_specs=out,
+                check_vma=False,
+            )
+
+        fn = self._key_get(fusion, updates, n_real, build)
         u = _device_put(mesh, updates, in_u)
         w = _device_put(mesh, jnp.asarray(weights, jnp.float32), P(None))
-        return jax.jit(fn)(u, w)
+        return fn(u, w)
+
+    # -- cache plumbing -------------------------------------------------------
+    def _key_get(self, fusion, padded_updates, n_real, build):
+        pn, pp = np.shape(padded_updates)
+        key = (
+            fusion_cache_key(fusion), pn, pp,
+            np.dtype(padded_updates.dtype).str, n_real, self.hierarchical,
+        )
+        return self.cache.get_jitted(key, build)

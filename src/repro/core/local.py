@@ -8,11 +8,27 @@
 Both support *chunked streaming* for reducible fusions so a memory-capped
 node can still aggregate more clients than fit at once (the knob used by
 the Fig. 1/2 memory-wall benchmarks).
+
+Compiled paths persist across rounds (the tentpole):
+
+  * dense reducible rounds bucket the client count to the next power of
+    two (zero-weight padded rows) and reuse ONE AOT-compiled executable
+    per (fusion, bucket, P, dtype) — elastic rounds stop re-tracing;
+  * the memory-capped path is a single ``lax.scan`` over fixed-size
+    client chunks (ONE executable) instead of the seed's Python loop of
+    per-chunk jit dispatches;
+  * ``fuse_stream`` consumes (chunk, P) blocks straight off an
+    ``UpdateStore.iter_chunks`` iterator — the dense (n, P) matrix never
+    exists on the host — accumulating with one cached step executable.
+
+``combine`` always runs OUTSIDE the compiled artifacts because FedAvgM /
+FedAdam carry python-side server state that must advance every round.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import time
+from typing import Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +40,22 @@ from repro.kernels.robust_fusion.kernel import (
     coordmedian_pallas,
     trimmedmean_pallas,
 )
+from repro.utils.jitcache import CompiledCache, bucket_rows, fusion_cache_key
+
+# fusions whose weighted-sum partial routes through the fused Pallas kernel
+_PALLAS_WSUM = ("fedavg", "gradavg", "iteravg", "fedavgm", "fedadam")
+
+
+@dataclasses.dataclass
+class StreamReport:
+    """Phase accounting for one streamed aggregation."""
+
+    ingest_seconds: float = 0.0    # stalls waiting on store blocks
+    compile_seconds: float = 0.0   # executable build (0.0 on warm rounds)
+    compute_seconds: float = 0.0   # device time in the step executable
+    n_rows: int = 0
+    n_blocks: int = 0
+    chunk_rows: int = 0
 
 
 @dataclasses.dataclass
@@ -36,6 +68,11 @@ class LocalEngine:
 
     name: str = "local"
 
+    def __post_init__(self):
+        self.cache = CompiledCache(name=f"local:{self.strategy}")
+        self.last_compile_seconds = 0.0
+
+    # -- public --------------------------------------------------------------
     def fuse(self, fusion: FusionAlgorithm, updates, weights) -> jnp.ndarray:
         updates = jnp.asarray(updates)
         if weights is None:
@@ -43,6 +80,7 @@ class LocalEngine:
         weights = fusion.effective_weights(jnp.asarray(weights, jnp.float32))
         n, P = updates.shape
         batch_bytes = updates.dtype.itemsize * P
+        self.last_compile_seconds = 0.0
 
         if self.memory_cap_bytes is not None:
             max_rows = max(int(self.memory_cap_bytes // max(batch_bytes, 1)), 1)
@@ -56,8 +94,7 @@ class LocalEngine:
                 return self._streamed(fusion, updates, weights, max_rows)
 
         if fusion.reducible:
-            wsum, tot = self._partial(fusion, updates, weights)
-            return fusion.combine(wsum, tot)
+            return self._fuse_reducible_dense(fusion, updates, weights)
         if self.strategy == "pallas" and fusion.name == "coordmedian":
             return coordmedian_pallas(updates, interpret=self.interpret)
         if self.strategy == "pallas" and fusion.name == "trimmedmean":
@@ -65,27 +102,186 @@ class LocalEngine:
             return trimmedmean_pallas(updates, trim, interpret=self.interpret)
         return fusion.fuse(updates, weights)
 
-    # -- internals ----------------------------------------------------------
-    def _partial(self, fusion, updates, weights):
-        if self.strategy == "pallas" and fusion.name in (
-            "fedavg", "gradavg", "iteravg", "fedavgm", "fedadam"
-        ):
-            w = (
-                jnp.ones_like(weights) if fusion.name == "iteravg" else weights
+    def fuse_stream(
+        self,
+        fusion: FusionAlgorithm,
+        blocks: Iterable[Tuple[np.ndarray, np.ndarray]],
+    ) -> Tuple[jnp.ndarray, StreamReport]:
+        """Fuse a reducible fusion from an iterator of (chunk, P) blocks
+        (e.g. ``UpdateStore.iter_chunks``) without ever holding the dense
+        matrix: one cached step executable folds each block into a (P,)
+        fp32 accumulator. Returns (fused, StreamReport)."""
+        if not fusion.reducible:
+            raise ValueError(
+                f"{fusion.name} is not reducible — streamed aggregation "
+                "needs a weighted-sum decomposition"
             )
-            wsum = weighted_sum_pallas(updates, w, interpret=self.interpret)
-            return wsum, jnp.sum(w)
-        return fusion.partial(updates, weights)
+        rep = StreamReport()
+        it = iter(blocks)
+        step = wsum = tot = None
+        chunk = dim = None
+        while True:
+            t0 = time.perf_counter()
+            try:
+                block, w = next(it)
+            except StopIteration:
+                break
+            rep.ingest_seconds += time.perf_counter() - t0
+            if chunk is None:
+                chunk, dim = block.shape
+                rep.chunk_rows = chunk
+                step, compile_s = self._stream_step(
+                    fusion, chunk, dim, block.dtype
+                )
+                rep.compile_seconds = compile_s
+                self.last_compile_seconds = compile_s
+                wsum = jnp.zeros((dim,), jnp.float32)
+                tot = jnp.zeros((), jnp.float32)
+            rows = block.shape[0]
+            if rows < chunk:           # ragged final block: zero-weight pad
+                padded = np.zeros((chunk, dim), block.dtype)
+                padded[:rows] = block
+                wpad = np.zeros((chunk,), np.float32)
+                wpad[:rows] = w
+                block, w = padded, wpad
+            w = np.array(
+                fusion.effective_weights(jnp.asarray(w, jnp.float32))
+            )
+            if rows < chunk:
+                w[rows:] = 0.0         # effective_weights may remap pads
+            t0 = time.perf_counter()
+            wsum, tot = step(block, w, wsum, tot)
+            rep.compute_seconds += time.perf_counter() - t0
+            rep.n_rows += rows
+            rep.n_blocks += 1
+        if rep.n_blocks == 0:
+            raise ValueError("fuse_stream: empty block iterator")
+        t0 = time.perf_counter()
+        fused = jax.block_until_ready(fusion.combine(wsum, tot))
+        rep.compute_seconds += time.perf_counter() - t0
+        return fused, rep
+
+    # -- cache introspection (planner reuse term) -----------------------------
+    def is_warm(self, fusion, n: int, P: int, dtype) -> bool:
+        if not fusion.reducible:
+            return False
+        row_bytes = np.dtype(dtype).itemsize * P
+        if self.memory_cap_bytes is not None:
+            max_rows = max(int(self.memory_cap_bytes // max(row_bytes, 1)), 1)
+            if max_rows < n:
+                return self._scan_key(fusion, n, max_rows, P, dtype) \
+                    in self.cache
+        return self._dense_key(fusion, n, P, dtype) in self.cache
+
+    def is_warm_stream(self, fusion, chunk: int, P: int, dtype) -> bool:
+        return fusion.reducible and (
+            self._step_key(fusion, chunk, P, dtype) in self.cache
+        )
+
+    # -- internals ------------------------------------------------------------
+    def _dense_key(self, fusion, n, P, dtype):
+        return ("dense", fusion_cache_key(fusion), self.strategy,
+                bucket_rows(n), P, np.dtype(dtype).str)
+
+    def _step_key(self, fusion, chunk, P, dtype):
+        return ("stream", fusion_cache_key(fusion), self.strategy,
+                chunk, P, np.dtype(dtype).str)
+
+    def _scan_key(self, fusion, n, max_rows, P, dtype):
+        # keyed by chunk COUNT, not n: rounds sharing ceil(n/chunk) reuse
+        # the executable. (No pow2 bucketing here — padding the dense
+        # input up to a bucket would double peak memory on exactly the
+        # memory-capped path; at most chunk-1 zero rows are acceptable.)
+        k = -(-n // max_rows)
+        return ("streamscan", fusion_cache_key(fusion), self.strategy,
+                k, max_rows, P, np.dtype(dtype).str)
+
+    def _partial_fn(self, fusion):
+        """The stateless 'map' stage — closed over fusion hyperparameters,
+        never over server state."""
+        use_pallas = self.strategy == "pallas" and fusion.name in _PALLAS_WSUM
+        interpret = self.interpret
+
+        def partial(u, w):
+            if use_pallas:
+                return weighted_sum_pallas(u, w, interpret=interpret), \
+                    jnp.sum(w)
+            return fusion.partial(u, w)
+
+        return partial
+
+    def _fuse_reducible_dense(self, fusion, updates, weights):
+        n, P = updates.shape
+        B = bucket_rows(n)
+        key = self._dense_key(fusion, n, P, updates.dtype)
+        partial = self._partial_fn(fusion)
+        fn, compile_s = self.cache.get(
+            key, lambda: partial,
+            jax.ShapeDtypeStruct((B, P), updates.dtype),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        )
+        self.last_compile_seconds = compile_s
+        if B != n:   # zero-weight rows: no contribution to any reducible op
+            updates = jnp.pad(updates, ((0, B - n), (0, 0)))
+            weights = jnp.pad(weights, (0, B - n))
+        wsum, tot = fn(updates, weights)
+        return fusion.combine(wsum, tot)
+
+    def _stream_step(self, fusion, chunk, P, dtype):
+        """One compiled accumulate step: (block, w, wsum, tot) -> updated
+        (wsum, tot)."""
+        key = self._step_key(fusion, chunk, P, dtype)
+        partial = self._partial_fn(fusion)
+
+        def build():
+            def step(u, w, wsum, tot):
+                ws, t = partial(u, w)
+                return wsum + ws, tot + t
+
+            return step
+
+        return self.cache.get(
+            key, build,
+            jax.ShapeDtypeStruct((chunk, P), np.dtype(dtype)),
+            jax.ShapeDtypeStruct((chunk,), jnp.float32),
+            jax.ShapeDtypeStruct((P,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
 
     def _streamed(self, fusion, updates, weights, max_rows) -> jnp.ndarray:
-        """Accumulate reducible partials over client chunks — bounded
-        resident set (the single-node answer to the memory wall)."""
-        n = updates.shape[0]
-        wsum = None
-        tot = None
-        for lo in range(0, n, max_rows):
-            hi = min(lo + max_rows, n)
-            ws, t = self._partial(fusion, updates[lo:hi], weights[lo:hi])
-            wsum = ws if wsum is None else wsum + ws
-            tot = t if tot is None else tot + t
+        """Memory-capped dense input: ONE scanned executable over fixed
+        (max_rows, P) client chunks — bounded resident set, no Python loop
+        of per-chunk jit dispatches (the seed behavior)."""
+        n, P = updates.shape
+        k = -(-n // max_rows)
+        padded_n = k * max_rows
+        key = self._scan_key(fusion, n, max_rows, P, updates.dtype)
+        partial = self._partial_fn(fusion)
+
+        def build():
+            def scanned(u3, w2):
+                def body(carry, xs):
+                    u, w = xs
+                    ws, t = partial(u, w)
+                    return (carry[0] + ws, carry[1] + t), None
+
+                init = (jnp.zeros((P,), jnp.float32),
+                        jnp.zeros((), jnp.float32))
+                (wsum, tot), _ = jax.lax.scan(body, init, (u3, w2))
+                return wsum, tot
+
+            return scanned
+
+        fn, compile_s = self.cache.get(
+            key, build,
+            jax.ShapeDtypeStruct((k, max_rows, P), updates.dtype),
+            jax.ShapeDtypeStruct((k, max_rows), jnp.float32),
+        )
+        self.last_compile_seconds = compile_s
+        if padded_n != n:
+            updates = jnp.pad(updates, ((0, padded_n - n), (0, 0)))
+            weights = jnp.pad(weights, (0, padded_n - n))
+        wsum, tot = fn(
+            updates.reshape(k, max_rows, P), weights.reshape(k, max_rows)
+        )
         return fusion.combine(wsum, tot)

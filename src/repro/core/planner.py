@@ -20,7 +20,7 @@ once S exceeds HBM headroom — the paper's memory wall).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Collection, Dict, List, Optional
 
 import numpy as np
 
@@ -50,9 +50,15 @@ class Planner:
     # latencies (the Spark-context analogue of the paper's §III-D3; the one-
     # time ~30 s spin-up is amortized across rounds and excluded)
     dispatch_overhead: float = 5e-3
+    # reuse term: an engine without a cached executable for this round's
+    # shape bucket pays a trace+compile before any byte moves. Elastic
+    # rounds make this recurrent, not one-time, so warm engines are
+    # costed below cold ones (ties between a warm single-chip plan and a
+    # marginally-faster cold distributed plan resolve to the warm one).
+    compile_overhead: float = 50e-3
 
-    def candidate_plans(self, load: Workload,
-                        fusion: FusionAlgorithm) -> List[Plan]:
+    def candidate_plans(self, load: Workload, fusion: FusionAlgorithm,
+                        warm_engines: Collection[str] = ()) -> List[Plan]:
         s = float(load.total_bytes)
         p_bytes = float(load.update_bytes)
         wl = classify(load, self.hw)
@@ -63,16 +69,20 @@ class Planner:
         feasible_local = s <= hbm_cap or fusion.reducible  # streaming path
         mem_t = s / self.hw.hbm_bw
         passes = 1.0 if fusion.reducible else 2.0  # sort-based ops re-read
+        local_compile = (
+            0.0 if "local" in warm_engines else self.compile_overhead
+        )
         plans.append(Plan(
             engine="local",
             workload_class=wl,
-            est_seconds=s / self.store_bw + passes * mem_t,
+            est_seconds=s / self.store_bw + passes * mem_t + local_compile,
             breakdown={
                 "ingest": s / self.store_bw,
                 "memory": passes * mem_t,
                 "compute": 2 * load.num_params * load.n_clients
                 / self.hw.peak_flops_bf16,
                 "collective": 0.0,
+                "compile": local_compile,
             },
             n_devices=1,
             feasible=feasible_local,
@@ -98,17 +108,22 @@ class Planner:
                 coll = per_dev / ici  # all_to_all moves ~1/d of local shard
             else:
                 coll = p_bytes / ici  # gram/score psums + row broadcast
+            dist_name = "hierarchical" if self.n_pods > 1 else "distributed"
+            dist_compile = (
+                0.0 if dist_name in warm_engines else self.compile_overhead
+            )
             plans.append(Plan(
-                engine="hierarchical" if self.n_pods > 1 else "distributed",
+                engine=dist_name,
                 workload_class=wl,
                 est_seconds=per_dev / self.store_bw + per_dev / self.hw.hbm_bw
-                + coll + self.dispatch_overhead,
+                + coll + self.dispatch_overhead + dist_compile,
                 breakdown={
                     "ingest": per_dev / self.store_bw,
                     "memory": per_dev / self.hw.hbm_bw,
                     "compute": 2 * load.num_params * load.n_clients
                     / (d * self.hw.peak_flops_bf16),
                     "collective": coll,
+                    "compile": dist_compile,
                 },
                 n_devices=d,
                 feasible=working_set <= hbm_cap,
@@ -117,8 +132,12 @@ class Planner:
             ))
         return plans
 
-    def plan(self, load: Workload, fusion: FusionAlgorithm) -> Plan:
-        plans = [p for p in self.candidate_plans(load, fusion) if p.feasible]
+    def plan(self, load: Workload, fusion: FusionAlgorithm,
+             warm_engines: Collection[str] = ()) -> Plan:
+        plans = [
+            p for p in self.candidate_plans(load, fusion, warm_engines)
+            if p.feasible
+        ]
         if not plans:
             raise MemoryError(
                 f"no feasible engine for S={load.total_bytes} bytes "

@@ -3,13 +3,17 @@
 workload to the best engine and transitions seamlessly between them.
 
 Round flow (mirrors Algorithm 1):
-  1. S = w_s * n  -> classify + plan (planner.py's roofline cost model).
+  1. S = w_s * n  -> classify + plan (planner.py's roofline cost model,
+     plus a reuse term: engines holding a compiled executable for this
+     round's shape bucket are costed below cold ones).
   2. small  -> single-chip engine (jnp baseline or fused Pallas path),
      updates land in memory exactly as IBMFL receives them over gRPC.
   3. large  -> clients were already redirected to the UpdateStore (the
      seamless-transition hook, §III-D3); monitor(T_h, timeout) waits for
-     the straggler threshold; the distributed engine map-reduces the
-     store's shards over the mesh.
+     the straggler threshold; reducible fusions then STREAM (chunk, P)
+     blocks off the store through one cached step executable — the dense
+     (n, P) matrix never materializes on the host — while order-statistic
+     fusions fall back to the dense read / distributed engine.
   4. The fused flat vector is unflattened back into the model pytree.
 
 Convergence guarantee (paper §IV-C): every engine computes the *same*
@@ -32,7 +36,7 @@ from repro.core.local import LocalEngine
 from repro.core.monitor import Monitor, MonitorResult
 from repro.core.planner import Plan, Planner
 from repro.core.store import UpdateStore
-from repro.core.workload import Workload, WorkloadClass
+from repro.core.workload import Workload, WorkloadClass, classify
 from repro.utils.mem import TPU_V5E, HardwareSpec
 from repro.utils.pytree import flat_vector_to_tree, tree_to_flat_vector
 
@@ -47,6 +51,10 @@ class RoundReport:
     fuse_seconds: float          # wall time of the fusion computation
     monitor: Optional[MonitorResult] = None
     route_next_to_store: bool = False
+    streamed: bool = False       # True: chunked store pipeline (no dense n,P)
+    # ingest (store -> host blocks) / compile (executable build; 0.0 on
+    # warm rounds) / compute (device time) — the paper's Fig. 12 phases
+    phase_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 class AggregationService:
@@ -62,6 +70,7 @@ class AggregationService:
         threshold_frac: float = 0.8,
         monitor_timeout: float = 30.0,
         memory_cap_bytes: Optional[int] = None,
+        stream_chunk_bytes: int = 64 << 20,
     ):
         self.fusion = (
             get_fusion(fusion) if isinstance(fusion, str) else fusion
@@ -71,6 +80,8 @@ class AggregationService:
         self.store = store or UpdateStore()
         self.threshold_frac = threshold_frac
         self.monitor_timeout = monitor_timeout
+        self.stream_chunk_bytes = stream_chunk_bytes
+        self.memory_cap_bytes = memory_cap_bytes
         self.local = LocalEngine(
             strategy=local_strategy, memory_cap_bytes=memory_cap_bytes
         )
@@ -86,6 +97,32 @@ class AggregationService:
         self.planner = Planner(hw=hw, n_devices=n_dev, n_pods=n_pods)
         self.history: List[RoundReport] = []
 
+    # -- streaming knobs ------------------------------------------------------
+    def _chunk_rows(self, n: int, row_bytes: int) -> int:
+        """Rows per streamed block: half the memory cap (two blocks are
+        resident under double buffering), else the chunk-size default."""
+        budget = (
+            self.memory_cap_bytes // 2
+            if self.memory_cap_bytes is not None
+            else self.stream_chunk_bytes
+        )
+        return max(1, min(n, int(budget // max(row_bytes, 1))))
+
+    def _warm_engines(self, n: int, p: int, dtype, chunk_rows=None):
+        warm = set()
+        if chunk_rows is not None:
+            if self.local.is_warm_stream(self.fusion, chunk_rows, p, dtype):
+                warm.add("local")
+        elif self.local.is_warm(self.fusion, n, p, dtype):
+            warm.add("local")
+        if self.distributed is not None and \
+                self.distributed.is_warm(self.fusion, n, p, dtype):
+            warm.add("distributed")
+        if self.hierarchical is not None and \
+                self.hierarchical.is_warm(self.fusion, n, p, dtype):
+            warm.add("hierarchical")
+        return warm
+
     # -- Algorithm 1 ----------------------------------------------------------
     def aggregate(
         self,
@@ -99,6 +136,9 @@ class AggregationService:
         path's arrival mode) or ``from_store=True`` (clients wrote to the
         UpdateStore; the monitor gates the round)."""
         monitor_result = None
+        phase: Dict[str, float] = {}
+        streamed = False
+
         if from_store:
             expected = expected_clients or self.store.count()
             monitor = Monitor(
@@ -107,9 +147,45 @@ class AggregationService:
                 timeout=self.monitor_timeout,
             )
             monitor_result = monitor.wait()
+            n, p, dtype = self.store.meta()
+            row_bytes = p * dtype.itemsize
+            chunk_rows = self._chunk_rows(n, row_bytes)
+            load = Workload(
+                update_bytes=row_bytes, n_clients=n,
+                dtype_bytes=dtype.itemsize,
+            )
+            can_stream = self.fusion.reducible
+            plan = self.planner.plan(
+                load, self.fusion,
+                warm_engines=self._warm_engines(
+                    n, p, dtype,
+                    chunk_rows=chunk_rows if can_stream else None,
+                ),
+            )
+            if plan.engine == "local" and can_stream:
+                # zero-materialization pipeline: (chunk, P) blocks flow
+                # from the store through one cached step executable
+                t0 = time.perf_counter()
+                fused, srep = self.local.fuse_stream(
+                    self.fusion, self.store.iter_chunks(chunk_rows)
+                )
+                dt = time.perf_counter() - t0
+                streamed = True
+                phase = {
+                    "ingest": srep.ingest_seconds,
+                    "compile": srep.compile_seconds,
+                    "compute": srep.compute_seconds,
+                }
+                return self._finish(
+                    fused, template, plan, n, load, dt, monitor_result,
+                    expected_clients, streamed, phase,
+                )
+            t0 = time.perf_counter()
             stacked, w = self.store.read_stacked()
+            phase["ingest"] = time.perf_counter() - t0
         else:
             assert updates is not None and len(updates) > 0
+            t0 = time.perf_counter()
             flat = [
                 np.asarray(
                     u if getattr(u, "ndim", None) == 1
@@ -118,22 +194,29 @@ class AggregationService:
                 for u in updates
             ]
             stacked = np.stack(flat)
+            phase["ingest"] = time.perf_counter() - t0
             w = (
                 np.asarray(weights, np.float32)
                 if weights is not None
                 else np.ones((len(flat),), np.float32)
             )
 
+        # dense path (in-memory round, or store round that can't stream):
+        # one plan against the materialized matrix
         n, p = stacked.shape
         load = Workload(
             update_bytes=p * stacked.dtype.itemsize, n_clients=n,
             dtype_bytes=stacked.dtype.itemsize,
         )
-        plan = self.planner.plan(load, self.fusion)
+        plan = self.planner.plan(
+            load, self.fusion,
+            warm_engines=self._warm_engines(n, p, stacked.dtype),
+        )
 
         t0 = time.perf_counter()
         if plan.engine == "local":
             fused = self.local.fuse(self.fusion, stacked, w)
+            phase["compile"] = self.local.last_compile_seconds
         elif plan.engine == "hierarchical" and self.hierarchical is not None:
             fused = self.hierarchical.fuse(self.fusion, stacked, w)
         else:
@@ -143,7 +226,17 @@ class AggregationService:
             fused = self.distributed.fuse(self.fusion, stacked, w)
         fused = jax.block_until_ready(fused)
         dt = time.perf_counter() - t0
+        phase["compute"] = dt - phase.get("compile", 0.0)
+        return self._finish(
+            fused, template, plan, n, load, dt, monitor_result,
+            expected_clients, streamed, phase,
+        )
 
+    # -- round epilogue -------------------------------------------------------
+    def _finish(
+        self, fused, template, plan, n, load, dt, monitor_result,
+        expected_clients, streamed, phase,
+    ):
         # §III-D3 seamless transition: if next round's projected load would
         # overflow a single chip (even the streamed local path then needs
         # the store as its backing set), tell clients to write to the store.
@@ -151,8 +244,6 @@ class AggregationService:
             update_bytes=load.update_bytes,
             n_clients=max(n, expected_clients or n),
         )
-        from repro.core.workload import classify
-
         route_next = (
             classify(next_load, self.hw) is WorkloadClass.DISTRIBUTED
             or self.planner.plan(next_load, self.fusion).engine != "local"
@@ -165,6 +256,8 @@ class AggregationService:
             fuse_seconds=dt,
             monitor=monitor_result,
             route_next_to_store=route_next,
+            streamed=streamed,
+            phase_seconds=phase,
         )
         self.history.append(report)
 

@@ -7,9 +7,20 @@ communication substrate of the distributed engine: placement is sharded
 than single-node, and reads hand the distributed engine per-shard slices.
 
 Two backends:
-  * memory — dict of flat fp32 vectors (fast; benchmarks).
+  * memory — dict of flat vectors in the CLIENT'S dtype (fast; benchmarks).
   * disk   — one .npy per update under a spool dir (restart-safe; the
              end-to-end example and fault-tolerance tests use this).
+
+The aggregator-side read path is STREAMING-first: ``iter_chunks`` hands
+the engine fixed-size (chunk, P) blocks with the next block prefetched on
+a reader thread (double buffering), so a round never materializes the
+dense (n, P) matrix on the host — peak ingest allocation is O(chunk * P).
+``read_stacked`` remains for order-statistic fusions that genuinely need
+all rows at once.
+
+Stored dtype is preserved (bf16 updates stay 2 bytes on the wire and in
+the spool; the seed force-cast to fp32, doubling bytes); only integer /
+bool inputs are promoted to fp32.
 
 Ingest-time accounting mirrors the paper's Fig. 12 'average write time':
 bytes / per-datanode bandwidth with ``replication`` copies.
@@ -18,9 +29,9 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import queue
 import threading
-import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -32,10 +43,21 @@ class StoreStats:
     writes: int = 0
     bytes_written: int = 0
     sim_write_seconds: float = 0.0  # modeled (bandwidth-based), not wall
+    reads: int = 0
+    bytes_read: int = 0
+    peak_block_bytes: int = 0       # largest single ingest block staged
 
 
 class UpdateStore:
-    """Thread-safe spool of (client_id -> flat update, weight)."""
+    """Thread-safe spool of (client_id -> flat update, weight).
+
+    Locking discipline: ``self._lock`` guards ONLY the in-memory index
+    (``_mem`` / ``_weights``) and stats. Disk I/O happens outside the
+    critical section so concurrent client writes overlap on the
+    (simulated) datanodes instead of serializing behind one spindle.
+    Readers snapshot the index under the lock, then read blob data
+    lock-free.
+    """
 
     def __init__(
         self,
@@ -67,20 +89,38 @@ class UpdateStore:
     # -- client side --------------------------------------------------------
     def write(self, client_id: str, update, weight: float = 1.0) -> float:
         """Store one update (pytree or flat vector). Returns the modeled
-        write latency (bandwidth model, paper Fig. 12)."""
+        write latency (bandwidth model, paper Fig. 12). Concurrent writes
+        to the SAME client_id are last-writer-wins."""
         vec = np.asarray(
             update if getattr(update, "ndim", None) == 1
             else tree_to_flat_vector(update)
-        ).astype(np.float32)
+        )
+        if vec.dtype.kind in "biu":   # ints/bools promote; floats keep dtype
+            vec = vec.astype(np.float32)
         nbytes = vec.nbytes * self.replication
         latency = nbytes / (self.datanode_bw * self.n_datanodes)
+        if self.backend == "disk":
+            # blob + sidecar land on the datanode OUTSIDE the lock.
+            # np.save can't round-trip ml_dtypes (bf16 reloads as raw V2),
+            # so extension floats spool as raw bytes + a dtype sidecar.
+            dpath = self._path(client_id) + ".dtype"
+            if vec.dtype.kind == "V":
+                np.save(self._path(client_id), np.ascontiguousarray(vec)
+                        .view(np.uint8))
+                with open(dpath, "w") as f:
+                    f.write(vec.dtype.name)
+            else:
+                np.save(self._path(client_id), vec)
+                try:
+                    os.remove(dpath)   # stale sidecar from a prior dtype
+                except FileNotFoundError:
+                    pass
+            with open(self._path(client_id) + ".w", "w") as f:
+                f.write(repr(float(weight)))
         with self._lock:
             if self.backend == "memory":
                 self._mem[client_id] = (vec, weight)
             else:
-                np.save(self._path(client_id), vec)
-                with open(self._path(client_id) + ".w", "w") as f:
-                    f.write(repr(float(weight)))
                 self._weights[client_id] = weight
             self.stats.writes += 1
             self.stats.bytes_written += nbytes
@@ -101,18 +141,128 @@ class UpdateStore:
 
     def read(self, client_id: str) -> Tuple[np.ndarray, float]:
         if self.backend == "memory":
-            return self._mem[client_id]
-        return np.load(self._path(client_id)), self._weights[client_id]
+            with self._lock:
+                return self._mem[client_id]
+        with self._lock:
+            weight = self._weights[client_id]
+        blob = np.load(self._path(client_id))
+        dt = self._sidecar_dtype(client_id)
+        if dt is not None:
+            blob = blob.view(dt)
+        return blob, weight
+
+    def _sidecar_dtype(self, client_id: str) -> Optional[np.dtype]:
+        try:
+            with open(self._path(client_id) + ".dtype") as f:
+                return np.dtype(f.read().strip())
+        except FileNotFoundError:
+            return None
+
+    def meta(self) -> Tuple[int, int, np.dtype]:
+        """(n_clients, update_dim, stored dtype) without loading the set —
+        what the planner needs BEFORE choosing an engine."""
+        ids = self.client_ids()
+        if not ids:
+            raise LookupError("empty store")
+        if self.backend == "memory":
+            with self._lock:
+                vec, _ = self._mem[ids[0]]
+            return len(ids), int(vec.shape[0]), vec.dtype
+        blob = np.load(self._path(ids[0]), mmap_mode="r")  # header only
+        dt = self._sidecar_dtype(ids[0])
+        if dt is not None:
+            return len(ids), int(blob.nbytes // dt.itemsize), dt
+        return len(ids), int(blob.shape[0]), blob.dtype
+
+    def iter_chunks(
+        self,
+        chunk_rows: int,
+        prefetch: bool = True,
+    ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        """Yield (updates (c, P) stored-dtype, weights (c,) fp32) blocks,
+        c == chunk_rows except for the ragged final block.
+
+        With ``prefetch`` a reader thread stages block k+1 while the
+        engine consumes block k (double buffering): at most two blocks are
+        resident, so peak host-side ingest memory is O(2 * chunk * P)
+        regardless of n. The iterator works over a snapshot of the client
+        index — updates written after the call don't shift the blocks.
+        """
+        ids = self.client_ids()
+        chunk_rows = max(int(chunk_rows), 1)
+        batches = [
+            ids[i:i + chunk_rows] for i in range(0, len(ids), chunk_rows)
+        ]
+
+        def load(batch):
+            ups, ws = [], []
+            for cid in batch:
+                u, w = self.read(cid)
+                ups.append(u)
+                ws.append(w)
+            block = np.stack(ups)
+            with self._lock:
+                self.stats.reads += len(batch)
+                self.stats.bytes_read += block.nbytes
+                self.stats.peak_block_bytes = max(
+                    self.stats.peak_block_bytes, block.nbytes
+                )
+            return block, np.asarray(ws, np.float32)
+
+        if not prefetch:
+            for batch in batches:
+                yield load(batch)
+            return
+
+        q: "queue.Queue" = queue.Queue(maxsize=1)
+        stop = threading.Event()   # set when the consumer abandons us
+
+        def put(item) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def reader():
+            try:
+                for batch in batches:
+                    if stop.is_set() or not put(("block", load(batch))):
+                        return
+                put(("done", None))
+            except BaseException as exc:  # surface in the consumer
+                put(("error", exc))
+
+        t = threading.Thread(
+            target=reader, name="updatestore-prefetch", daemon=True
+        )
+        t.start()
+        try:
+            while True:
+                kind, payload = q.get()
+                if kind == "done":
+                    break
+                if kind == "error":
+                    raise payload
+                yield payload
+        finally:
+            # consumer done or bailed early (exception / dropped
+            # generator): release the reader so it never blocks holding
+            # a staged block
+            stop.set()
+            t.join()
 
     def read_stacked(self) -> Tuple[np.ndarray, np.ndarray]:
-        """All updates as (n, P) + weights (n,) — the engine's input."""
-        ids = self.client_ids()
+        """All updates as (n, P) + weights (n,) — the DENSE engine input.
+        Order-statistic fusions still need this; reducible rounds should
+        stream via ``iter_chunks`` instead."""
         ups, ws = [], []
-        for cid in ids:
-            u, w = self.read(cid)
-            ups.append(u)
+        for block, w in self.iter_chunks(chunk_rows=1 << 62, prefetch=False):
+            ups.append(block)
             ws.append(w)
-        return np.stack(ups), np.asarray(ws, np.float32)
+        return np.concatenate(ups), np.concatenate(ws)
 
     def partition(self, n_parts: int) -> List[List[str]]:
         """Round-robin client placement over partitions (Spark-style)."""
@@ -124,7 +274,8 @@ class UpdateStore:
             self._mem.clear()
             if self.backend == "disk":
                 for cid in list(self._weights):
-                    for path in (self._path(cid), self._path(cid) + ".w"):
+                    for path in (self._path(cid), self._path(cid) + ".w",
+                                 self._path(cid) + ".dtype"):
                         try:
                             os.remove(path)
                         except FileNotFoundError:

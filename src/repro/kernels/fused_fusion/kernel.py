@@ -7,8 +7,17 @@ is revisited across the client-tile grid dimension — one HBM pass over the
 updates, one HBM write of the result, MXU-shaped (the inner op is a
 (1, TN) x (TN, TP) matmul).
 
-Grid: (P // PARAM_TILE, n // CLIENT_TILE); the output block index ignores
-the client dim, so Pallas keeps it resident in VMEM across that dim.
+Ragged shapes are handled INSIDE the kernel: the final client/param tile
+is masked with an iota row test instead of `jnp.pad`-copying the entire
+updates matrix (the seed behavior, which doubled HBM traffic and peak
+memory exactly when the matrix was largest). Boundary blocks' padding
+lanes have unspecified contents, so the mask zeroes both the weight lane
+and the update rows before the dot — 0 * garbage would still poison the
+accumulator if the garbage were NaN/Inf.
+
+Grid: (ceil(P / PARAM_TILE), ceil(n / CLIENT_TILE)); the output block
+index ignores the client dim, so Pallas keeps it resident in VMEM across
+that dim.
 """
 from __future__ import annotations
 
@@ -18,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.utils.jitcache import note_trace
+
 # lane-aligned defaults: PARAM_TILE a multiple of 128 (lanes), CLIENT_TILE
 # a multiple of 8 (sublanes). VMEM budget @ defaults:
 # 256*2048*4 B (updates tile) + 2048*4 (acc) ~= 2.1 MiB.
@@ -25,7 +36,7 @@ PARAM_TILE = 2048
 CLIENT_TILE = 256
 
 
-def _wsum_kernel(w_ref, u_ref, out_ref):
+def _wsum_kernel(w_ref, u_ref, out_ref, *, n_rows, tn, ragged):
     """w: (1, TN) fp32; u: (TN, TP); out: (1, TP) fp32 accumulator."""
     j = pl.program_id(1)
 
@@ -35,6 +46,12 @@ def _wsum_kernel(w_ref, u_ref, out_ref):
 
     u = u_ref[...].astype(jnp.float32)
     w = w_ref[...]
+    if ragged:
+        # rows valid in this client tile: tn everywhere except the last
+        valid = n_rows - j * tn
+        ids = jax.lax.broadcasted_iota(jnp.int32, (1, tn), 1)
+        w = jnp.where(ids < valid, w, 0.0)
+        u = jnp.where(ids.reshape(tn, 1) < valid, u, 0.0)
     out_ref[...] += jnp.dot(w, u, preferred_element_type=jnp.float32)
 
 
@@ -49,27 +66,24 @@ def weighted_sum_pallas(
     client_tile: int = CLIENT_TILE,
     interpret: bool = True,      # CPU container: interpret mode
 ) -> jnp.ndarray:
+    note_trace()
     n, P = updates.shape
     tn = min(client_tile, n)
     tp = min(param_tile, P)
-    # pad to tile multiples (weights pad with 0 => no contribution)
-    n_pad = (-n) % tn
-    p_pad = (-P) % tp
-    if n_pad or p_pad:
-        updates = jnp.pad(updates, ((0, n_pad), (0, p_pad)))
-        weights = jnp.pad(weights, (0, n_pad))
-    N, PP = updates.shape
-    w2 = weights.astype(jnp.float32).reshape(1, N)
+    w2 = weights.astype(jnp.float32).reshape(1, n)
 
+    kernel = functools.partial(
+        _wsum_kernel, n_rows=n, tn=tn, ragged=bool(n % tn),
+    )
     out = pl.pallas_call(
-        _wsum_kernel,
-        grid=(PP // tp, N // tn),
+        kernel,
+        grid=(pl.cdiv(P, tp), pl.cdiv(n, tn)),
         in_specs=[
             pl.BlockSpec((1, tn), lambda i, j: (0, j)),
             pl.BlockSpec((tn, tp), lambda i, j: (j, i)),
         ],
         out_specs=pl.BlockSpec((1, tp), lambda i, j: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, PP), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((1, P), jnp.float32),
         interpret=interpret,
     )(w2, updates)
-    return out[0, :P]
+    return out[0]

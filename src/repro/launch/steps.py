@@ -218,7 +218,7 @@ def make_aggregate_step(mesh: Mesh, n_clients: int):
     the data axes (half an all-reduce's ring traffic, and no chip ever
     materializes the full fused model). Leaves whose leading dim doesn't
     divide fall back to ``psum``."""
-    from jax import shard_map
+    from repro.utils.compat import shard_map
     from repro.launch.mesh import data_axis_names, n_data_shards
 
     dp = data_axis_names(mesh)

@@ -28,7 +28,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.utils.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.models.layers.mlp import MLPParams, init_mlp, mlp

@@ -1,0 +1,40 @@
+"""JAX version compatibility shims.
+
+The codebase targets the modern spellings (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``); this container
+ships jax 0.4.x where shard_map lives in ``jax.experimental`` (kwarg
+``check_rep``) and meshes take no axis types. Route every use through
+here so one file owns the version split.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: top-level export, check_vma kwarg
+    from jax import shard_map as _shard_map
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_CHECK_KW: check_vma},
+    )
+
+
+def make_mesh(axis_shapes, axis_names, devices=None):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    try:
+        from jax.sharding import AxisType
+
+        return jax.make_mesh(
+            axis_shapes, axis_names, devices=devices,
+            axis_types=(AxisType.Auto,) * len(axis_names),
+        )
+    except (ImportError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices)

@@ -1,0 +1,178 @@
+"""Shape-bucketed compile caches — persistent executables across elastic
+rounds.
+
+Elastic FL rounds change the client count ``n`` every round; jitting a
+fresh closure per round (the seed behavior of both engines) re-traces and
+re-compiles the whole fusion program each time, which is exactly the
+per-round launch overhead the paper's adaptive aggregator is meant to
+avoid. The fix has two halves:
+
+  * **bucketing** — round ``n`` up to the next power of two and zero-pad
+    the weights, so every round with ``n`` in ``(B/2, B]`` shares ONE
+    executable (padded rows carry weight 0 and contribute nothing to any
+    reducible fusion);
+  * **caching** — key compiled executables by (fusion, bucket, P, dtype,
+    path) and reuse them for as long as the process lives, instead of
+    rebuilding ``shard_map``/``jax.jit`` closures per ``fuse()`` call.
+
+``trace_count()`` is a global monotone counter bumped every time one of
+our cached builders is (re-)traced; tests assert it stays flat across
+same-bucket rounds. ``CompiledCache`` also accounts compile seconds,
+which feeds ``RoundReport.phase_seconds["compile"]`` and the Planner's
+reuse term (warm engines are costed below cold ones).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Hashable, Tuple
+
+import jax
+
+# -- trace accounting ---------------------------------------------------------
+
+_TRACE_LOCK = threading.Lock()
+_TRACE_COUNT = 0
+
+
+def note_trace() -> None:
+    """Called from INSIDE traced function bodies: executes once per trace
+    (never on a compiled-cache hit), so the counter measures re-tracing."""
+    global _TRACE_COUNT
+    with _TRACE_LOCK:
+        _TRACE_COUNT += 1
+
+
+def trace_count() -> int:
+    return _TRACE_COUNT
+
+
+# -- bucketing ----------------------------------------------------------------
+
+
+def round_up_pow2(n: int, floor: int = 1) -> int:
+    n = max(int(n), int(floor))
+    return 1 << (n - 1).bit_length()
+
+
+def bucket_rows(n: int, floor: int = 8) -> int:
+    """Client-count bucket: next power of two, with a small floor so tiny
+    rounds (1..8 clients) all land in one bucket."""
+    return round_up_pow2(n, floor)
+
+
+def fusion_cache_key(fusion) -> Hashable:
+    """Stable cache key for a fusion instance: name + hyperparameters.
+    (Server-state fields like FedAvgM's velocity start with ``_`` and are
+    not dataclass fields, so they never leak into the key.)"""
+    if dataclasses.is_dataclass(fusion):
+        fields = tuple(
+            (f.name, getattr(fusion, f.name))
+            for f in dataclasses.fields(fusion)
+        )
+        return (fusion.name, fields)
+    return (fusion.name,)
+
+
+# -- compiled-executable cache ------------------------------------------------
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    fn: Callable
+    compile_seconds: float
+
+
+class CompiledCache:
+    """key -> compiled executable, with hit/miss and compile-time stats.
+
+    Two styles:
+      * ``get`` — AOT: the builder's function is jit'd, lowered against
+        ShapeDtypeStructs and compiled immediately; the stored callable is
+        the compiled executable (exact shapes/dtypes — which bucketing
+        guarantees). Compile time is measured precisely.
+      * ``get_jitted`` — lazy: stores a ``jax.jit`` object (used for
+        ``shard_map`` closures whose sharded lowering wants real device
+        inputs); jit's internal cache handles same-shape reuse, and the
+        point is to stop rebuilding the closure per call.
+    """
+
+    def __init__(self, name: str = "cache"):
+        self.name = name
+        self._entries: Dict[Hashable, CacheEntry] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.compile_seconds = 0.0
+
+    def __contains__(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def get(
+        self,
+        key: Hashable,
+        builder: Callable[[], Callable],
+        *arg_specs: jax.ShapeDtypeStruct,
+    ) -> Tuple[Callable, float]:
+        """Return ``(executable, compile_seconds_spent_now)`` — the second
+        element is 0.0 on a hit, so callers can report a compile phase."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.hits += 1
+                return entry.fn, 0.0
+        # Build outside the lock: compiling can take seconds and other
+        # shapes' lookups must not serialize behind it.
+        fn = builder()
+
+        def traced(*args):
+            note_trace()
+            return fn(*args)
+
+        t0 = time.perf_counter()
+        compiled = jax.jit(traced).lower(*arg_specs).compile()
+        dt = time.perf_counter() - t0
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:     # lost a build race: keep the first
+                self.hits += 1
+                return entry.fn, 0.0
+            self._entries[key] = CacheEntry(fn=compiled, compile_seconds=dt)
+            self.misses += 1
+            self.compile_seconds += dt
+        return compiled, dt
+
+    def get_jitted(
+        self, key: Hashable, builder: Callable[[], Callable]
+    ) -> Callable:
+        """Cache a ``jax.jit``-wrapped builder output (lazy compile)."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.hits += 1
+                return entry.fn
+        fn = builder()
+
+        def traced(*args):
+            note_trace()
+            return fn(*args)
+
+        jitted = jax.jit(traced)
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.hits += 1
+                return entry.fn
+            self._entries[key] = CacheEntry(fn=jitted, compile_seconds=0.0)
+            self.misses += 1
+        return jitted
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()

@@ -1,0 +1,126 @@
+"""Minimal deterministic stand-in for `hypothesis` (satellite fix).
+
+The container does not ship hypothesis, which made five test modules fail
+collection. Importing this module registers lightweight `hypothesis`,
+`hypothesis.strategies` and `hypothesis.extra.numpy` modules in
+``sys.modules`` implementing the tiny subset this suite uses:
+
+  given / settings / strategies.integers / floats / tuples / extra.numpy.arrays
+
+`given` runs ``max_examples`` deterministic samples (rng seeded from the
+test's qualified name), so property tests still sweep a spread of inputs
+and failures reproduce exactly. conftest.py imports this only when the
+real hypothesis is absent — with hypothesis installed, nothing changes.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+    def map(self, f):
+        return Strategy(lambda rng: f(self.example(rng)))
+
+
+def integers(min_value, max_value):
+    return Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1))
+    )
+
+
+def floats(min_value, max_value, width=None, **_):
+    return Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def tuples(*strategies):
+    return Strategy(
+        lambda rng: tuple(s.example(rng) for s in strategies)
+    )
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def arrays(dtype, shape, elements=None, **_):
+    def draw(rng):
+        shp = shape.example(rng) if isinstance(shape, Strategy) else shape
+        if isinstance(shp, int):
+            shp = (shp,)
+        size = int(np.prod(shp)) if shp else 1
+        if elements is None:
+            flat = rng.normal(size=size)
+        else:
+            flat = np.asarray(
+                [elements.example(rng) for _ in range(size)]
+            )
+        return flat.reshape(shp).astype(dtype)
+
+    return Strategy(draw)
+
+
+def settings(max_examples=10, deadline=None, **_):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*args, **kw):
+    assert not args, "fallback @given supports keyword strategies only"
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*wargs, **wkwargs):
+            n = getattr(wrapper, "_fallback_max_examples", 10)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode())
+            )
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in kw.items()}
+                fn(*wargs, **wkwargs, **drawn)
+
+        # hide the strategy parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in kw
+        ])
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for f in (integers, floats, tuples, sampled_from):
+        setattr(st_mod, f.__name__, f)
+    hyp.strategies = st_mod
+    extra = types.ModuleType("hypothesis.extra")
+    hnp = types.ModuleType("hypothesis.extra.numpy")
+    hnp.arrays = arrays
+    extra.numpy = hnp
+    hyp.extra = extra
+    sys.modules.update({
+        "hypothesis": hyp,
+        "hypothesis.strategies": st_mod,
+        "hypothesis.extra": extra,
+        "hypothesis.extra.numpy": hnp,
+    })

@@ -7,6 +7,13 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+try:  # five modules property-test via hypothesis; the container lacks it
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -47,10 +47,8 @@ def test_local_pallas_matches_jnp(fusion, data):
 @pytest.mark.parametrize("fusion", ALL_FUSIONS, ids=lambda f: f.name)
 def test_distributed_1dev_matches_local(fusion, data):
     u, w = data
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.utils.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     a = np.asarray(LocalEngine(strategy="jnp").fuse(fusion, u, w))
     b = np.asarray(DistributedEngine(mesh=mesh).fuse(fusion, u, w))
     np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
@@ -79,8 +77,8 @@ _SUBPROC = textwrap.dedent("""
     from repro.core import DistributedEngine, LocalEngine
     from repro.core.fusion import (FedAvg, IterAvg, ClippedAvg, CoordMedian,
                                    TrimmedMean, Krum, Zeno, GeometricMedian)
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.utils.compat import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     rng = np.random.default_rng(1)
     u = rng.normal(size=(13, 257)).astype(np.float32)
     w = rng.uniform(1, 5, size=(13,)).astype(np.float32)

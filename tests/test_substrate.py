@@ -171,8 +171,8 @@ def test_hlo_while_trip_multiplication():
     import jax
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.utils.compat import make_mesh
+    mesh = make_mesh((1,), ("x",))
 
     def body(c, _):
         return jax.lax.psum(c, "x"), None
@@ -181,8 +181,9 @@ def test_hlo_while_trip_multiplication():
         out, _ = jax.lax.scan(body, x, None, length=5)
         return out
 
-    sfn = jax.shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P(),
-                        check_vma=False)
+    from repro.utils.compat import shard_map
+    sfn = shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                    check_vma=False)
     compiled = jax.jit(sfn).lower(
         jax.ShapeDtypeStruct((128,), jnp.float32)
     ).compile()
