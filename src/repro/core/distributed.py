@@ -17,14 +17,24 @@ Layouts (mesh axes: optional "pod", "data", "model"):
 Compiled paths are PERSISTENT across rounds: the ``shard_map`` closures
 (which the seed rebuilt and re-``jax.jit``'d on every ``fuse()`` call)
 live in a per-engine CompiledCache keyed by (fusion, padded shape, dtype,
-path). Reducible rounds additionally bucket the client count to the next
-power of two (zero-weight padded rows), so elastic rounds with varying
-``n`` reuse ONE executable instead of re-tracing.
+path), AOT-compiled against concrete sharded example inputs so compile
+time is measured per key — cold vs warm rounds are distinguishable via
+``last_compile_seconds`` exactly like the local engine. Reducible rounds
+additionally bucket the client count to the next power of two
+(zero-weight padded rows), so elastic rounds with varying ``n`` reuse ONE
+executable instead of re-tracing.
+
+Reducible rounds can also STREAM: ``fuse_stream`` folds (chunk, P)
+blocks (off ``UpdateStore.iter_chunks``, or the service-adapted arrival
+stream) through one cached shard_map step executable whose (P,)-sharded
+accumulator lives on the mesh — host staging is O(chunk * P) per block,
+never the dense (n, P) matrix.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import time
+from typing import Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +43,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.fusion.base import FusionAlgorithm
 from repro.core.fusion.robust import GeometricMedian, Krum, TrimmedMean, Zeno
+from repro.core.local import StreamReport, _check_scale
 from repro.utils.compat import shard_map
 from repro.utils.jitcache import CompiledCache, bucket_rows, fusion_cache_key
 
@@ -63,6 +74,7 @@ class DistributedEngine:
         )
         self._n_param_shards = self.mesh.shape.get(self.param_axis, 1)
         self.cache = CompiledCache(name=f"distributed:{id(self.mesh)}")
+        self.last_compile_seconds = 0.0   # executable build this fuse call
 
     # -- shape bucketing -----------------------------------------------------
     def _padded_rows(self, n: int, reducible: bool) -> int:
@@ -92,6 +104,7 @@ class DistributedEngine:
     # -- public -------------------------------------------------------------
     def fuse(self, fusion: FusionAlgorithm, updates, weights) -> jax.Array:
         """updates (n, P), weights (n,). Returns fused (P,) (sharded)."""
+        self.last_compile_seconds = 0.0
         n, P_ = np.shape(updates)
         if weights is None:
             weights = jnp.ones((n,), jnp.float32)
@@ -128,6 +141,29 @@ class DistributedEngine:
         )
 
     # -- reducible: map-reduce ------------------------------------------------
+    def _partials(self, fusion, u, w):
+        """The local 'map' stage over one client/param shard (full-row
+        norms are psum'd over param shards first when the fusion needs
+        them), followed by the client-axis reduce."""
+        if fusion.needs_row_norms:
+            sq = jnp.sum(u.astype(jnp.float32) ** 2, axis=1)
+            if self._n_param_shards > 1:
+                sq = jax.lax.psum(sq, self.param_axis)
+            wsum, tot = fusion.partial_with_norms(u, w, jnp.sqrt(sq))
+        else:
+            wsum, tot = fusion.partial(u, w)
+        if self.hierarchical:
+            # edge stage: reduce within the pod's client shards first,
+            # then the (smaller) cross-pod reduce — the paper's
+            # client-edge-cloud hierarchy on the pod axis.
+            for ax in reversed(self.client_axes):
+                wsum = jax.lax.psum(wsum, ax)
+                tot = jax.lax.psum(tot, ax)
+        else:
+            wsum = jax.lax.psum(wsum, self.client_axes)
+            tot = jax.lax.psum(tot, self.client_axes)
+        return wsum, tot
+
     def _fuse_reducible(self, fusion, updates, weights, n_real):
         mesh = self.mesh
         in_u = P(self._cspec(), self.param_axis)
@@ -136,33 +172,16 @@ class DistributedEngine:
 
         def build():
             def mapper(u, w):
-                if fusion.needs_row_norms:
-                    sq = jnp.sum(u.astype(jnp.float32) ** 2, axis=1)
-                    if self._n_param_shards > 1:
-                        sq = jax.lax.psum(sq, self.param_axis)
-                    wsum, tot = fusion.partial_with_norms(u, w, jnp.sqrt(sq))
-                else:
-                    wsum, tot = fusion.partial(u, w)
-                if self.hierarchical:
-                    # edge stage: reduce within the pod's client shards
-                    # first, then the (smaller) cross-pod reduce — the
-                    # paper's client-edge-cloud hierarchy on the pod axis.
-                    for ax in reversed(self.client_axes):
-                        wsum = jax.lax.psum(wsum, ax)
-                        tot = jax.lax.psum(tot, ax)
-                else:
-                    wsum = jax.lax.psum(wsum, self.client_axes)
-                    tot = jax.lax.psum(tot, self.client_axes)
-                return wsum, tot
+                return self._partials(fusion, u, w)
 
             return shard_map(
                 mapper, mesh=mesh, in_specs=(in_u, in_w),
                 out_specs=(out, P()), check_vma=False,
             )
 
-        fn = self._key_get(fusion, updates, None, build)
         u = _device_put(mesh, updates, in_u)
         w = _device_put(mesh, jnp.asarray(weights, jnp.float32), in_w)
+        fn = self._key_get(fusion, updates, None, build, u, w)
         wsum, tot = fn(u, w)
         # combine stays OUTSIDE the compiled closure: FedAvgM/FedAdam keep
         # python-side server state that must update every round, not once
@@ -191,8 +210,8 @@ class DistributedEngine:
                 check_vma=False,
             )
 
-        fn = self._key_get(fusion, updates, n_real, build)
         u = _device_put(mesh, updates, in_u)
+        fn = self._key_get(fusion, updates, n_real, build, u)
         return fn(u)
 
     # -- Krum: psum'd Gram matrix --------------------------------------------
@@ -215,8 +234,8 @@ class DistributedEngine:
                 check_vma=False,
             )
 
-        fn = self._key_get(fusion, updates, n_real, build)
         u = _device_put(mesh, updates, in_u)
+        fn = self._key_get(fusion, updates, n_real, build, u)
         return fn(u)
 
     # -- Zeno: psum'd scores ---------------------------------------------------
@@ -242,11 +261,11 @@ class DistributedEngine:
                 out_specs=out, check_vma=False,
             )
 
-        fn = self._key_get(fusion, updates, n_real, build)
         u = _device_put(mesh, updates, in_u)
         if g_val is None:
             g_val = jnp.mean(jnp.asarray(updates, jnp.float32), axis=0)
         g = _device_put(mesh, jnp.asarray(g_val, jnp.float32), P(all_axes))
+        fn = self._key_get(fusion, updates, n_real, build, u, g)
         return fn(u, g)
 
     # -- Geometric median: distributed Weiszfeld -------------------------------
@@ -281,16 +300,161 @@ class DistributedEngine:
                 check_vma=False,
             )
 
-        fn = self._key_get(fusion, updates, n_real, build)
         u = _device_put(mesh, updates, in_u)
         w = _device_put(mesh, jnp.asarray(weights, jnp.float32), P(None))
+        fn = self._key_get(fusion, updates, n_real, build, u, w)
         return fn(u, w)
 
+    # -- streaming: per-shard chunked ingest ----------------------------------
+    def _stream_key(self, fusion, chunk: int, P_: int, dtype):
+        pc = chunk + (-chunk) % self._n_client_shards
+        pad_p = (-P_) % (self._n_param_shards * self._n_client_shards)
+        return ("stream", fusion_cache_key(fusion), pc, P_ + pad_p,
+                np.dtype(dtype).str, self.hierarchical)
+
+    def is_warm_stream(self, fusion, chunk: int, P_: int, dtype) -> bool:
+        return fusion.reducible and (
+            self._stream_key(fusion, chunk, P_, dtype) in self.cache
+        )
+
+    def fuse_stream(
+        self,
+        fusion: FusionAlgorithm,
+        blocks: Iterable[Tuple[np.ndarray, ...]],
+        init: Optional[Tuple[np.ndarray, float]] = None,
+        chunk_rows: Optional[int] = None,
+    ) -> Tuple[jax.Array, StreamReport]:
+        """Per-shard streaming ingest: fold (chunk, P) blocks (e.g. from
+        ``UpdateStore.iter_chunks``) through ONE cached shard_map step
+        executable. Each block is staged host-side at O(chunk * P),
+        device_put sharded over (client_axes, param_axis), and psum'd
+        into a (P,)-sharded on-mesh accumulator — the dense (n, P)
+        matrix never exists on the host. Block / ``init`` / ``chunk_rows``
+        semantics match ``LocalEngine.fuse_stream`` (numeric per-block
+        staleness scale; carried accumulator in/out via the StreamReport;
+        pass the configured ``chunk_rows`` so variable final blocks reuse
+        one executable — ``iter_arrivals`` yields client ids, adapt it
+        before streaming here)."""
+        if not fusion.reducible:
+            raise ValueError(
+                f"{fusion.name} is not reducible — streamed aggregation "
+                "needs a weighted-sum decomposition"
+            )
+        mesh = self.mesh
+        self.last_compile_seconds = 0.0
+        in_u = P(self._cspec(), self.param_axis)
+        in_w = P(self._cspec())
+        acc = P(self.param_axis)
+        rep = StreamReport()
+        it = iter(blocks)
+        step = wsum = tot = None
+        chunk = dim = None
+        pc = pdim = 0
+        while True:
+            t0 = time.perf_counter()
+            try:
+                item = next(it)
+            except StopIteration:
+                break
+            rep.ingest_seconds += time.perf_counter() - t0
+            block, w = item[0], item[1]
+            scale = _check_scale(item[2]) if len(item) > 2 else None
+            if chunk is None:
+                dim = block.shape[1]
+                chunk = int(chunk_rows) if chunk_rows else block.shape[0]
+                rep.chunk_rows = chunk
+                pc = chunk + (-chunk) % self._n_client_shards
+                pdim = dim + (
+                    (-dim) % (self._n_param_shards * self._n_client_shards)
+                )
+            rows = block.shape[0]
+            if rows > chunk:
+                raise ValueError(
+                    f"fuse_stream: block of {rows} rows exceeds "
+                    f"chunk_rows={chunk}"
+                )
+            if rows < pc or pdim != dim:   # shard-multiple / ragged pad
+                padded = np.zeros((pc, pdim), block.dtype)
+                padded[:rows, :dim] = block
+                block = padded
+            wpad = np.zeros((pc,), np.float32)
+            wpad[:rows] = w
+            w_eff = np.array(
+                fusion.effective_weights(jnp.asarray(wpad, jnp.float32))
+            )
+            if scale is not None:
+                w_eff[:rows] *= np.asarray(scale, np.float32)[:rows]
+            w_eff[rows:] = 0.0             # effective_weights may remap pads
+            t0 = time.perf_counter()
+            u_dev = _device_put(mesh, block, in_u)
+            w_dev = _device_put(mesh, jnp.asarray(w_eff, jnp.float32), in_w)
+            rep.ingest_seconds += time.perf_counter() - t0
+            if step is None:
+                wsum0, tot0 = self._stream_carry(pdim, dim, init)
+                wsum = _device_put(mesh, wsum0, acc)
+                tot = _device_put(mesh, tot0, P())
+                def build():
+                    def step_fn(u, wv, ws, t):
+                        dws, dt_ = self._partials(fusion, u, wv)
+                        return ws + dws, t + dt_
+
+                    return shard_map(
+                        step_fn, mesh=mesh, in_specs=(in_u, in_w, acc, P()),
+                        out_specs=(acc, P()), check_vma=False,
+                    )
+
+                step, compile_s = self.cache.get(
+                    self._stream_key(fusion, chunk, dim, block.dtype),
+                    build, u_dev, w_dev, wsum, tot,
+                )
+                rep.compile_seconds = compile_s
+                self.last_compile_seconds = compile_s
+            t0 = time.perf_counter()
+            wsum, tot = step(u_dev, w_dev, wsum, tot)
+            rep.compute_seconds += time.perf_counter() - t0
+            rep.n_rows += rows
+            rep.n_blocks += 1
+        if rep.n_blocks == 0:
+            if init is None:
+                raise ValueError("fuse_stream: empty block iterator")
+            # carry-only round: nothing arrived, combine the carried sums
+            dim = int(np.shape(init[0])[0])
+            wsum = jnp.asarray(init[0], jnp.float32)
+            tot = jnp.asarray(init[1], jnp.float32)
+        t0 = time.perf_counter()
+        rep.acc_wsum = np.asarray(wsum)[:dim]
+        rep.acc_tot = float(np.asarray(tot))
+        fused = jax.block_until_ready(fusion.combine(wsum, tot)[:dim])
+        rep.compute_seconds += time.perf_counter() - t0
+        return fused, rep
+
+    @staticmethod
+    def _stream_carry(padded_dim, dim, init):
+        """Initial (wsum, tot) host arrays, zero-padded to the shard
+        multiple so carried accumulators re-shard cleanly."""
+        wsum = np.zeros((padded_dim,), np.float32)
+        tot = 0.0
+        if init is not None:
+            carried = np.asarray(init[0], np.float32)
+            if carried.shape != (dim,):
+                raise ValueError(
+                    f"fuse_stream: carried accumulator has shape "
+                    f"{carried.shape}, stream blocks have dim {dim}"
+                )
+            wsum[:dim] = carried
+            tot = float(init[1])
+        return wsum, np.float32(tot)
+
     # -- cache plumbing -------------------------------------------------------
-    def _key_get(self, fusion, padded_updates, n_real, build):
+    def _key_get(self, fusion, padded_updates, n_real, build, *concrete):
+        """Fetch (or AOT-compile against the concrete sharded example
+        inputs) the executable for this round's padded shape, accumulating
+        measured compile seconds into ``last_compile_seconds``."""
         pn, pp = np.shape(padded_updates)
         key = (
             fusion_cache_key(fusion), pn, pp,
             np.dtype(padded_updates.dtype).str, n_real, self.hierarchical,
         )
-        return self.cache.get_jitted(key, build)
+        fn, compile_s = self.cache.get(key, build, *concrete)
+        self.last_compile_seconds += compile_s
+        return fn

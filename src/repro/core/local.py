@@ -46,6 +46,22 @@ from repro.utils.jitcache import CompiledCache, bucket_rows, fusion_cache_key
 _PALLAS_WSUM = ("fedavg", "gradavg", "iteravg", "fedavgm", "fedadam")
 
 
+def _check_scale(scale) -> np.ndarray:
+    """A block's optional third element must be a NUMERIC per-row scale —
+    catch the easy mistake of feeding ``UpdateStore.iter_arrivals``
+    (whose third element is the client-id list) to an engine directly."""
+    arr = np.asarray(scale)
+    if arr.dtype.kind not in "fiu":
+        raise TypeError(
+            "fuse_stream: blocks must be (updates, weights[, scale]) with "
+            f"a numeric per-row scale, got dtype {arr.dtype}; note "
+            "UpdateStore.iter_arrivals yields (block, weights, client_ids)"
+            " — adapt it (as AggregationService's async round does) before"
+            " streaming into an engine"
+        )
+    return arr
+
+
 @dataclasses.dataclass
 class StreamReport:
     """Phase accounting for one streamed aggregation."""
@@ -56,6 +72,10 @@ class StreamReport:
     n_rows: int = 0
     n_blocks: int = 0
     chunk_rows: int = 0
+    # pre-combine accumulator state, so async rounds can carry partial
+    # sums into the next round (continuous aggregation): (P,) fp32 / scalar
+    acc_wsum: Optional[np.ndarray] = None
+    acc_tot: float = 0.0
 
 
 @dataclasses.dataclass
@@ -105,12 +125,29 @@ class LocalEngine:
     def fuse_stream(
         self,
         fusion: FusionAlgorithm,
-        blocks: Iterable[Tuple[np.ndarray, np.ndarray]],
+        blocks: Iterable[Tuple[np.ndarray, ...]],
+        init: Optional[Tuple[np.ndarray, float]] = None,
+        chunk_rows: Optional[int] = None,
     ) -> Tuple[jnp.ndarray, StreamReport]:
         """Fuse a reducible fusion from an iterator of (chunk, P) blocks
-        (e.g. ``UpdateStore.iter_chunks``) without ever holding the dense
-        matrix: one cached step executable folds each block into a (P,)
-        fp32 accumulator. Returns (fused, StreamReport)."""
+        (e.g. ``UpdateStore.iter_chunks``; ``iter_arrivals`` yields client
+        ids as its third element, so adapt it — the AggregationService
+        async round does — rather than feeding it here directly) without
+        ever holding the dense matrix: one cached step executable folds
+        each block into a (P,) fp32 accumulator.
+
+        Blocks are ``(updates, weights)`` or ``(updates, weights, scale)``
+        — the optional NUMERIC (c,) ``scale`` multiplies the EFFECTIVE
+        weights, so staleness discounting bites even for fusions (IterAvg)
+        that remap client weights. ``chunk_rows`` pins the step
+        executable's row count (undersized blocks are zero-weight padded):
+        pass the configured chunk so elastic/async rounds whose LAST block
+        varies still hit one cached executable — the key
+        ``is_warm_stream`` probes. Unset, the first block's size is used.
+        ``init`` seeds the accumulator with a previous round's
+        (wsum, tot) — the async carry-over; the final pre-combine
+        accumulator is returned on the report (``acc_wsum``/``acc_tot``).
+        Returns (fused, StreamReport)."""
         if not fusion.reducible:
             raise ValueError(
                 f"{fusion.name} is not reducible — streamed aggregation "
@@ -123,20 +160,27 @@ class LocalEngine:
         while True:
             t0 = time.perf_counter()
             try:
-                block, w = next(it)
+                item = next(it)
             except StopIteration:
                 break
             rep.ingest_seconds += time.perf_counter() - t0
+            block, w = item[0], item[1]
+            scale = _check_scale(item[2]) if len(item) > 2 else None
             if chunk is None:
-                chunk, dim = block.shape
+                dim = block.shape[1]
+                chunk = int(chunk_rows) if chunk_rows else block.shape[0]
                 rep.chunk_rows = chunk
                 step, compile_s = self._stream_step(
                     fusion, chunk, dim, block.dtype
                 )
                 rep.compile_seconds = compile_s
                 self.last_compile_seconds = compile_s
-                wsum = jnp.zeros((dim,), jnp.float32)
-                tot = jnp.zeros((), jnp.float32)
+                wsum, tot = self._stream_init(dim, init)
+            if block.shape[0] > chunk:
+                raise ValueError(
+                    f"fuse_stream: block of {block.shape[0]} rows exceeds "
+                    f"chunk_rows={chunk}"
+                )
             rows = block.shape[0]
             if rows < chunk:           # ragged final block: zero-weight pad
                 padded = np.zeros((chunk, dim), block.dtype)
@@ -147,6 +191,8 @@ class LocalEngine:
             w = np.array(
                 fusion.effective_weights(jnp.asarray(w, jnp.float32))
             )
+            if scale is not None:
+                w[:rows] *= np.asarray(scale, np.float32)[:rows]
             if rows < chunk:
                 w[rows:] = 0.0         # effective_weights may remap pads
             t0 = time.perf_counter()
@@ -155,11 +201,28 @@ class LocalEngine:
             rep.n_rows += rows
             rep.n_blocks += 1
         if rep.n_blocks == 0:
-            raise ValueError("fuse_stream: empty block iterator")
+            if init is None:
+                raise ValueError("fuse_stream: empty block iterator")
+            # carry-only round: nothing arrived, combine the carried sums
+            wsum, tot = self._stream_init(init[0].shape[0], init)
         t0 = time.perf_counter()
+        rep.acc_wsum = np.asarray(wsum)
+        rep.acc_tot = float(tot)
         fused = jax.block_until_ready(fusion.combine(wsum, tot))
         rep.compute_seconds += time.perf_counter() - t0
         return fused, rep
+
+    @staticmethod
+    def _stream_init(dim, init):
+        if init is None:
+            return jnp.zeros((dim,), jnp.float32), jnp.zeros((), jnp.float32)
+        wsum = jnp.asarray(init[0], jnp.float32)
+        if wsum.shape != (dim,):
+            raise ValueError(
+                f"fuse_stream: carried accumulator has dim {wsum.shape}, "
+                f"stream blocks have dim {dim}"
+            )
+        return wsum, jnp.asarray(init[1], jnp.float32)
 
     # -- cache introspection (planner reuse term) -----------------------------
     def is_warm(self, fusion, n: int, P: int, dtype) -> bool:

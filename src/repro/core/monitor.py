@@ -1,6 +1,12 @@
 """Monitor — Algorithm 1's ``monitor(T_h, P)``: wait until a threshold
 count of client updates has landed in the store, or a timeout elapses
-(straggler control). The clock is injectable for deterministic tests."""
+(straggler control). The clock is injectable for deterministic tests.
+
+``wait()`` is the serialized gate (block, then aggregate). The async
+round mode instead threads ``should_close`` into
+``UpdateStore.iter_arrivals`` so the SAME threshold/timeout policy
+decides when an in-flight arrival stream closes — the aggregator folds
+partial sums for the whole window the serialized path spends idle."""
 from __future__ import annotations
 
 import dataclasses
@@ -34,13 +40,23 @@ class Monitor:
         self.clock = clock
         self.sleep = sleep
 
+    def should_close(self, count: int, waited: float) -> bool:
+        """The gate, as a pure predicate: True once the threshold is met
+        OR the timeout has elapsed. Threshold wins when both land on the
+        same poll (a round that fills exactly at the deadline is ready)."""
+        return count >= self.threshold or waited >= self.timeout
+
+    def result(self, count: int, waited: float) -> MonitorResult:
+        """Structured outcome for a gate that closed at (count, waited)."""
+        return MonitorResult(
+            ready=count >= self.threshold, count=count, waited=waited
+        )
+
     def wait(self) -> MonitorResult:
         start = self.clock()
         while True:
             count = self.store.count()
             waited = self.clock() - start
-            if count >= self.threshold:
-                return MonitorResult(ready=True, count=count, waited=waited)
-            if waited >= self.timeout:
-                return MonitorResult(ready=False, count=count, waited=waited)
+            if self.should_close(count, waited):
+                return self.result(count, waited)
             self.sleep(self.poll_interval)

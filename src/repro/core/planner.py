@@ -20,7 +20,7 @@ once S exceeds HBM headroom — the paper's memory wall).
 from __future__ import annotations
 
 import dataclasses
-from typing import Collection, Dict, List, Optional
+from typing import Collection, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -56,6 +56,10 @@ class Planner:
     # costed below cold ones (ties between a warm single-chip plan and a
     # marginally-faster cold distributed plan resolve to the warm one).
     compile_overhead: float = 50e-3
+    # async-round residue: what CANNOT hide under the monitor wait — the
+    # close-time drain of the last partial chunk plus the final combine
+    # (one poll interval + a block fold, in practice a few milliseconds)
+    overlap_drain_seconds: float = 5e-3
 
     def candidate_plans(self, load: Workload, fusion: FusionAlgorithm,
                         warm_engines: Collection[str] = ()) -> List[Plan]:
@@ -131,6 +135,41 @@ class Planner:
                 + (" (streamed from store)" if per_dev > hbm_cap else ""),
             ))
         return plans
+
+    # -- async overlap costing (Algorithm 1, straggler wait) -----------------
+    def overlap_estimate(
+        self, plan: Plan, expected_wait: float
+    ) -> Tuple[float, float]:
+        """(serialized_seconds, overlapped_seconds) for a store round whose
+        monitor is expected to wait ``expected_wait`` for stragglers.
+
+        Serialized (the PR-1 loop): the aggregator idles for the whole
+        wait, THEN ingests and fuses — wait + est. Overlapped (async
+        rounds): ingest/memory/compile stream under the wait as arrivals
+        land, so the round costs max(wait, est) plus the close-time drain
+        residue. The gap — min(wait, est) − drain — is exactly the
+        straggler latency Algorithm 1 is meant to hide."""
+        serialized = expected_wait + plan.est_seconds
+        overlapped = (
+            max(expected_wait, plan.est_seconds) + self.overlap_drain_seconds
+        )
+        return serialized, overlapped
+
+    def prefer_async(
+        self,
+        load: Workload,
+        fusion: FusionAlgorithm,
+        expected_wait: float,
+        warm_engines: Collection[str] = (),
+    ) -> bool:
+        """True when the overlapped round model beats the serialized one —
+        i.e. when the monitor wait dominates the drain residue. Only
+        reducible fusions can fold while stragglers write."""
+        if not fusion.reducible:
+            return False
+        plan = self.plan(load, fusion, warm_engines)
+        serialized, overlapped = self.overlap_estimate(plan, expected_wait)
+        return overlapped < serialized
 
     def plan(self, load: Workload, fusion: FusionAlgorithm,
              warm_engines: Collection[str] = ()) -> Plan:

@@ -9,12 +9,29 @@ Round flow (mirrors Algorithm 1):
   2. small  -> single-chip engine (jnp baseline or fused Pallas path),
      updates land in memory exactly as IBMFL receives them over gRPC.
   3. large  -> clients were already redirected to the UpdateStore (the
-     seamless-transition hook, §III-D3); monitor(T_h, timeout) waits for
-     the straggler threshold; reducible fusions then STREAM (chunk, P)
-     blocks off the store through one cached step executable — the dense
-     (n, P) matrix never materializes on the host — while order-statistic
-     fusions fall back to the dense read / distributed engine.
+     seamless-transition hook, §III-D3); monitor(T_h, timeout) gates the
+     round; reducible fusions then STREAM (chunk, P) blocks off the store
+     through one cached step executable — on the single-chip engine or
+     per-shard over the mesh — so the dense (n, P) matrix never
+     materializes on the host, while order-statistic fusions fall back to
+     the dense read / distributed engine.
   4. The fused flat vector is unflattened back into the model pytree.
+
+ASYNC ROUNDS (``aggregate(from_store=True, async_round=True)``): instead
+of idling in ``Monitor.wait()`` and only then ingesting, the round feeds
+``UpdateStore.iter_arrivals`` into the engine's ``fuse_stream`` — partial
+sums fold WHILE stragglers are still writing, and the monitor's
+threshold/timeout gate decides when the in-flight stream closes. Folded
+updates are consumed from the store (queue semantics); stragglers that
+miss the close land in the next round. With ``staleness_discount=γ`` the
+accumulator carries over between rounds (continuous / multi-tenant
+aggregation): round r starts from γ × round r−1's partial sums and a
+straggler that is a rounds late folds at weight γ^a. With the discount
+disabled (None, the default) each async round is independent and — on a
+fixed client set — bit-for-bit the same reduction as the synchronous
+streamed path (tests/test_equivalence.py). ``async_round="auto"`` lets
+the planner's overlap model choose (async wins once the expected monitor
+wait dominates the close-drain residue).
 
 Convergence guarantee (paper §IV-C): every engine computes the *same*
 fusion formula — tests/test_equivalence.py asserts allclose across
@@ -42,19 +59,32 @@ from repro.utils.pytree import flat_vector_to_tree, tree_to_flat_vector
 
 PyTree = Any
 
+# Monitor threshold sentinel: no client count can close the gate — the
+# round is gated by the timeout alone (async rounds with no expected
+# client count).
+_TIMEOUT_GATED = 1 << 62
+
 
 @dataclasses.dataclass
 class RoundReport:
     plan: Plan
     n_clients: int
     update_bytes: int
-    fuse_seconds: float          # wall time of the fusion computation
+    # wall time of the fusion computation; on async rounds this spans the
+    # whole overlapped window (fusing AND waiting ran concurrently), so
+    # compare phase_seconds across round modes, not fuse_seconds
+    fuse_seconds: float
     monitor: Optional[MonitorResult] = None
     route_next_to_store: bool = False
     streamed: bool = False       # True: chunked store pipeline (no dense n,P)
     # ingest (store -> host blocks) / compile (executable build; 0.0 on
     # warm rounds) / compute (device time) — the paper's Fig. 12 phases
     phase_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # seconds of the monitor window during which fusion work proceeded
+    # CONCURRENTLY with the straggler wait (0.0 on serialized rounds)
+    overlap_seconds: float = 0.0
+    async_round: bool = False    # arrival-driven overlapped round
+    empty: bool = False          # monitor timed out with nothing to fuse
 
 
 class AggregationService:
@@ -71,6 +101,10 @@ class AggregationService:
         monitor_timeout: float = 30.0,
         memory_cap_bytes: Optional[int] = None,
         stream_chunk_bytes: int = 64 << 20,
+        staleness_discount: Optional[float] = None,
+        clock=time.monotonic,
+        sleep=time.sleep,
+        poll_interval: float = 0.01,
     ):
         self.fusion = (
             get_fusion(fusion) if isinstance(fusion, str) else fusion
@@ -82,6 +116,18 @@ class AggregationService:
         self.monitor_timeout = monitor_timeout
         self.stream_chunk_bytes = stream_chunk_bytes
         self.memory_cap_bytes = memory_cap_bytes
+        # async-round continuity: None -> every async round is independent
+        # (sync-equivalent); γ in (0, 1] -> the accumulator carries over
+        # between rounds scaled by γ, and a straggler folding a rounds
+        # late is discounted to γ^a of its weight (continuous aggregation)
+        if staleness_discount is not None and not 0 < staleness_discount <= 1:
+            raise ValueError("staleness_discount must be in (0, 1] or None")
+        self.staleness_discount = staleness_discount
+        self.clock = clock               # injectable for deterministic tests
+        self.sleep = sleep
+        self.poll_interval = poll_interval
+        self._carry: Optional[tuple] = None   # (wsum (P,), tot) pre-combine
+        self._stale_ages: Dict[str, int] = {} # straggler id -> rounds late
         self.local = LocalEngine(
             strategy=local_strategy, memory_cap_bytes=memory_cap_bytes
         )
@@ -109,11 +155,20 @@ class AggregationService:
         return max(1, min(n, int(budget // max(row_bytes, 1))))
 
     def _warm_engines(self, n: int, p: int, dtype, chunk_rows=None):
+        """Engines holding a compiled executable for this round's shape —
+        dense keys, or (with ``chunk_rows``) the streamed step keys."""
         warm = set()
         if chunk_rows is not None:
             if self.local.is_warm_stream(self.fusion, chunk_rows, p, dtype):
                 warm.add("local")
-        elif self.local.is_warm(self.fusion, n, p, dtype):
+            if self.distributed is not None and self.distributed \
+                    .is_warm_stream(self.fusion, chunk_rows, p, dtype):
+                warm.add("distributed")
+            if self.hierarchical is not None and self.hierarchical \
+                    .is_warm_stream(self.fusion, chunk_rows, p, dtype):
+                warm.add("hierarchical")
+            return warm
+        if self.local.is_warm(self.fusion, n, p, dtype):
             warm.add("local")
         if self.distributed is not None and \
                 self.distributed.is_warm(self.fusion, n, p, dtype):
@@ -123,6 +178,13 @@ class AggregationService:
             warm.add("hierarchical")
         return warm
 
+    def _stream_engine(self, name: str):
+        if name == "hierarchical" and self.hierarchical is not None:
+            return self.hierarchical
+        if name == "distributed" and self.distributed is not None:
+            return self.distributed
+        return self.local
+
     # -- Algorithm 1 ----------------------------------------------------------
     def aggregate(
         self,
@@ -131,22 +193,44 @@ class AggregationService:
         template: Optional[PyTree] = None,
         expected_clients: Optional[int] = None,
         from_store: bool = False,
+        async_round: bool | str = False,
     ) -> Tuple[PyTree, RoundReport]:
         """One aggregation round. Either ``updates`` (in-memory, the small
         path's arrival mode) or ``from_store=True`` (clients wrote to the
-        UpdateStore; the monitor gates the round)."""
+        UpdateStore; the monitor gates the round). ``async_round`` (store
+        rounds, reducible fusions only): overlap fusion with the straggler
+        wait via arrival-driven streaming — True forces it, "auto" defers
+        to the planner's overlap cost model, False serializes (PR-1
+        behavior). An empty round (timeout, nothing landed) returns
+        ``(None, report)`` with ``report.empty`` set instead of raising."""
         monitor_result = None
         phase: Dict[str, float] = {}
         streamed = False
 
         if from_store:
             expected = expected_clients or self.store.count()
+            use_async = self._resolve_async(async_round, expected)
+            threshold = max(int(expected * self.threshold_frac), 1)
+            if use_async and expected == 0:
+                # async rounds legitimately start BEFORE any arrival; with
+                # no expected count, a threshold of 1 would close the gate
+                # on the first client that lands — gate on the timeout
+                # alone instead (such rounds report monitor.ready=False)
+                threshold = _TIMEOUT_GATED
             monitor = Monitor(
                 self.store,
-                threshold=max(int(expected * self.threshold_frac), 1),
+                threshold=threshold,
                 timeout=self.monitor_timeout,
+                poll_interval=self.poll_interval,
+                clock=self.clock, sleep=self.sleep,
             )
+            if use_async:
+                return self._aggregate_async(monitor, expected, template)
             monitor_result = monitor.wait()
+            if self.store.count() == 0:
+                # timed-out round on an empty store: structured empty
+                # report, not a LookupError out of store.meta()
+                return self._empty_round(monitor_result, template)
             n, p, dtype = self.store.meta()
             row_bytes = p * dtype.itemsize
             chunk_rows = self._chunk_rows(n, row_bytes)
@@ -162,12 +246,16 @@ class AggregationService:
                     chunk_rows=chunk_rows if can_stream else None,
                 ),
             )
-            if plan.engine == "local" and can_stream:
+            if can_stream:
                 # zero-materialization pipeline: (chunk, P) blocks flow
-                # from the store through one cached step executable
+                # from the store through one cached step executable —
+                # single-chip, or per-shard over the mesh (the dense
+                # (n, P) matrix never stages on the host either way)
+                engine = self._stream_engine(plan.engine)
                 t0 = time.perf_counter()
-                fused, srep = self.local.fuse_stream(
-                    self.fusion, self.store.iter_chunks(chunk_rows)
+                fused, srep = engine.fuse_stream(
+                    self.fusion, self.store.iter_chunks(chunk_rows),
+                    chunk_rows=chunk_rows,
                 )
                 dt = time.perf_counter() - t0
                 streamed = True
@@ -219,11 +307,13 @@ class AggregationService:
             phase["compile"] = self.local.last_compile_seconds
         elif plan.engine == "hierarchical" and self.hierarchical is not None:
             fused = self.hierarchical.fuse(self.fusion, stacked, w)
+            phase["compile"] = self.hierarchical.last_compile_seconds
         else:
             assert self.distributed is not None, (
                 "planner chose the distributed engine but no mesh was given"
             )
             fused = self.distributed.fuse(self.fusion, stacked, w)
+            phase["compile"] = self.distributed.last_compile_seconds
         fused = jax.block_until_ready(fused)
         dt = time.perf_counter() - t0
         phase["compute"] = dt - phase.get("compile", 0.0)
@@ -232,10 +322,177 @@ class AggregationService:
             expected_clients, streamed, phase,
         )
 
+    # -- async (monitor-overlapped) rounds ------------------------------------
+    def _resolve_async(self, async_round: bool | str, expected: int) -> bool:
+        """Decide whether this store round overlaps fusion with the wait.
+        Only reducible fusions can fold partial sums incrementally; "auto"
+        asks the planner whether the expected monitor wait (last round's
+        observed wait, else the timeout) dominates the drain residue."""
+        if not async_round or not self.fusion.reducible:
+            return False
+        if async_round != "auto":
+            return True
+        last_wait = next(
+            (r.monitor.waited for r in reversed(self.history)
+             if r.monitor is not None), None,
+        )
+        expected_wait = (
+            last_wait if last_wait is not None else self.monitor_timeout
+        )
+        try:
+            n, p, dtype = self.store.meta()
+        except LookupError:
+            # nothing has arrived yet — the wait is all there is, so
+            # overlapping it is free
+            return True
+        n_proj = max(expected, n, 1)
+        row_bytes = p * dtype.itemsize
+        load = Workload(
+            update_bytes=row_bytes, n_clients=n_proj,
+            dtype_bytes=dtype.itemsize,
+        )
+        # cost against the same warmth the round itself will plan with —
+        # a cached stream step must not be billed the cold compile term
+        warm = self._warm_engines(
+            n_proj, p, dtype,
+            chunk_rows=self._chunk_rows(n_proj, row_bytes),
+        )
+        return self.planner.prefer_async(
+            load, self.fusion, expected_wait, warm_engines=warm,
+        )
+
+    def _aggregate_async(
+        self, monitor: Monitor, expected: int, template,
+    ) -> Tuple[PyTree, RoundReport]:
+        """Arrival-driven round: fuse while stragglers write (Algorithm 1
+        with the monitor folded INTO the ingest stream). The threshold /
+        timeout gate closes the stream; folded updates are consumed from
+        the store; stragglers missing the close age into the next round."""
+        t_round = monitor.clock()
+        # learn (P, dtype) from the first arrival — or time out empty
+        while True:
+            count = self.store.count()
+            waited = monitor.clock() - t_round
+            if count > 0 or monitor.should_close(count, waited):
+                break
+            monitor.sleep(monitor.poll_interval)
+        if self.store.count() == 0:
+            mr = monitor.result(0, monitor.clock() - t_round)
+            return self._empty_round(mr, template, async_round=True)
+        n_now, p, dtype = self.store.meta()
+        row_bytes = p * dtype.itemsize
+        n_proj = max(expected, n_now, 1)
+        chunk_rows = self._chunk_rows(n_proj, row_bytes)
+        load = Workload(
+            update_bytes=row_bytes, n_clients=n_proj,
+            dtype_bytes=dtype.itemsize,
+        )
+        plan = self.planner.plan(
+            load, self.fusion,
+            warm_engines=self._warm_engines(
+                n_proj, p, dtype, chunk_rows=chunk_rows
+            ),
+        )
+        engine = self._stream_engine(plan.engine)
+
+        closed_at: Dict[str, float] = {}
+
+        def should_close(count: int, _stream_waited: float) -> bool:
+            # waited is measured from ROUND start: the pre-first-arrival
+            # poll above is part of the same monitor window
+            waited = monitor.clock() - t_round
+            done = monitor.should_close(count, waited)
+            if done and "waited" not in closed_at:
+                closed_at["count"] = count
+                closed_at["waited"] = waited
+            return done
+
+        gamma = self.staleness_discount
+        folded: List[str] = []
+        folded_versions: Dict[str, int] = {}
+        io_stats: Dict[str, float] = {}
+
+        def blocks():
+            for block, w, ids in self.store.iter_arrivals(
+                chunk_rows, should_close,
+                poll_interval=monitor.poll_interval,
+                clock=monitor.clock, sleep=monitor.sleep,
+                versions_out=folded_versions, stats_out=io_stats,
+            ):
+                folded.extend(ids)
+                if gamma is not None and self._stale_ages:
+                    scale = np.asarray(
+                        [gamma ** self._stale_ages.get(cid, 0)
+                         for cid in ids], np.float32,
+                    )
+                    yield block, w, scale
+                else:
+                    yield block, w
+
+        init = None
+        if gamma is not None and self._carry is not None:
+            init = (gamma * self._carry[0], gamma * self._carry[1])
+        t0 = time.perf_counter()
+        fused, srep = engine.fuse_stream(
+            self.fusion, blocks(), init=init, chunk_rows=chunk_rows,
+        )
+        dt = time.perf_counter() - t0
+
+        # queue semantics: what we folded is consumed (version-checked —
+        # an update re-written mid-round survives for the next round);
+        # what raced past the close stays, one round staler
+        self.store.remove(folded, versions=folded_versions)
+        if gamma is not None:
+            self._carry = (srep.acc_wsum, srep.acc_tot)
+        self._stale_ages = {
+            cid: self._stale_ages.get(cid, 0) + 1
+            for cid in self.store.client_ids()
+        }
+
+        overlap = closed_at.get("waited", 0.0)
+        mr = monitor.result(
+            int(closed_at.get("count", len(folded))), overlap,
+        )
+        # the engine's ingest clock times next(it), which for the arrival
+        # stream is dominated by the IDLE poll wait; report actual block
+        # staging I/O instead so phases stay comparable across round modes
+        # (the wait itself is the `overlap` phase / overlap_seconds)
+        phase = {
+            "ingest": io_stats.get("load_seconds", 0.0),
+            "compile": srep.compile_seconds,
+            "compute": srep.compute_seconds,
+            "overlap": overlap,
+        }
+        return self._finish(
+            fused, template, plan, srep.n_rows, load, dt, mr,
+            expected, True, phase,
+            overlap_seconds=overlap, async_round=True,
+        )
+
+    def _empty_round(
+        self, monitor_result: MonitorResult, template, async_round=False,
+    ) -> Tuple[None, RoundReport]:
+        """Timed-out round with nothing to fuse: a structured report (the
+        caller keeps the previous model) instead of a LookupError."""
+        plan = Plan(
+            engine="local", workload_class=WorkloadClass.VMEM_RESIDENT,
+            est_seconds=0.0, breakdown={}, n_devices=1, feasible=True,
+            reason="empty round: monitor timed out with no arrivals",
+        )
+        report = RoundReport(
+            plan=plan, n_clients=0, update_bytes=0, fuse_seconds=0.0,
+            monitor=monitor_result, route_next_to_store=True,
+            streamed=False, phase_seconds={}, async_round=async_round,
+            empty=True,
+        )
+        self.history.append(report)
+        return None, report
+
     # -- round epilogue -------------------------------------------------------
     def _finish(
         self, fused, template, plan, n, load, dt, monitor_result,
         expected_clients, streamed, phase,
+        overlap_seconds: float = 0.0, async_round: bool = False,
     ):
         # §III-D3 seamless transition: if next round's projected load would
         # overflow a single chip (even the streamed local path then needs
@@ -258,6 +515,8 @@ class AggregationService:
             route_next_to_store=route_next,
             streamed=streamed,
             phase_seconds=phase,
+            overlap_seconds=overlap_seconds,
+            async_round=async_round,
         )
         self.history.append(report)
 

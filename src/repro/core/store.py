@@ -15,8 +15,12 @@ The aggregator-side read path is STREAMING-first: ``iter_chunks`` hands
 the engine fixed-size (chunk, P) blocks with the next block prefetched on
 a reader thread (double buffering), so a round never materializes the
 dense (n, P) matrix on the host — peak ingest allocation is O(chunk * P).
-``read_stacked`` remains for order-statistic fusions that genuinely need
-all rows at once.
+``iter_arrivals`` is the arrival-driven variant (the async-round
+substrate): it yields a block as soon as ``chunk_rows`` NEW updates land,
+snapshot-free, with the caller's threshold/timeout gate deciding when the
+stream *closes* rather than when it starts — fusion overlaps the
+straggler wait. ``read_stacked`` remains for order-statistic fusions that
+genuinely need all rows at once.
 
 Stored dtype is preserved (bf16 updates stay 2 bytes on the wire and in
 the spool; the seed force-cast to fp32, doubling bytes); only integer /
@@ -31,7 +35,8 @@ import dataclasses
 import os
 import queue
 import threading
-from typing import Dict, Iterator, List, Optional, Tuple
+import time
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -78,6 +83,9 @@ class UpdateStore:
         self.datanode_bw = datanode_bw
         self._mem: Dict[str, Tuple[np.ndarray, float]] = {}
         self._weights: Dict[str, float] = {}
+        # per-id write counter: lets a version-aware remove() keep an
+        # update that was re-written after a round folded its predecessor
+        self._versions: Dict[str, int] = {}
         self._lock = threading.Lock()
         self.stats = StoreStats()
         if backend == "disk":
@@ -122,6 +130,7 @@ class UpdateStore:
                 self._mem[client_id] = (vec, weight)
             else:
                 self._weights[client_id] = weight
+            self._versions[client_id] = self._versions.get(client_id, 0) + 1
             self.stats.writes += 1
             self.stats.bytes_written += nbytes
             self.stats.sim_write_seconds += latency
@@ -140,16 +149,35 @@ class UpdateStore:
             return sorted(src.keys())
 
     def read(self, client_id: str) -> Tuple[np.ndarray, float]:
+        u, w, _ = self._read_versioned(client_id)
+        return u, w
+
+    def _read_versioned(
+        self, client_id: str
+    ) -> Tuple[np.ndarray, float, int]:
+        """(update, weight, write-version). For the memory backend the
+        array and version are captured under ONE lock, so version-checked
+        removal is exact; the disk backend's blob read is lock-free as
+        ever, so a racing overwrite can at worst cause a harmless re-fold
+        next round (never a lost update)."""
         if self.backend == "memory":
             with self._lock:
-                return self._mem[client_id]
+                arr, weight = self._mem[client_id]
+                version = self._versions.get(client_id, 0)
+            # hand out a read-only VIEW: the spool keeps the only mutable
+            # reference, so a caller scribbling on a block cannot corrupt
+            # what a concurrent (or later) round will read
+            view = arr.view()
+            view.flags.writeable = False
+            return view, weight, version
         with self._lock:
             weight = self._weights[client_id]
+            version = self._versions.get(client_id, 0)
         blob = np.load(self._path(client_id))
         dt = self._sidecar_dtype(client_id)
         if dt is not None:
             blob = blob.view(dt)
-        return blob, weight
+        return blob, weight, version
 
     def _sidecar_dtype(self, client_id: str) -> Optional[np.dtype]:
         try:
@@ -193,21 +221,7 @@ class UpdateStore:
         batches = [
             ids[i:i + chunk_rows] for i in range(0, len(ids), chunk_rows)
         ]
-
-        def load(batch):
-            ups, ws = [], []
-            for cid in batch:
-                u, w = self.read(cid)
-                ups.append(u)
-                ws.append(w)
-            block = np.stack(ups)
-            with self._lock:
-                self.stats.reads += len(batch)
-                self.stats.bytes_read += block.nbytes
-                self.stats.peak_block_bytes = max(
-                    self.stats.peak_block_bytes, block.nbytes
-                )
-            return block, np.asarray(ws, np.float32)
+        load = self._load_block
 
         if not prefetch:
             for batch in batches:
@@ -254,6 +268,88 @@ class UpdateStore:
             stop.set()
             t.join()
 
+    def _load_block(
+        self,
+        batch: List[str],
+        versions_out: Optional[Dict[str, int]] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Stack one batch of client ids into ((c, P) block, (c,) weights)
+        — blob reads happen lock-free, stats update under the lock.
+        ``versions_out`` collects each id's write-version AS READ, for
+        version-checked consumption (``remove``)."""
+        ups, ws = [], []
+        for cid in batch:
+            u, w, v = self._read_versioned(cid)
+            if versions_out is not None:
+                versions_out[cid] = v
+            ups.append(u)
+            ws.append(w)
+        block = np.stack(ups)
+        with self._lock:
+            self.stats.reads += len(batch)
+            self.stats.bytes_read += block.nbytes
+            self.stats.peak_block_bytes = max(
+                self.stats.peak_block_bytes, block.nbytes
+            )
+        return block, np.asarray(ws, np.float32)
+
+    def iter_arrivals(
+        self,
+        chunk_rows: int,
+        should_close: Callable[[int, float], bool],
+        poll_interval: float = 0.01,
+        clock: Callable[[], float] = time.monotonic,
+        sleep: Callable[[float], None] = time.sleep,
+        versions_out: Optional[Dict[str, int]] = None,
+        stats_out: Optional[Dict[str, float]] = None,
+    ) -> Iterator[Tuple[np.ndarray, np.ndarray, List[str]]]:
+        """Arrival-driven streaming read — the async-round substrate.
+
+        Yields ((c, P) block, (c,) weights, client_ids) as soon as
+        ``chunk_rows`` NEW updates have landed, without snapshotting the
+        index up front: updates written while the stream is live are
+        picked up on the next poll, so an engine can fold partial sums
+        while stragglers are still writing. ``should_close(count, waited)``
+        — the Monitor's threshold/timeout gate — is consulted every poll
+        with the total number of updates observed so far and the seconds
+        since the call; once it returns True the stream CLOSES: everything
+        already landed is drained (full blocks, then one ragged remainder)
+        and iteration stops. Only the final block can be ragged, which is
+        the contract the engines' fixed-shape step executables rely on.
+        Updates written after the close belong to the next round.
+
+        NOTE the third tuple element is the block's client ids — the
+        engines' ``fuse_stream`` block protocol instead expects an
+        optional numeric per-row scale there, so adapt (as
+        ``AggregationService._aggregate_async`` does) rather than feeding
+        this iterator to an engine directly. ``versions_out`` collects
+        write-versions as read (for version-checked ``remove``);
+        ``stats_out["load_seconds"]`` accumulates actual block-staging
+        I/O time, separate from the idle poll wait.
+        """
+        chunk_rows = max(int(chunk_rows), 1)
+        seen: set = set()
+        pending: List[str] = []
+        start = clock()
+        while True:
+            fresh = [cid for cid in self.client_ids() if cid not in seen]
+            seen.update(fresh)
+            pending.extend(fresh)
+            closed = should_close(len(seen), clock() - start)
+            while len(pending) >= chunk_rows or (closed and pending):
+                batch, pending = pending[:chunk_rows], pending[chunk_rows:]
+                t0 = time.perf_counter()
+                block, w = self._load_block(batch, versions_out=versions_out)
+                if stats_out is not None:
+                    stats_out["load_seconds"] = (
+                        stats_out.get("load_seconds", 0.0)
+                        + time.perf_counter() - t0
+                    )
+                yield block, w, batch
+            if closed:
+                return
+            sleep(poll_interval)
+
     def read_stacked(self) -> Tuple[np.ndarray, np.ndarray]:
         """All updates as (n, P) + weights (n,) — the DENSE engine input.
         Order-statistic fusions still need this; reducible rounds should
@@ -269,18 +365,64 @@ class UpdateStore:
         ids = self.client_ids()
         return [ids[i::n_parts] for i in range(n_parts)]
 
-    def clear(self) -> None:
+    def remove(
+        self,
+        client_ids: Iterable[str],
+        versions: Optional[Dict[str, int]] = None,
+    ) -> None:
+        """Consume updates — async rounds treat the store as a queue and
+        remove what they fold, so late stragglers are what remains for the
+        next round. With ``versions`` (id -> write-version as folded, from
+        ``iter_arrivals``), an id whose version has since advanced is
+        KEPT: a client that re-wrote mid-round keeps its newer update for
+        the next round instead of losing it. Index entries drop under the
+        lock; blob deletion, like all disk I/O, happens outside the
+        critical section.
+
+        The version guard is exact for the memory backend. On disk,
+        ``write`` saves the blob before registering it, so a re-write
+        racing the unlink batch is re-checked per id right before its
+        files go; a write landing inside that last microsecond window can
+        still lose its blob (lock-free spool limitation)."""
+        ids = list(client_ids)
+        doomed = []
         with self._lock:
+            for cid in ids:
+                if versions is not None and \
+                        self._versions.get(cid, 0) != versions.get(cid, -1):
+                    continue    # re-written since the fold: keep it
+                self._mem.pop(cid, None)
+                self._weights.pop(cid, None)
+                doomed.append(cid)
+        if self.backend != "disk":
+            return
+        for cid in doomed:
+            if versions is not None:
+                with self._lock:
+                    if self._versions.get(cid, 0) != versions.get(cid, -1):
+                        continue    # re-registered while we were unlinking
+            self._unlink([cid])
+
+    def clear(self) -> None:
+        """Drop every update and reset stats for a fresh round sequence.
+        Ids are snapshotted under the lock; spool blobs are deleted outside
+        it (the store's locking discipline: no disk I/O in the critical
+        section)."""
+        with self._lock:
+            doomed = list(self._weights) if self.backend == "disk" else []
             self._mem.clear()
-            if self.backend == "disk":
-                for cid in list(self._weights):
-                    for path in (self._path(cid), self._path(cid) + ".w",
-                                 self._path(cid) + ".dtype"):
-                        try:
-                            os.remove(path)
-                        except FileNotFoundError:
-                            pass
-                self._weights.clear()
+            self._weights.clear()
+            self.stats = StoreStats()
+        self._unlink(doomed)
+
+    def _unlink(self, client_ids: Iterable[str]) -> None:
+        for cid in client_ids:
+            for path in (self._path(cid), self._path(cid) + ".w",
+                         self._path(cid) + ".dtype"):
+                try:
+                    os.remove(path)
+                except FileNotFoundError:
+                    pass
 
     def _path(self, client_id: str) -> str:
         return os.path.join(self.spool_dir, f"{client_id}.npy")

@@ -118,10 +118,14 @@ class CompiledCache:
         self,
         key: Hashable,
         builder: Callable[[], Callable],
-        *arg_specs: jax.ShapeDtypeStruct,
+        *arg_specs,
     ) -> Tuple[Callable, float]:
         """Return ``(executable, compile_seconds_spent_now)`` — the second
-        element is 0.0 on a hit, so callers can report a compile phase."""
+        element is 0.0 on a hit, so callers can report a compile phase.
+        ``arg_specs`` are ShapeDtypeStructs OR concrete (possibly sharded,
+        committed) example arrays — the latter is what ``shard_map``
+        closures need, since their sharded lowering binds to real input
+        shardings."""
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None:
