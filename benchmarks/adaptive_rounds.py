@@ -1,0 +1,198 @@
+"""Adaptive (learned-gate) rounds vs the static threshold/timeout gate.
+
+Three arrival scenarios, each run through BOTH gates on identical
+arrival schedules (async/overlapped rounds throughout):
+
+  uniform    — every client arrives, spread evenly over the straggler
+               window: the learned gate must MATCH the static gate
+               (both close on the last arrival; there is nothing to
+               save).
+  bursty     — 90% of the fleet lands in an early burst, the rest DROP
+               (never arrive): the static full-threshold gate burns its
+               whole timeout every round; the learned gate thresholds
+               at the attainable fraction and closes on the burst.
+  heavy_tail — lognormal arrival offsets with the extreme tail past
+               the timeout (effectively dropped): the static gate times
+               out; the learned gate closes just past the attainable
+               tail.
+
+Per mode we report mean round wall-clock and mean inclusion (clients
+folded / clients expected). The acceptance bar (ISSUE 3): adaptive
+matches-or-beats static wall-clock at equal-or-better inclusion in
+>= 2 of 3 scenarios. Learning rounds (the static-gated warmup the
+controller observes) are excluded from the measured means and reported
+separately.
+
+Emits BENCH_adaptive.json.
+
+Usage:
+  python benchmarks/adaptive_rounds.py --quick     # CI smoke (~30 s)
+  python benchmarks/adaptive_rounds.py             # full  (~2 min)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+from repro.core import AggregationService, UpdateStore
+
+
+def scenario_offsets(name: str, n: int, spread: float, seed: int = 0):
+    """(offsets list for ARRIVING clients, expected fleet size n). A
+    client with no offset never arrives (drop-out)."""
+    rng = np.random.default_rng(seed)
+    if name == "uniform":
+        return list(np.linspace(spread / n, spread, n)), n
+    if name == "bursty":
+        arriving = max(int(n * 0.9), 1)
+        burst = rng.uniform(0.05 * spread, 0.15 * spread, size=arriving)
+        return list(np.sort(burst)), n
+    if name == "heavy_tail":
+        body = rng.lognormal(mean=np.log(0.2 * spread), sigma=0.6,
+                             size=n - 2)
+        # the extreme tail sits past any sane deadline: dropped
+        return list(np.sort(np.clip(body, 0.0, spread))), n
+    raise ValueError(name)
+
+
+def make_clients(n: int, p: int, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=(n, p)).astype(np.float32)
+    w = rng.uniform(1, 7, size=(n,)).astype(np.float32)
+    return u, w
+
+
+def spread_writer(store, u, w, offsets):
+    """Write client i at its scenario offset (absolute, from thread
+    start)."""
+
+    def run():
+        t0 = time.perf_counter()
+        for i, off in enumerate(offsets):
+            lag = off - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            store.write(f"c{i:04d}", u[i], weight=float(w[i]))
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    return t
+
+
+def run_rounds(adaptive, offsets, expected, u, w, p, timeout, rounds,
+               warmup, cost_bias):
+    store = UpdateStore()
+    svc = AggregationService(
+        fusion="fedavg", local_strategy="jnp", store=store,
+        threshold_frac=1.0, monitor_timeout=timeout,
+        adaptive=adaptive, cost_bias=cost_bias,
+        stream_chunk_bytes=max(p * 4 * max(expected // 4, 1), 1 << 20),
+    )
+    walls, inclusions, learn_walls = [], [], []
+    for r in range(warmup + rounds):
+        writer = spread_writer(store, u, w, offsets)
+        t0 = time.perf_counter()
+        fused, rep = svc.aggregate(
+            from_store=True, expected_clients=expected, async_round=True,
+        )
+        wall = time.perf_counter() - t0
+        writer.join()
+        store.clear()   # drop anything that raced past the close
+        if r < warmup:
+            learn_walls.append(wall)
+            continue
+        walls.append(wall)
+        inclusions.append(rep.n_clients / expected)
+    pol = rep.close_policy
+    return {
+        "mean_wall_seconds": float(np.mean(walls)),
+        "wall_seconds": walls,
+        "mean_inclusion": float(np.mean(inclusions)),
+        "learning_wall_seconds": learn_walls,
+        "final_gate": {
+            "source": pol.source if pol else "static",
+            "threshold_frac": pol.threshold_frac if pol else 1.0,
+            "deadline": pol.deadline if pol else timeout,
+        },
+    }
+
+
+def bench(n, p, spread, timeout, rounds, warmup, cost_bias):
+    results, wins = {}, 0
+    for name in ("uniform", "bursty", "heavy_tail"):
+        offsets, expected = scenario_offsets(name, n, spread)
+        u, w = make_clients(expected, p)
+        per = {}
+        for mode, adaptive in (("static", False), ("adaptive", True)):
+            per[mode] = run_rounds(
+                adaptive, offsets, expected, u, w, p, timeout, rounds,
+                warmup, cost_bias,
+            )
+            print(f"{name:>10} {mode:>8}: wall "
+                  f"{per[mode]['mean_wall_seconds']:.3f}s inclusion "
+                  f"{per[mode]['mean_inclusion']:.3f} gate "
+                  f"{per[mode]['final_gate']}")
+        # match-or-beat: wall within 10% (or faster), inclusion within
+        # one client (or better)
+        win = (
+            per["adaptive"]["mean_wall_seconds"]
+            <= per["static"]["mean_wall_seconds"] * 1.10
+            and per["adaptive"]["mean_inclusion"]
+            >= per["static"]["mean_inclusion"] - 1.0 / expected - 1e-9
+        )
+        wins += win
+        speedup = (per["static"]["mean_wall_seconds"]
+                   / per["adaptive"]["mean_wall_seconds"])
+        per["speedup"] = speedup
+        per["adaptive_matches_or_beats"] = bool(win)
+        print(f"{name:>10}  -> speedup {speedup:.2f}x "
+              f"{'WIN' if win else 'no win'}")
+        results[name] = per
+    return results, wins
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--n", type=int, default=48)
+    ap.add_argument("--p", type=int, default=100_000)
+    ap.add_argument("--spread", type=float, default=1.0)
+    ap.add_argument("--timeout", type=float, default=4.0)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--cost-bias", type=float, default=0.5)
+    ap.add_argument("--out", default="BENCH_adaptive.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.n, args.p = 16, 20_000
+        args.spread, args.timeout = 0.5, 1.5
+        args.rounds, args.warmup = 2, 2
+    results, wins = bench(
+        args.n, args.p, args.spread, args.timeout, args.rounds,
+        args.warmup, args.cost_bias,
+    )
+    print(f"adaptive matches-or-beats static in {wins}/3 scenarios")
+    payload = {
+        "benchmark": "adaptive_rounds",
+        "config": {
+            "n_clients": args.n, "p": args.p,
+            "spread_seconds": args.spread,
+            "timeout_seconds": args.timeout, "rounds": args.rounds,
+            "warmup_rounds": args.warmup, "cost_bias": args.cost_bias,
+            "quick": args.quick,
+        },
+        "results": results,
+        "wins": wins,
+        "acceptance": wins >= 2,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

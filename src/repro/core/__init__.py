@@ -7,11 +7,13 @@ Layers:
   fusion/        fusion-algorithm library (FedAvg ... Krum/Zeno/GeoMedian)
   local.py       single-chip engine (jnp baseline | fused Pallas kernel)
   distributed.py shard_map map-reduce engine (+ hierarchical pod mode)
-  store.py       UpdateStore (the HDFS analogue)
-  monitor.py     threshold/timeout straggler gate
+  store.py       UpdateStore (the HDFS analogue) + SpoolTailer
+  monitor.py     threshold/timeout straggler gate (pluggable policy)
+  adaptive.py    learned arrival curves -> per-tenant close policies
   secure.py      pairwise additive-mask secure aggregation
   service.py     AggregationService facade (seamless transition)
 """
+from repro.core.adaptive import AdaptiveController, ArrivalModel, ClosePolicy
 from repro.core.distributed import DistributedEngine
 from repro.core.fusion import REGISTRY, FusionAlgorithm, get_fusion
 from repro.core.local import LocalEngine
@@ -19,7 +21,7 @@ from repro.core.monitor import Monitor, MonitorResult
 from repro.core.planner import Plan, Planner
 from repro.core.secure import SecureMasking
 from repro.core.service import AggregationService, RoundReport
-from repro.core.store import UpdateStore
+from repro.core.store import SpoolTailer, UpdateStore
 from repro.core.workload import (
     Workload,
     WorkloadClass,
@@ -28,7 +30,10 @@ from repro.core.workload import (
 )
 
 __all__ = [
+    "AdaptiveController",
     "AggregationService",
+    "ArrivalModel",
+    "ClosePolicy",
     "DistributedEngine",
     "FusionAlgorithm",
     "LocalEngine",
@@ -39,6 +44,7 @@ __all__ = [
     "REGISTRY",
     "RoundReport",
     "SecureMasking",
+    "SpoolTailer",
     "UpdateStore",
     "Workload",
     "WorkloadClass",

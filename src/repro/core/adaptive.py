@@ -1,0 +1,325 @@
+"""Adaptive aggregation controller — the paper's headline claim made
+real: "the first adaptive FL aggregator at the Edge, enabling users to
+manage the cost and efficiency trade-off" (arXiv:2204.07767, §V).
+
+The static gate (PR 2) closes a round at a fixed ``threshold_frac`` of
+expected clients or a fixed timeout. That wastes wall-clock whenever the
+observed arrival behavior diverges from the deadline: a fleet whose
+stragglers reliably land at 1.2 s idles out a 30 s timeout the first
+time two clients drop; a bursty fleet that fully arrives at 0.3 s still
+pays the threshold poll cadence. This module LEARNS the arrival curve
+and re-derives the gate every round:
+
+  ``ArrivalModel``       per-tenant exponentially-weighted empirical
+                         quantile curve of arrival offsets (seconds from
+                         round start to each client's store write), with
+                         censoring: fractions that did not arrive within
+                         a round's window stay unknown rather than
+                         polluting the curve, and an EW *attainable
+                         fraction* tracks client drop-out.
+  ``AdaptiveController`` owns one model per tenant, turns the learned
+                         curve into a ``ClosePolicy`` by minimizing the
+                         planner's cost-vs-staleness objective
+                         (``Planner.round_objective``) over a fraction
+                         grid, and persists across rounds (and — via
+                         ``state_dict`` — across aggregator restarts).
+  ``ClosePolicy``        the pluggable gate predicate ``Monitor``
+                         accepts: close at a learned threshold count OR
+                         a learned deadline, whichever first.
+
+The user knob is ``cost_bias`` in [0, 1]: 0 optimizes round wall-clock
+alone (cost — close as soon as the marginal straggler is not worth the
+wait), 1 optimizes update inclusion alone (efficiency — wait for every
+client the curve says will come). 0.5 balances them. The controller
+never waits past the static timeout: the learned deadline is capped, so
+a fleet whose behavior shifts degrades to the static gate, not worse.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.planner import Planner
+
+
+@dataclasses.dataclass
+class ClosePolicy:
+    """A concrete round-close gate: close once ``threshold`` updates
+    have landed OR ``deadline`` seconds have elapsed. Callable with the
+    ``(count, waited)`` signature ``Monitor`` and
+    ``UpdateStore.iter_arrivals`` expect, so it plugs into either."""
+
+    threshold: int          # arrival count that closes the gate
+    deadline: float         # seconds after which the gate closes anyway
+    threshold_frac: float   # threshold / expected (for reporting)
+    expected_wait: float    # learned t(threshold_frac); deadline basis
+    source: str = "static"  # "static" | "learned"
+
+    def __call__(self, count: int, waited: float) -> bool:
+        return count >= self.threshold or waited >= self.deadline
+
+
+class ArrivalModel:
+    """Exponentially-weighted empirical quantile curve of one tenant's
+    arrival offsets.
+
+    ``observe(offsets, expected)`` folds one round's arrival times
+    (seconds since round start, one per client that landed) into the
+    curve: quantile k is the offset by which fraction ``fracs[k]`` of
+    the EXPECTED fleet had arrived. Fractions the round never reached
+    (stragglers that missed the window, dropped clients) are censored —
+    the stored quantile keeps its previous estimate and the EW
+    ``attainable`` fraction decays instead, so the policy stops aiming
+    at fractions the fleet no longer delivers.
+
+    ``ema`` is the weight of the NEWEST round (0.5 adapts within ~2
+    rounds; lower is smoother).
+    """
+
+    def __init__(self, n_quantiles: int = 20, ema: float = 0.5):
+        if not 0 < ema <= 1:
+            raise ValueError("ema must be in (0, 1]")
+        self.fracs = np.arange(1, n_quantiles + 1) / n_quantiles
+        self.quantiles = np.full(n_quantiles, np.nan)
+        self.attainable: Optional[float] = None
+        # the exact attainable tail — EW of the LAST arrival's offset —
+        # so the policy can aim at "everyone who actually comes" even
+        # when that fraction falls between grid points
+        self.tail_wait: Optional[float] = None
+        self.ema = ema
+        self.rounds = 0
+
+    def observe(self, offsets: Sequence[float], expected: int) -> None:
+        arr = np.sort(np.asarray(list(offsets), np.float64))
+        expected = max(int(expected), len(arr), 1)
+        fresh = np.full_like(self.quantiles, np.nan)
+        for k, f in enumerate(self.fracs):
+            need = max(int(math.ceil(f * expected)), 1)
+            if need <= len(arr):
+                fresh[k] = max(arr[need - 1], 0.0)
+        a = self.ema
+        keep = np.isnan(fresh)
+        seed = np.isnan(self.quantiles)
+        blended = (1 - a) * self.quantiles + a * fresh
+        self.quantiles = np.where(
+            keep, self.quantiles, np.where(seed, fresh, blended)
+        )
+        arrived_frac = len(arr) / expected
+        self.attainable = (
+            arrived_frac if self.attainable is None
+            else (1 - a) * self.attainable + a * arrived_frac
+        )
+        if len(arr):
+            tail = max(float(arr[-1]), 0.0)
+            self.tail_wait = (
+                tail if self.tail_wait is None
+                else (1 - a) * self.tail_wait + a * tail
+            )
+        self.rounds += 1
+
+    def wait_for(self, frac: float) -> float:
+        """Learned seconds from round start until ``frac`` of the fleet
+        has arrived; ``inf`` for fractions the curve has never seen."""
+        finite = ~np.isnan(self.quantiles)
+        if not finite.any() or frac > self.fracs[finite].max():
+            return math.inf
+        return float(
+            np.interp(frac, self.fracs[finite], self.quantiles[finite])
+        )
+
+    # -- restart persistence -------------------------------------------------
+    def state_dict(self) -> Dict:
+        return {
+            "fracs": self.fracs.tolist(),
+            "quantiles": [
+                None if np.isnan(q) else float(q) for q in self.quantiles
+            ],
+            "attainable": self.attainable,
+            "tail_wait": self.tail_wait,
+            "ema": self.ema,
+            "rounds": self.rounds,
+        }
+
+    @classmethod
+    def from_state_dict(cls, state: Dict) -> "ArrivalModel":
+        m = cls(n_quantiles=len(state["fracs"]), ema=state["ema"])
+        m.fracs = np.asarray(state["fracs"], np.float64)
+        m.quantiles = np.asarray(
+            [np.nan if q is None else q for q in state["quantiles"]],
+            np.float64,
+        )
+        m.attainable = state["attainable"]
+        m.tail_wait = state.get("tail_wait")
+        m.rounds = int(state["rounds"])
+        return m
+
+
+class AdaptiveController:
+    """Per-tenant round-close policy learner (Algorithm 1, made
+    adaptive).
+
+    Lifecycle per round, per tenant::
+
+        pol = controller.policy(tenant, expected)   # before the monitor
+        ... run the round with pol as the gate ...
+        controller.observe_round(tenant, offsets, expected,
+                                 est_seconds=report.fuse_seconds)
+
+    ``policy`` returns the STATIC gate (``threshold_frac`` / ``timeout``,
+    exactly PR 2's behavior) until ``warmup_rounds`` observations exist
+    for the tenant; after that it minimizes
+    ``Planner.round_objective(wait, inclusion, cost_bias)`` over the
+    learned curve's fraction grid and emits a learned
+    threshold/deadline. The learned deadline is
+    ``deadline_slack * t(f*) + deadline_margin`` capped at the static
+    ``timeout`` — the controller can only ever close EARLIER than the
+    static gate's worst case, never later.
+
+    ``est_seconds`` (the tenant's observed fuse wall) enters the
+    objective through ``max(wait, est)``: waiting for stragglers is free
+    while the engine is still folding the updates already present.
+    """
+
+    def __init__(
+        self,
+        cost_bias: float = 0.5,
+        threshold_frac: float = 0.8,
+        timeout: float = 30.0,
+        planner: Optional[Planner] = None,
+        ema: float = 0.5,
+        n_quantiles: int = 20,
+        warmup_rounds: int = 1,
+        deadline_slack: float = 1.25,
+        deadline_margin: float = 0.25,
+    ):
+        if not 0 <= cost_bias <= 1:
+            raise ValueError("cost_bias must be in [0, 1]")
+        self.cost_bias = cost_bias
+        self.threshold_frac = threshold_frac
+        self.timeout = timeout
+        self.planner = planner or Planner()
+        self.ema = ema
+        self.n_quantiles = n_quantiles
+        self.warmup_rounds = warmup_rounds
+        self.deadline_slack = deadline_slack
+        self.deadline_margin = deadline_margin
+        self._models: Dict[str, ArrivalModel] = {}
+        self._est_seconds: Dict[str, float] = {}
+
+    # -- learning ------------------------------------------------------------
+    def observe_round(
+        self,
+        tenant: str,
+        offsets: Sequence[float],
+        expected: int,
+        est_seconds: Optional[float] = None,
+    ) -> None:
+        """Fold one closed round's arrival offsets (seconds from round
+        start per landed client) into the tenant's curve."""
+        model = self._models.get(tenant)
+        if model is None:
+            model = self._models[tenant] = ArrivalModel(
+                n_quantiles=self.n_quantiles, ema=self.ema
+            )
+        model.observe(offsets, expected)
+        if est_seconds is not None:
+            prev = self._est_seconds.get(tenant)
+            self._est_seconds[tenant] = (
+                est_seconds if prev is None
+                else (1 - self.ema) * prev + self.ema * est_seconds
+            )
+
+    def model(self, tenant: str) -> Optional[ArrivalModel]:
+        return self._models.get(tenant)
+
+    # -- policy --------------------------------------------------------------
+    def static_policy(self, expected: int) -> ClosePolicy:
+        return ClosePolicy(
+            threshold=max(int(expected * self.threshold_frac), 1),
+            deadline=self.timeout,
+            threshold_frac=self.threshold_frac,
+            expected_wait=self.timeout,
+            source="static",
+        )
+
+    def policy(self, tenant: str, expected: int) -> ClosePolicy:
+        """The gate for the tenant's next round: static until the curve
+        has ``warmup_rounds`` observations, learned after."""
+        model = self._models.get(tenant)
+        if model is None or model.rounds < self.warmup_rounds \
+                or expected <= 0:
+            return self.static_policy(max(expected, 1))
+        est = self._est_seconds.get(tenant, 0.0)
+        attainable = model.attainable if model.attainable is not None \
+            else 1.0
+        candidates = []
+        for f in model.fracs:
+            # a small margin keeps a fraction reachable through EW noise
+            if f > min(attainable * 1.02, 1.0):
+                break
+            wait = model.wait_for(float(f))
+            if not math.isfinite(wait):
+                break
+            candidates.append((float(f), wait))
+        if model.tail_wait is not None:
+            # the exact attainable fleet ("everyone who actually comes")
+            # — the grid rounds this fraction away, so offer it directly
+            candidates.append(
+                (min(attainable, 1.0), float(model.tail_wait))
+            )
+        # ascending f, so the <= tie-break below resolves toward the
+        # HIGHER-inclusion candidate (the tail candidate can fall
+        # between grid points)
+        candidates.sort()
+        best_f, best_wait, best_j = None, None, math.inf
+        for f, wait in candidates:
+            j = self.planner.round_objective(
+                expected_wait=wait,
+                inclusion=f,
+                cost_bias=self.cost_bias,
+                horizon=self.timeout,
+                est_seconds=est,
+            )
+            # <= so ties resolve toward higher inclusion
+            if j <= best_j:
+                best_f, best_wait, best_j = f, wait, j
+        if best_f is None:
+            return self.static_policy(expected)
+        # slack + a fixed margin: the threshold closes the common path,
+        # the deadline is a jitter-tolerant backstop — never past the
+        # static timeout
+        deadline = min(
+            self.deadline_slack * best_wait + self.deadline_margin,
+            self.timeout,
+        )
+        return ClosePolicy(
+            threshold=max(int(math.ceil(best_f * expected)), 1),
+            deadline=deadline,
+            threshold_frac=best_f,
+            expected_wait=best_wait,
+            source="learned",
+        )
+
+    # -- restart persistence -------------------------------------------------
+    def state_dict(self) -> Dict:
+        """JSON-able controller state (per-tenant curves + fuse-wall
+        estimates) so an aggregator restart resumes learned, not cold."""
+        return {
+            "models": {
+                t: m.state_dict() for t, m in self._models.items()
+            },
+            "est_seconds": dict(self._est_seconds),
+        }
+
+    def load_state_dict(self, state: Dict) -> None:
+        self._models = {
+            t: ArrivalModel.from_state_dict(s)
+            for t, s in state.get("models", {}).items()
+        }
+        self._est_seconds = dict(state.get("est_seconds", {}))
+
+    def tenants(self) -> List[str]:
+        return sorted(self._models)

@@ -6,7 +6,12 @@ count of client updates has landed in the store, or a timeout elapses
 round mode instead threads ``should_close`` into
 ``UpdateStore.iter_arrivals`` so the SAME threshold/timeout policy
 decides when an in-flight arrival stream closes — the aggregator folds
-partial sums for the whole window the serialized path spends idle."""
+partial sums for the whole window the serialized path spends idle.
+
+The gate is PLUGGABLE: pass ``policy`` (any ``(count, waited) -> bool``
+predicate, e.g. a learned ``repro.core.adaptive.ClosePolicy``) to
+replace the built-in static threshold/timeout test while keeping the
+wait loop, injectable clock, and result reporting."""
 from __future__ import annotations
 
 import dataclasses
@@ -24,6 +29,16 @@ class MonitorResult:
 
 
 class Monitor:
+    """Round-close gate over an :class:`UpdateStore`.
+
+    ``threshold`` / ``timeout`` define the static gate and the
+    ``ready`` semantics of :class:`MonitorResult`; ``policy`` (optional)
+    overrides the close predicate itself — the adaptive controller
+    passes its learned :class:`~repro.core.adaptive.ClosePolicy` here
+    with ``threshold`` / ``timeout`` mirroring the learned values so
+    reporting stays truthful. ``clock`` / ``sleep`` are injectable for
+    deterministic tests."""
+
     def __init__(
         self,
         store: UpdateStore,
@@ -32,6 +47,7 @@ class Monitor:
         poll_interval: float = 0.01,
         clock: Callable[[], float] = time.monotonic,
         sleep: Callable[[float], None] = time.sleep,
+        policy: Optional[Callable[[int, float], bool]] = None,
     ):
         self.store = store
         self.threshold = threshold
@@ -39,11 +55,16 @@ class Monitor:
         self.poll_interval = poll_interval
         self.clock = clock
         self.sleep = sleep
+        self.policy = policy
 
     def should_close(self, count: int, waited: float) -> bool:
         """The gate, as a pure predicate: True once the threshold is met
         OR the timeout has elapsed. Threshold wins when both land on the
-        same poll (a round that fills exactly at the deadline is ready)."""
+        same poll (a round that fills exactly at the deadline is ready).
+        With a pluggable ``policy`` installed, that predicate decides
+        instead."""
+        if self.policy is not None:
+            return self.policy(count, waited)
         return count >= self.threshold or waited >= self.timeout
 
     def result(self, count: int, waited: float) -> MonitorResult:
@@ -59,4 +80,6 @@ class Monitor:
             waited = self.clock() - start
             if self.should_close(count, waited):
                 return self.result(count, waited)
-            self.sleep(self.poll_interval)
+            # event-driven under the real clock (woken by the store's
+            # arrival condition); injected sleeps drive scripted time
+            self.store.wait_for_arrival(self.poll_interval, self.sleep)

@@ -16,6 +16,13 @@ each candidate engine:
 
 and picks the cheapest FEASIBLE plan (single-chip plans are infeasible
 once S exceeds HBM headroom — the paper's memory wall).
+
+Beyond engine choice, the planner owns the round-TIMING economics:
+``overlap_estimate`` / ``prefer_async`` cost the monitor-overlapped
+round against the serialized one (``async_round="auto"``), and
+``round_objective`` is the cost-vs-staleness trade-off the adaptive
+controller minimizes when learning a round-close policy (the paper's
+user-managed knob).
 """
 from __future__ import annotations
 
@@ -154,6 +161,35 @@ class Planner:
             max(expected_wait, plan.est_seconds) + self.overlap_drain_seconds
         )
         return serialized, overlapped
+
+    def round_objective(
+        self,
+        expected_wait: float,
+        inclusion: float,
+        cost_bias: float,
+        horizon: float,
+        est_seconds: float = 0.0,
+    ) -> float:
+        """The cost-vs-efficiency trade-off the adaptive controller
+        minimizes (the paper's user-managed knob, §V): a convex blend of
+
+          cost       — the overlapped round wall-clock for closing after
+                       ``expected_wait`` seconds: fusing proceeds under
+                       the wait (``max(wait, est_seconds)``) plus the
+                       close-drain residue, normalized by ``horizon``
+                       (the static timeout — the worst case a static
+                       gate would pay), and
+          staleness  — ``1 - inclusion``: the fraction of the expected
+                       fleet whose update misses this round and folds a
+                       round stale (or not at all).
+
+        ``cost_bias`` in [0, 1] weights them: 0 optimizes wall-clock
+        alone, 1 optimizes inclusion alone. Lower is better."""
+        overlapped = (
+            max(expected_wait, est_seconds) + self.overlap_drain_seconds
+        )
+        t_norm = min(overlapped, horizon) / max(horizon, 1e-9)
+        return (1.0 - cost_bias) * t_norm + cost_bias * (1.0 - inclusion)
 
     def prefer_async(
         self,

@@ -33,6 +33,21 @@ streamed path (tests/test_equivalence.py). ``async_round="auto"`` lets
 the planner's overlap model choose (async wins once the expected monitor
 wait dominates the close-drain residue).
 
+ADAPTIVE ROUNDS (``AggregationService(adaptive=True, cost_bias=b)``):
+the static threshold/timeout gate is replaced per round by the
+``repro.core.adaptive`` controller's learned policy — an
+exponentially-weighted empirical arrival curve per ``tenant`` (fed by
+the store's write timestamps) is minimized against the planner's
+cost-vs-staleness objective, so the gate closes exactly when the
+marginal straggler stops being worth the wait. ``cost_bias`` is the
+paper's user knob: 0 optimizes round wall-clock, 1 optimizes update
+inclusion. All service-side cross-round state — carry accumulator,
+straggler ages, learned curves — is keyed by ``tenant`` (model id).
+NOTE the UpdateStore itself has no tenant key: a round folds whatever
+ids are in the store, so tenants interleaving through one service must
+drain their own writes within their rounds (or use separate stores);
+tenant keying isolates the CONTINUITY state, not the spool.
+
 Convergence guarantee (paper §IV-C): every engine computes the *same*
 fusion formula — tests/test_equivalence.py asserts allclose across
 engines, which is the system's core invariant.
@@ -47,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.adaptive import AdaptiveController, ClosePolicy
 from repro.core.distributed import DistributedEngine
 from repro.core.fusion import FusionAlgorithm, get_fusion
 from repro.core.local import LocalEngine
@@ -85,6 +101,10 @@ class RoundReport:
     overlap_seconds: float = 0.0
     async_round: bool = False    # arrival-driven overlapped round
     empty: bool = False          # monitor timed out with nothing to fuse
+    tenant: str = "default"      # carry/controller key (multi-tenant rounds)
+    # the gate that closed this round — source == "learned" once the
+    # adaptive controller has enough arrival history for the tenant
+    close_policy: Optional[ClosePolicy] = None
 
 
 class AggregationService:
@@ -102,10 +122,50 @@ class AggregationService:
         memory_cap_bytes: Optional[int] = None,
         stream_chunk_bytes: int = 64 << 20,
         staleness_discount: Optional[float] = None,
+        adaptive: bool = False,
+        cost_bias: float = 0.5,
         clock=time.monotonic,
         sleep=time.sleep,
         poll_interval: float = 0.01,
     ):
+        """Configure the adaptive aggregation facade.
+
+        Args:
+          fusion: fusion algorithm name (``repro.core.fusion.REGISTRY``)
+            or instance; reducible ones (fedavg family) unlock streaming
+            and async rounds.
+          mesh: optional device mesh — enables the distributed (and,
+            with a ``pod`` axis, hierarchical) engines.
+          hw: hardware spec for the planner's roofline cost model.
+          local_strategy: ``"jnp"`` (baseline) or ``"pallas"`` (fused
+            kernel) for the single-chip engine.
+          store: the UpdateStore clients write to (``from_store``
+            rounds); a private memory-backed store by default.
+          threshold_frac: the STATIC gate — close once this fraction of
+            ``expected_clients`` has landed. The adaptive controller
+            re-derives it per round when ``adaptive=True``.
+          monitor_timeout: static gate deadline in seconds; also the cap
+            no learned deadline may exceed.
+          memory_cap_bytes: simulate a memory-limited aggregator node
+            (forces chunked streaming below the cap).
+          stream_chunk_bytes: target bytes per streamed (chunk, P) block
+            when no memory cap is set.
+          staleness_discount: γ in (0, 1] enables continuous rounds —
+            the accumulator carries over between async rounds scaled by
+            γ (per tenant), and a straggler folding ``a`` rounds late is
+            discounted to γ^a of its weight. None (default): every
+            round is independent and bit-equivalent to the synchronous
+            streamed path.
+          adaptive: learn per-tenant arrival curves and replace the
+            static gate with the controller's learned threshold/deadline
+            (``repro.core.adaptive``); state is inspectable at
+            ``self.controller``.
+          cost_bias: the paper's user knob in [0, 1] — 0 optimizes
+            round wall-clock (cost), 1 optimizes update inclusion
+            (efficiency); only meaningful with ``adaptive=True``.
+          clock / sleep / poll_interval: time sources for the monitor
+            and arrival streams, injectable for deterministic tests.
+        """
         self.fusion = (
             get_fusion(fusion) if isinstance(fusion, str) else fusion
         )
@@ -126,8 +186,11 @@ class AggregationService:
         self.clock = clock               # injectable for deterministic tests
         self.sleep = sleep
         self.poll_interval = poll_interval
-        self._carry: Optional[tuple] = None   # (wsum (P,), tot) pre-combine
-        self._stale_ages: Dict[str, int] = {} # straggler id -> rounds late
+        # per-TENANT round continuity (multi-tenant rounds interleave
+        # through one service without cross-talk): tenant -> (wsum, tot)
+        # pre-combine carry, and tenant -> {straggler id -> rounds late}
+        self._carry: Dict[str, tuple] = {}
+        self._stale_ages: Dict[str, Dict[str, int]] = {}
         self.local = LocalEngine(
             strategy=local_strategy, memory_cap_bytes=memory_cap_bytes
         )
@@ -141,6 +204,19 @@ class AggregationService:
         n_dev = mesh.devices.size if mesh is not None else 1
         n_pods = mesh.shape.get("pod", 1) if mesh is not None else 1
         self.planner = Planner(hw=hw, n_devices=n_dev, n_pods=n_pods)
+        if not 0 <= cost_bias <= 1:
+            raise ValueError("cost_bias must be in [0, 1]")
+        self.cost_bias = cost_bias
+        # the adaptive layer: learns per-tenant arrival curves off the
+        # store's timestamps and re-derives the gate every round
+        self.controller: Optional[AdaptiveController] = (
+            AdaptiveController(
+                cost_bias=cost_bias,
+                threshold_frac=threshold_frac,
+                timeout=monitor_timeout,
+                planner=self.planner,
+            ) if adaptive else None
+        )
         self.history: List[RoundReport] = []
 
     # -- streaming knobs ------------------------------------------------------
@@ -194,43 +270,93 @@ class AggregationService:
         expected_clients: Optional[int] = None,
         from_store: bool = False,
         async_round: bool | str = False,
+        tenant: str = "default",
     ) -> Tuple[PyTree, RoundReport]:
-        """One aggregation round. Either ``updates`` (in-memory, the small
-        path's arrival mode) or ``from_store=True`` (clients wrote to the
-        UpdateStore; the monitor gates the round). ``async_round`` (store
-        rounds, reducible fusions only): overlap fusion with the straggler
-        wait via arrival-driven streaming — True forces it, "auto" defers
-        to the planner's overlap cost model, False serializes (PR-1
-        behavior). An empty round (timeout, nothing landed) returns
-        ``(None, report)`` with ``report.empty`` set instead of raising."""
+        """One aggregation round. Returns ``(fused, RoundReport)``.
+
+        Input modes:
+          * ``updates`` (+ optional ``weights``) — in-memory, the small
+            path's arrival mode (updates arrived over RPC, IBMFL-style).
+          * ``from_store=True`` — clients wrote to the UpdateStore; the
+            monitor gates the round on ``expected_clients`` (falling
+            back to the current store count).
+
+        ``async_round`` (store rounds, reducible fusions only) overlaps
+        fusion with the straggler wait via arrival-driven streaming:
+        ``True`` forces it, ``"auto"`` defers to the planner's overlap
+        cost model (async wins once the expected monitor wait dominates
+        the close-drain residue), ``False`` serializes (wait, then
+        ingest). With ``staleness_discount=γ`` configured, async rounds
+        carry the accumulator across rounds per ``tenant`` and discount
+        a straggler that is ``a`` rounds late to ``γ^a`` of its weight.
+
+        ``tenant`` keys all service-side cross-round state — carry
+        accumulator, straggler ages, and the adaptive controller's
+        learned arrival curve — so interleaved multi-model rounds
+        through one service keep separate continuity state. The store
+        itself is NOT tenant-partitioned: a round folds whatever ids
+        are present, so concurrent tenants sharing one store must
+        drain their own writes within their rounds. With
+        ``adaptive=True`` on the service, the round's close gate is the
+        controller's learned threshold/deadline for this tenant (see
+        ``report.close_policy``).
+
+        An empty round (timeout, nothing landed) returns
+        ``(None, report)`` with ``report.empty`` set instead of
+        raising. ``template`` (a model pytree) unflattens the fused
+        vector back into model structure."""
         monitor_result = None
         phase: Dict[str, float] = {}
         streamed = False
+        policy = arrivals = t_round = t_round_store = None
+        expected = expected_clients
 
         if from_store:
             expected = expected_clients or self.store.count()
             use_async = self._resolve_async(async_round, expected)
             threshold = max(int(expected * self.threshold_frac), 1)
+            timeout = self.monitor_timeout
+            if self.controller is not None and expected > 0:
+                # the adaptive gate: learned threshold/deadline for this
+                # tenant (static until the arrival curve has history)
+                policy = self.controller.policy(tenant, expected)
+                threshold, timeout = policy.threshold, policy.deadline
             if use_async and expected == 0:
                 # async rounds legitimately start BEFORE any arrival; with
                 # no expected count, a threshold of 1 would close the gate
                 # on the first client that lands — gate on the timeout
                 # alone instead (such rounds report monitor.ready=False)
                 threshold = _TIMEOUT_GATED
+                policy = None
             monitor = Monitor(
                 self.store,
                 threshold=threshold,
-                timeout=self.monitor_timeout,
+                timeout=timeout,
                 poll_interval=self.poll_interval,
                 clock=self.clock, sleep=self.sleep,
+                policy=policy,
             )
+            t_round = self.clock()
+            # arrival offsets are computed on the STORE's clock (the
+            # timestamps' timebase), which may differ from the service
+            # clock under injected test clocks
+            t_round_store = self.store.clock()
             if use_async:
-                return self._aggregate_async(monitor, expected, template)
+                return self._aggregate_async(
+                    monitor, expected, template, tenant, t_round, policy,
+                    t_round_store,
+                )
             monitor_result = monitor.wait()
+            # arrival snapshot AT CLOSE — the controller's training
+            # signal; later stragglers belong to the next round's curve
+            arrivals = self.store.arrival_times()
             if self.store.count() == 0:
                 # timed-out round on an empty store: structured empty
                 # report, not a LookupError out of store.meta()
-                return self._empty_round(monitor_result, template)
+                return self._empty_round(
+                    monitor_result, template, tenant=tenant,
+                    t_round=t_round, expected=expected,
+                )
             n, p, dtype = self.store.meta()
             row_bytes = p * dtype.itemsize
             chunk_rows = self._chunk_rows(n, row_bytes)
@@ -267,6 +393,8 @@ class AggregationService:
                 return self._finish(
                     fused, template, plan, n, load, dt, monitor_result,
                     expected_clients, streamed, phase,
+                    tenant=tenant, policy=policy, t_round=t_round_store,
+                    expected=expected, arrivals=arrivals,
                 )
             t0 = time.perf_counter()
             stacked, w = self.store.read_stacked()
@@ -320,6 +448,8 @@ class AggregationService:
         return self._finish(
             fused, template, plan, n, load, dt, monitor_result,
             expected_clients, streamed, phase,
+            tenant=tenant, policy=policy, t_round=t_round_store,
+            expected=expected, arrivals=arrivals,
         )
 
     # -- async (monitor-overlapped) rounds ------------------------------------
@@ -363,22 +493,34 @@ class AggregationService:
 
     def _aggregate_async(
         self, monitor: Monitor, expected: int, template,
+        tenant: str = "default", t_round: Optional[float] = None,
+        policy: Optional[ClosePolicy] = None,
+        t_round_store: Optional[float] = None,
     ) -> Tuple[PyTree, RoundReport]:
         """Arrival-driven round: fuse while stragglers write (Algorithm 1
-        with the monitor folded INTO the ingest stream). The threshold /
-        timeout gate closes the stream; folded updates are consumed from
-        the store; stragglers missing the close age into the next round."""
-        t_round = monitor.clock()
+        with the monitor folded INTO the ingest stream). The gate —
+        static threshold/timeout or the controller's learned policy —
+        closes the stream; folded updates are consumed from the store;
+        stragglers missing the close age into the next round (per
+        tenant)."""
+        if t_round is None:
+            t_round = monitor.clock()
+        if t_round_store is None:
+            t_round_store = self.store.clock()
         # learn (P, dtype) from the first arrival — or time out empty
         while True:
             count = self.store.count()
             waited = monitor.clock() - t_round
             if count > 0 or monitor.should_close(count, waited):
                 break
-            monitor.sleep(monitor.poll_interval)
+            self.store.wait_for_arrival(monitor.poll_interval,
+                                        monitor.sleep)
         if self.store.count() == 0:
             mr = monitor.result(0, monitor.clock() - t_round)
-            return self._empty_round(mr, template, async_round=True)
+            return self._empty_round(
+                mr, template, async_round=True, tenant=tenant,
+                t_round=t_round, expected=expected,
+            )
         n_now, p, dtype = self.store.meta()
         row_bytes = p * dtype.itemsize
         n_proj = max(expected, n_now, 1)
@@ -408,6 +550,7 @@ class AggregationService:
             return done
 
         gamma = self.staleness_discount
+        ages = self._stale_ages.get(tenant, {})
         folded: List[str] = []
         folded_versions: Dict[str, int] = {}
         io_stats: Dict[str, float] = {}
@@ -420,32 +563,36 @@ class AggregationService:
                 versions_out=folded_versions, stats_out=io_stats,
             ):
                 folded.extend(ids)
-                if gamma is not None and self._stale_ages:
+                if gamma is not None and ages:
                     scale = np.asarray(
-                        [gamma ** self._stale_ages.get(cid, 0)
-                         for cid in ids], np.float32,
+                        [gamma ** ages.get(cid, 0) for cid in ids],
+                        np.float32,
                     )
                     yield block, w, scale
                 else:
                     yield block, w
 
         init = None
-        if gamma is not None and self._carry is not None:
-            init = (gamma * self._carry[0], gamma * self._carry[1])
+        carry = self._carry.get(tenant)
+        if gamma is not None and carry is not None:
+            init = (gamma * carry[0], gamma * carry[1])
         t0 = time.perf_counter()
         fused, srep = engine.fuse_stream(
             self.fusion, blocks(), init=init, chunk_rows=chunk_rows,
         )
         dt = time.perf_counter() - t0
 
+        # arrival snapshot BEFORE the consume drops timestamps — the
+        # adaptive controller's training signal for this tenant's curve
+        arrivals = self.store.arrival_times()
         # queue semantics: what we folded is consumed (version-checked —
         # an update re-written mid-round survives for the next round);
         # what raced past the close stays, one round staler
         self.store.remove(folded, versions=folded_versions)
         if gamma is not None:
-            self._carry = (srep.acc_wsum, srep.acc_tot)
-        self._stale_ages = {
-            cid: self._stale_ages.get(cid, 0) + 1
+            self._carry[tenant] = (srep.acc_wsum, srep.acc_tot)
+        self._stale_ages[tenant] = {
+            cid: ages.get(cid, 0) + 1
             for cid in self.store.client_ids()
         }
 
@@ -467,13 +614,21 @@ class AggregationService:
             fused, template, plan, srep.n_rows, load, dt, mr,
             expected, True, phase,
             overlap_seconds=overlap, async_round=True,
+            tenant=tenant, policy=policy, t_round=t_round_store,
+            expected=expected, arrivals=arrivals,
         )
 
     def _empty_round(
         self, monitor_result: MonitorResult, template, async_round=False,
+        tenant: str = "default", t_round: Optional[float] = None,
+        expected: Optional[int] = None,
     ) -> Tuple[None, RoundReport]:
         """Timed-out round with nothing to fuse: a structured report (the
         caller keeps the previous model) instead of a LookupError."""
+        if self.controller is not None and expected:
+            # an empty window is evidence too: the tenant's attainable
+            # fraction decays toward zero
+            self.controller.observe_round(tenant, [], expected)
         plan = Plan(
             engine="local", workload_class=WorkloadClass.VMEM_RESIDENT,
             est_seconds=0.0, breakdown={}, n_devices=1, feasible=True,
@@ -483,7 +638,7 @@ class AggregationService:
             plan=plan, n_clients=0, update_bytes=0, fuse_seconds=0.0,
             monitor=monitor_result, route_next_to_store=True,
             streamed=False, phase_seconds={}, async_round=async_round,
-            empty=True,
+            empty=True, tenant=tenant,
         )
         self.history.append(report)
         return None, report
@@ -493,6 +648,9 @@ class AggregationService:
         self, fused, template, plan, n, load, dt, monitor_result,
         expected_clients, streamed, phase,
         overlap_seconds: float = 0.0, async_round: bool = False,
+        tenant: str = "default", policy: Optional[ClosePolicy] = None,
+        t_round: Optional[float] = None, expected: Optional[int] = None,
+        arrivals: Optional[Dict[str, float]] = None,
     ):
         # §III-D3 seamless transition: if next round's projected load would
         # overflow a single chip (even the streamed local path then needs
@@ -506,6 +664,15 @@ class AggregationService:
             or self.planner.plan(next_load, self.fusion).engine != "local"
         )
 
+        # feed the round's observed arrival offsets back into the
+        # tenant's learned curve (store-gated rounds only)
+        if self.controller is not None and arrivals is not None \
+                and t_round is not None:
+            offsets = [max(t - t_round, 0.0) for t in arrivals.values()]
+            self.controller.observe_round(
+                tenant, offsets, expected or n, est_seconds=dt,
+            )
+
         report = RoundReport(
             plan=plan,
             n_clients=n,
@@ -517,6 +684,8 @@ class AggregationService:
             phase_seconds=phase,
             overlap_seconds=overlap_seconds,
             async_round=async_round,
+            tenant=tenant,
+            close_policy=policy,
         )
         self.history.append(report)
 

@@ -26,6 +26,14 @@ Stored dtype is preserved (bf16 updates stay 2 bytes on the wire and in
 the spool; the seed force-cast to fp32, doubling bytes); only integer /
 bool inputs are promoted to fp32.
 
+Every registered write is TIMESTAMPED on the store's injectable clock
+(``arrival_times()``) — the adaptive controller's training signal — and
+notifies an arrival condition, so arrival-driven readers
+(``iter_arrivals``, ``Monitor.wait``) wake event-driven instead of
+sleep-polling. ``SpoolTailer`` extends the same arrival path to blobs
+written DIRECTLY into a disk spool by external processes: inotify when
+the platform has it, directory polling elsewhere.
+
 Ingest-time accounting mirrors the paper's Fig. 12 'average write time':
 bytes / per-datanode bandwidth with ``replication`` copies.
 """
@@ -71,6 +79,8 @@ class UpdateStore:
         n_datanodes: int = 3,
         replication: int = 2,
         datanode_bw: float = 117e6,  # ~1 GbE in bytes/s, paper's testbed
+        clock: Callable[[], float] = time.monotonic,
+        sidecar_grace_seconds: float = 0.5,
     ):
         assert backend in ("memory", "disk")
         self.backend = backend
@@ -81,18 +91,34 @@ class UpdateStore:
         self.n_datanodes = n_datanodes
         self.replication = replication
         self.datanode_bw = datanode_bw
+        self.clock = clock   # arrival timestamping; injectable for tests
         self._mem: Dict[str, Tuple[np.ndarray, float]] = {}
         self._weights: Dict[str, float] = {}
         # per-id write counter: lets a version-aware remove() keep an
         # update that was re-written after a round folded its predecessor
         self._versions: Dict[str, int] = {}
+        # per-id arrival timestamp (self.clock timebase) — the adaptive
+        # controller's training signal (repro/core/adaptive.py)
+        self._arrivals: Dict[str, float] = {}
+        # external blobs first sighted without a weight sidecar:
+        # cid -> wall time first seen. They register at the default
+        # weight only after sidecar_grace_seconds, so a sidecar landing
+        # just behind its blob (the documented writer order) wins.
+        self.sidecar_grace_seconds = sidecar_grace_seconds
+        self._ext_seen: Dict[str, float] = {}
         self._lock = threading.Lock()
+        # notified on every registered arrival: arrival-driven readers
+        # (iter_arrivals) block here instead of sleep-polling
+        self._arrival_cv = threading.Condition(self._lock)
         self.stats = StoreStats()
         if backend == "disk":
             # fault tolerance (the HDFS property the paper leans on):
             # recover updates spooled by a previous aggregator incarnation
             # — weights persist in a sidecar next to each blob
-            self._weights.update(self._recover())
+            recovered = self._recover()
+            self._weights.update(recovered)
+            now = self.clock()
+            self._arrivals.update({cid: now for cid in recovered})
 
     # -- client side --------------------------------------------------------
     def write(self, client_id: str, update, weight: float = 1.0) -> float:
@@ -131,9 +157,11 @@ class UpdateStore:
             else:
                 self._weights[client_id] = weight
             self._versions[client_id] = self._versions.get(client_id, 0) + 1
+            self._arrivals[client_id] = self.clock()
             self.stats.writes += 1
             self.stats.bytes_written += nbytes
             self.stats.sim_write_seconds += latency
+            self._arrival_cv.notify_all()
         return latency
 
     # -- aggregator side ----------------------------------------------------
@@ -147,6 +175,25 @@ class UpdateStore:
         with self._lock:
             src = self._mem if self.backend == "memory" else self._weights
             return sorted(src.keys())
+
+    def arrival_times(self) -> Dict[str, float]:
+        """Snapshot of {client_id -> arrival timestamp} on the store's
+        ``clock`` timebase (``time.monotonic`` by default). This is the
+        adaptive controller's training signal: the service subtracts the
+        round's start time to get per-client arrival offsets."""
+        with self._lock:
+            return dict(self._arrivals)
+
+    def wait_for_arrival(self, timeout: float, sleep=time.sleep) -> None:
+        """Block until a new arrival is registered or ``timeout`` elapses.
+        Event-driven (condition wait, woken by ``write`` /
+        ``ingest_external``) under the real clock; with an INJECTED sleep
+        (scripted test clocks) the caller's sleep drives time instead."""
+        if sleep is not time.sleep:
+            sleep(timeout)
+            return
+        with self._arrival_cv:
+            self._arrival_cv.wait(timeout)
 
     def read(self, client_id: str) -> Tuple[np.ndarray, float]:
         u, w, _ = self._read_versioned(client_id)
@@ -348,7 +395,9 @@ class UpdateStore:
                 yield block, w, batch
             if closed:
                 return
-            sleep(poll_interval)
+            # event-driven under the real clock: wake on the next write's
+            # condition notify instead of burning the full poll interval
+            self.wait_for_arrival(poll_interval, sleep)
 
     def read_stacked(self) -> Tuple[np.ndarray, np.ndarray]:
         """All updates as (n, P) + weights (n,) — the DENSE engine input.
@@ -393,6 +442,7 @@ class UpdateStore:
                     continue    # re-written since the fold: keep it
                 self._mem.pop(cid, None)
                 self._weights.pop(cid, None)
+                self._arrivals.pop(cid, None)
                 doomed.append(cid)
         if self.backend != "disk":
             return
@@ -412,6 +462,8 @@ class UpdateStore:
             doomed = list(self._weights) if self.backend == "disk" else []
             self._mem.clear()
             self._weights.clear()
+            self._arrivals.clear()
+            self._ext_seen.clear()
             self.stats = StoreStats()
         self._unlink(doomed)
 
@@ -427,6 +479,60 @@ class UpdateStore:
     def _path(self, client_id: str) -> str:
         return os.path.join(self.spool_dir, f"{client_id}.npy")
 
+    # -- external spool writers (tailing) ------------------------------------
+    def ingest_external(self) -> List[str]:
+        """Register spool blobs written DIRECTLY into ``spool_dir`` by
+        external processes (clients mounting the spool, not calling
+        ``write``). Disk backend only; returns the newly registered ids.
+
+        An unreadable blob (a write still in flight under the polling
+        fallback) is skipped and picked up on a later pass — external
+        writers should write-to-temp-then-rename so the inotify
+        ``IN_MOVED_TO`` event always sees a complete file. Weight comes
+        from the ``.w`` sidecar when present. A blob with NO sidecar yet
+        is deferred for ``sidecar_grace_seconds`` (wall clock) before it
+        registers at weight 1.0: writers emit blob-then-sidecar, so
+        registering on first sight would race the sidecar and freeze the
+        weight at the default — the sidecar's own close event (or the
+        next poll tick) re-passes within the grace window."""
+        if self.backend != "disk":
+            return []
+        with self._lock:
+            known = set(self._weights)
+        new: List[str] = []
+        for name in sorted(os.listdir(self.spool_dir)):
+            if not name.endswith(".npy"):
+                continue
+            cid = name[: -len(".npy")]
+            if cid in known:
+                continue
+            try:
+                blob = np.load(self._path(cid), mmap_mode="r")
+                nbytes = int(blob.nbytes)
+            except Exception:
+                continue   # partial write: next pass gets it
+            try:
+                with open(self._path(cid) + ".w") as f:
+                    weight = float(f.read())
+            except (FileNotFoundError, ValueError):
+                now = time.monotonic()   # real elapsed, not self.clock
+                first = self._ext_seen.setdefault(cid, now)
+                if now - first < self.sidecar_grace_seconds:
+                    continue   # sidecar may still be in flight
+                weight = 1.0
+            self._ext_seen.pop(cid, None)
+            with self._arrival_cv:
+                if cid in self._weights:
+                    continue   # a concurrent write() beat us to it
+                self._weights[cid] = weight
+                self._versions[cid] = self._versions.get(cid, 0) + 1
+                self._arrivals[cid] = self.clock()
+                self.stats.writes += 1
+                self.stats.bytes_written += nbytes * self.replication
+                self._arrival_cv.notify_all()
+            new.append(cid)
+        return new
+
     def _recover(self) -> Dict[str, float]:
         """Rebuild the weight index from the spool after a restart."""
         weights: Dict[str, float] = {}
@@ -440,3 +546,117 @@ class UpdateStore:
                 except (FileNotFoundError, ValueError):
                     weights[cid] = 1.0
         return weights
+
+
+class _InotifyWatch:
+    """Minimal ctypes inotify(7) binding: block until something lands in
+    a directory. Raises ``OSError`` where inotify is unavailable (non-
+    Linux, exhausted watch quota) — callers fall back to polling."""
+
+    # no IN_CREATE: waking on creation would pass over files whose
+    # contents (and sidecars) are still being written
+    _IN_CLOSE_WRITE = 0x00000008
+    _IN_MOVED_TO = 0x00000080
+
+    def __init__(self, path: str):
+        import ctypes
+        import ctypes.util
+
+        libc_name = ctypes.util.find_library("c") or "libc.so.6"
+        self._libc = ctypes.CDLL(libc_name, use_errno=True)
+        self._fd = self._libc.inotify_init()
+        if self._fd < 0:
+            raise OSError(ctypes.get_errno(), "inotify_init failed")
+        mask = self._IN_CLOSE_WRITE | self._IN_MOVED_TO
+        wd = self._libc.inotify_add_watch(
+            self._fd, os.fsencode(path), mask
+        )
+        if wd < 0:
+            err = ctypes.get_errno()
+            os.close(self._fd)
+            raise OSError(err, f"inotify_add_watch({path}) failed")
+
+    def wait(self, timeout: float) -> bool:
+        """True if at least one filesystem event fired within ``timeout``
+        seconds (the event buffer is drained either way)."""
+        import select
+
+        ready, _, _ = select.select([self._fd], [], [], timeout)
+        if not ready:
+            return False
+        try:
+            os.read(self._fd, 65536)   # drain; content doesn't matter
+        except OSError:
+            return False
+        return True
+
+    def close(self) -> None:
+        try:
+            os.close(self._fd)
+        except OSError:
+            pass
+
+
+class SpoolTailer:
+    """Arrival-driven tailing of a DISK spool written by external
+    processes: a daemon thread registers foreign blobs into the store
+    index the moment they land, so ``iter_arrivals`` / the monitor see
+    them like any ``write()``.
+
+    Uses inotify (``IN_CLOSE_WRITE`` / ``IN_MOVED_TO``) when the
+    platform provides it — arrivals wake the tailer immediately instead
+    of on the next poll tick — and degrades to mtime-free directory
+    polling at ``poll_interval`` elsewhere; ``event_driven`` reports
+    which mode is live. Use as a context manager around a round::
+
+        with SpoolTailer(store) as tailer:
+            service.aggregate(from_store=True, async_round=True)
+    """
+
+    def __init__(self, store: UpdateStore, poll_interval: float = 0.25):
+        if store.backend != "disk":
+            raise ValueError("SpoolTailer tails DISK spools only")
+        self.store = store
+        self.poll_interval = poll_interval
+        self.event_driven = False
+        self._watch: Optional[_InotifyWatch] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> "SpoolTailer":
+        try:
+            self._watch = _InotifyWatch(self.store.spool_dir)
+            self.event_driven = True
+        except Exception:
+            self._watch = None   # polling fallback
+        self.store.ingest_external()   # catch anything already spooled
+        self._thread = threading.Thread(
+            target=self._run, name="spool-tailer", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            if self._watch is not None:
+                self._watch.wait(self.poll_interval)
+            else:
+                self._stop.wait(self.poll_interval)
+            if self._stop.is_set():
+                return
+            self.store.ingest_external()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._watch is not None:
+            self._watch.close()
+            self._watch = None
+
+    def __enter__(self) -> "SpoolTailer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

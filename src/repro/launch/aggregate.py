@@ -11,6 +11,14 @@ the paper's end-to-end flow (Fig. 12/13) in one command.
 thread spreads client arrivals over ``--spread`` seconds while the
 service folds partial sums off the arrival stream (Algorithm 1 with the
 monitor inside the ingest loop).
+
+``--adaptive`` enables the learned gate: the controller records each
+round's arrival curve and replaces the static ``--threshold-frac`` /
+``--timeout`` gate with a learned threshold/deadline that optimizes the
+``--cost-bias`` knob (0 = fastest rounds, 1 = maximum update inclusion).
+Run several ``--rounds`` to watch the policy move from ``static`` to
+``learned`` as the curve accumulates — the report line prints the gate
+each round used.
 """
 from __future__ import annotations
 
@@ -26,13 +34,22 @@ from repro.utils.mem import bytes_to_human
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--model", default="CNN4.6", choices=sorted(CNN_SUITE))
-    ap.add_argument("--clients", type=int, default=32)
-    ap.add_argument("--fusion", default="fedavg")
-    ap.add_argument("--local-strategy", default="jnp")
-    ap.add_argument("--threshold-frac", type=float, default=0.8)
-    ap.add_argument("--timeout", type=float, default=5.0)
+    ap = argparse.ArgumentParser(
+        description="End-to-end aggregation rounds over the UpdateStore "
+                    "(paper Fig. 12/13)."
+    )
+    ap.add_argument("--model", default="CNN4.6", choices=sorted(CNN_SUITE),
+                    help="Table-I CNN workload (sets the update size)")
+    ap.add_argument("--clients", type=int, default=32,
+                    help="simulated clients writing one update each")
+    ap.add_argument("--fusion", default="fedavg",
+                    help="fusion algorithm (repro.core.fusion.REGISTRY)")
+    ap.add_argument("--local-strategy", default="jnp",
+                    help='single-chip engine: "jnp" or "pallas"')
+    ap.add_argument("--threshold-frac", type=float, default=0.8,
+                    help="static gate: close at this fraction of clients")
+    ap.add_argument("--timeout", type=float, default=5.0,
+                    help="static gate deadline (and learned-deadline cap)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--async-rounds", action="store_true",
                     help="fold arrivals while stragglers write "
@@ -40,6 +57,14 @@ def main():
     ap.add_argument("--spread", type=float, default=1.0,
                     help="seconds over which async-round client arrivals "
                          "are spread")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="learn the arrival curve and close rounds with "
+                         "the adaptive controller's policy")
+    ap.add_argument("--cost-bias", type=float, default=0.5,
+                    help="adaptive knob in [0,1]: 0 optimizes round "
+                         "wall-clock, 1 optimizes update inclusion")
+    ap.add_argument("--rounds", type=int, default=1,
+                    help="rounds to run (adaptive gates need >1 to learn)")
     args = ap.parse_args()
 
     spec = CNN_SUITE[args.model]
@@ -50,48 +75,67 @@ def main():
         fusion=args.fusion, store=store,
         local_strategy=args.local_strategy,
         threshold_frac=args.threshold_frac, monitor_timeout=args.timeout,
+        adaptive=args.adaptive, cost_bias=args.cost_bias,
     )
     load = Workload(update_bytes=spec.bytes_fp32, n_clients=args.clients)
     print(f"[aggregate] model={args.model} w_s={bytes_to_human(spec.bytes_fp32)} "
           f"n={args.clients} S={bytes_to_human(load.total_bytes)} "
-          f"class={classify(load).value}")
+          f"class={classify(load).value}"
+          + (f" adaptive(cost_bias={args.cost_bias})" if args.adaptive
+             else ""))
 
-    t0 = time.time()
-    write_lat = []
+    for rnd in range(args.rounds):
+        t0 = time.time()
+        write_lat = []
 
-    def write_all():
-        pause = args.spread / max(args.clients, 1) if args.async_rounds \
-            else 0.0
-        for i in range(args.clients):
-            if pause:
-                time.sleep(pause)
-            u = rng.normal(size=(n_params,)).astype(np.float32)
-            write_lat.append(store.write(f"client{i:05d}", u,
-                                         weight=float(rng.integers(1, 100))))
+        def write_all():
+            pause = args.spread / max(args.clients, 1) \
+                if args.async_rounds or args.adaptive else 0.0
+            for i in range(args.clients):
+                if pause:
+                    time.sleep(pause)
+                u = rng.normal(size=(n_params,)).astype(np.float32)
+                write_lat.append(
+                    store.write(f"client{i:05d}", u,
+                                weight=float(rng.integers(1, 100)))
+                )
 
-    if args.async_rounds:
-        # arrivals land WHILE the service fuses — the overlapped round
-        writer = threading.Thread(target=write_all, daemon=True)
-        writer.start()
-        fused, report = svc.aggregate(from_store=True,
-                                      expected_clients=args.clients,
-                                      async_round=True)
-        writer.join()
-    else:
-        write_all()
-        fused, report = svc.aggregate(from_store=True,
-                                      expected_clients=args.clients)
-    print(f"[aggregate] {len(write_lat)} updates written "
-          f"(modeled avg write {np.mean(write_lat)*1e3:.1f} ms, "
-          f"wall {time.time()-t0:.2f}s)")
-    print(f"[aggregate] engine={report.plan.engine} "
-          f"class={report.plan.workload_class.value} "
-          f"monitor_ready={report.monitor.ready} "
-          f"fuse={report.fuse_seconds:.3f}s "
-          f"overlap={report.overlap_seconds:.3f}s "
-          f"est={report.plan.est_seconds:.4f}s(model) "
-          f"route_next_to_store={report.route_next_to_store}")
-    print(f"[aggregate] fused[:5]={np.asarray(fused[:5])}")
+        if args.async_rounds or args.adaptive:
+            # arrivals land WHILE the round is open (the overlapped
+            # round, or a serialized monitor wait the controller can
+            # actually observe an arrival curve from)
+            writer = threading.Thread(target=write_all, daemon=True)
+            writer.start()
+            fused, report = svc.aggregate(from_store=True,
+                                          expected_clients=args.clients,
+                                          async_round=args.async_rounds)
+            writer.join()
+        else:
+            write_all()
+            fused, report = svc.aggregate(from_store=True,
+                                          expected_clients=args.clients)
+        if not args.async_rounds:
+            store.clear()   # serialized rounds don't consume
+        pol = report.close_policy
+        gate = (f"{pol.source}(frac={pol.threshold_frac:.2f} "
+                f"deadline={pol.deadline:.2f}s)") if pol else "static"
+        avg_write = np.mean(write_lat) * 1e3 if write_lat else 0.0
+        print(f"[aggregate] round={rnd} {len(write_lat)} updates written "
+              f"(modeled avg write {avg_write:.1f} ms, "
+              f"wall {time.time()-t0:.2f}s)")
+        if report.empty:
+            print("[aggregate] empty round (monitor timed out with no "
+                  "arrivals)")
+            continue
+        print(f"[aggregate] engine={report.plan.engine} "
+              f"class={report.plan.workload_class.value} "
+              f"monitor_ready={report.monitor.ready} "
+              f"gate={gate} "
+              f"fuse={report.fuse_seconds:.3f}s "
+              f"overlap={report.overlap_seconds:.3f}s "
+              f"est={report.plan.est_seconds:.4f}s(model) "
+              f"route_next_to_store={report.route_next_to_store}")
+        print(f"[aggregate] fused[:5]={np.asarray(fused[:5])}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,499 @@
+"""Adaptive aggregation controller (repro/core/adaptive.py) and its
+threading through store/monitor/service:
+
+  * ArrivalModel — EW empirical quantile learning, censoring of
+    fractions that never arrive, drop-out decay of the attainable
+    fraction;
+  * AdaptiveController — static gate until warmup, learned
+    threshold/deadline after, cost_bias extremes, timeout cap, restart
+    persistence via state_dict;
+  * Planner.round_objective — the cost-vs-staleness knob's monotonicity;
+  * Monitor — pluggable close policy;
+  * AggregationService — learned gate closes a drop-out round early
+    (the paper's adaptive claim, scripted clock), per-tenant carry
+    isolation;
+  * UpdateStore — arrival timestamps, event-driven arrival wakeup, and
+    SpoolTailer ingestion of externally written spool blobs.
+"""
+import bisect
+import math
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdaptiveController,
+    AggregationService,
+    ArrivalModel,
+    ClosePolicy,
+    Monitor,
+    Planner,
+    SpoolTailer,
+    UpdateStore,
+)
+
+RNG = np.random.default_rng(77)
+
+
+class ScriptedClock:
+    def __init__(self):
+        self.t = 0.0
+        self._events = []
+
+    def at(self, t, fn):
+        bisect.insort(self._events, (t, id(fn), fn))
+
+    def clock(self):
+        return self.t
+
+    def sleep(self, seconds):
+        self.t += seconds
+        while self._events and self._events[0][0] <= self.t:
+            _, _, fn = self._events.pop(0)
+            fn()
+
+
+def _mk(n, p=48):
+    u = RNG.normal(size=(n, p)).astype(np.float32)
+    w = RNG.uniform(1, 5, size=(n,)).astype(np.float32)
+    return u, w
+
+
+def _fedavg(u, w):
+    return np.einsum("np,n->p", u, w) / (w.sum() + 1e-6)
+
+
+# -- ArrivalModel --------------------------------------------------------------
+
+
+def test_arrival_model_learns_uniform_quantiles():
+    m = ArrivalModel(n_quantiles=10, ema=0.5)
+    offsets = np.linspace(0.1, 1.0, 10)   # client k arrives at 0.1*(k+1)
+    for _ in range(4):
+        m.observe(offsets, expected=10)
+    assert m.rounds == 4
+    assert m.attainable == pytest.approx(1.0)
+    assert m.wait_for(0.5) == pytest.approx(0.5, abs=0.05)
+    assert m.wait_for(1.0) == pytest.approx(1.0, abs=0.05)
+
+
+def test_arrival_model_censors_missing_fractions():
+    """Only 5 of 10 ever arrive: fractions past 0.5 stay unknown (inf)
+    and the attainable fraction converges to 0.5."""
+    m = ArrivalModel(n_quantiles=10, ema=0.5)
+    for _ in range(5):
+        m.observe(np.linspace(0.1, 0.5, 5), expected=10)
+    assert m.wait_for(0.5) == pytest.approx(0.5, abs=0.05)
+    assert math.isinf(m.wait_for(0.9))
+    assert m.attainable == pytest.approx(0.5, abs=0.02)
+
+
+def test_arrival_model_ema_tracks_shift():
+    """The curve follows a regime change within a few rounds (EW, not
+    all-history average)."""
+    m = ArrivalModel(n_quantiles=10, ema=0.5)
+    for _ in range(3):
+        m.observe(np.linspace(0.2, 2.0, 10), expected=10)   # slow fleet
+    slow = m.wait_for(1.0)
+    for _ in range(4):
+        m.observe(np.linspace(0.02, 0.2, 10), expected=10)  # fast fleet
+    fast = m.wait_for(1.0)
+    assert fast < slow / 3
+
+
+def test_arrival_model_state_dict_roundtrip():
+    m = ArrivalModel(n_quantiles=8, ema=0.4)
+    m.observe(np.linspace(0.1, 0.4, 4), expected=8)
+    m2 = ArrivalModel.from_state_dict(m.state_dict())
+    assert m2.rounds == m.rounds
+    assert m2.attainable == pytest.approx(m.attainable)
+    assert m2.wait_for(0.5) == pytest.approx(m.wait_for(0.5))
+    assert math.isinf(m2.wait_for(1.0)) == math.isinf(m.wait_for(1.0))
+
+
+# -- AdaptiveController --------------------------------------------------------
+
+
+def _trained(cost_bias, offsets, expected, rounds=3, timeout=30.0):
+    c = AdaptiveController(cost_bias=cost_bias, threshold_frac=0.8,
+                           timeout=timeout)
+    for _ in range(rounds):
+        c.observe_round("m", offsets, expected, est_seconds=0.01)
+    return c
+
+
+def test_controller_static_until_warmup():
+    c = AdaptiveController(threshold_frac=0.8, timeout=9.0,
+                           warmup_rounds=2)
+    assert c.policy("m", 10).source == "static"
+    c.observe_round("m", [0.1] * 10, 10)
+    assert c.policy("m", 10).source == "static"   # 1 < warmup_rounds
+    c.observe_round("m", [0.1] * 10, 10)
+    pol = c.policy("m", 10)
+    assert pol.source == "learned"
+    # an unseen tenant still gets the static gate
+    assert c.policy("other", 10).source == "static"
+    assert c.static_policy(10) == ClosePolicy(
+        threshold=8, deadline=9.0, threshold_frac=0.8,
+        expected_wait=9.0, source="static",
+    )
+
+
+def test_cost_bias_extremes():
+    """b=1 maximizes inclusion (waits for the learned tail); b=0
+    minimizes wall-clock (closes at the first attainable fraction)."""
+    offsets = np.concatenate([np.linspace(0.05, 0.3, 8), [4.0, 5.0]])
+    for_inclusion = _trained(1.0, offsets, 10).policy("m", 10)
+    for_speed = _trained(0.0, offsets, 10).policy("m", 10)
+    assert for_inclusion.threshold == 10       # waits for the 5 s tail
+    assert for_inclusion.expected_wait == pytest.approx(5.0, abs=0.3)
+    assert for_speed.threshold < for_inclusion.threshold
+    assert for_speed.expected_wait < 0.5
+    assert for_speed.deadline < for_inclusion.deadline
+
+
+def test_balanced_bias_skips_expensive_tail():
+    """At b=0.5 a 2-client tail costing 25 s is not worth 0.2 of
+    inclusion weight ~0.1 — the policy stops at the cheap 80%."""
+    offsets = np.concatenate([np.linspace(0.05, 0.4, 8), [25.0, 28.0]])
+    pol = _trained(0.5, offsets, 10, timeout=30.0).policy("m", 10)
+    assert pol.source == "learned"
+    assert pol.threshold == 8
+    assert pol.deadline < 5.0
+
+
+def test_learned_deadline_never_exceeds_timeout():
+    pol = _trained(1.0, [50.0] * 10, 10, timeout=10.0).policy("m", 10)
+    assert pol.deadline <= 10.0
+
+
+def test_dropout_fleet_learns_attainable_threshold():
+    """8 of 10 arrive by 1 s, 2 NEVER arrive: the static gate burns the
+    whole timeout; the learned gate thresholds at 8 with a ~1 s
+    deadline — same inclusion, a fraction of the wall."""
+    c = _trained(0.5, np.linspace(0.1, 1.0, 8), 10, timeout=30.0)
+    pol = c.policy("m", 10)
+    assert pol.source == "learned"
+    assert pol.threshold == 8
+    assert pol.deadline < 2.0
+    assert pol(8, 0.9)            # closes on the 8th arrival
+    assert not pol(7, 0.9)
+    assert pol(7, pol.deadline)   # deadline backstop
+
+
+def test_controller_state_dict_roundtrip():
+    c = _trained(0.5, np.linspace(0.1, 1.0, 8), 10)
+    c2 = AdaptiveController(cost_bias=0.5, threshold_frac=0.8,
+                            timeout=30.0)
+    c2.load_state_dict(c.state_dict())
+    assert c2.tenants() == ["m"]
+    assert c2.policy("m", 10) == c.policy("m", 10)
+
+
+def test_controller_validates_cost_bias():
+    with pytest.raises(ValueError):
+        AdaptiveController(cost_bias=1.5)
+    with pytest.raises(ValueError):
+        AggregationService(fusion="fedavg", cost_bias=-0.1)
+
+
+# -- planner objective ---------------------------------------------------------
+
+
+def test_round_objective_monotonicity():
+    pl = Planner()
+    base = pl.round_objective(1.0, 0.8, cost_bias=0.5, horizon=30.0)
+    # longer wait costs more; higher inclusion costs less
+    assert pl.round_objective(5.0, 0.8, 0.5, 30.0) > base
+    assert pl.round_objective(1.0, 0.95, 0.5, 30.0) < base
+    # bias extremes collapse to a single term
+    assert pl.round_objective(9.0, 0.1, cost_bias=1.0, horizon=30.0) \
+        == pytest.approx(0.9)
+    lo = pl.round_objective(3.0, 0.1, cost_bias=0.0, horizon=30.0)
+    assert lo == pytest.approx(
+        (3.0 + pl.overlap_drain_seconds) / 30.0
+    )
+    # fusing under the wait is free: est below the wait doesn't move it
+    assert pl.round_objective(3.0, 0.5, 0.0, 30.0, est_seconds=1.0) \
+        == pl.round_objective(3.0, 0.5, 0.0, 30.0)
+    assert pl.round_objective(3.0, 0.5, 0.0, 30.0, est_seconds=9.0) \
+        > pl.round_objective(3.0, 0.5, 0.0, 30.0)
+
+
+# -- monitor pluggable policy --------------------------------------------------
+
+
+def test_monitor_pluggable_policy_overrides_static_gate():
+    clk = ScriptedClock()
+    store = UpdateStore(clock=clk.clock)
+    u, w = _mk(4)
+    for i in range(3):
+        clk.at(0.2 * (i + 1),
+               lambda i=i: store.write(f"c{i}", u[i], weight=float(w[i])))
+    pol = ClosePolicy(threshold=3, deadline=5.0, threshold_frac=0.75,
+                      expected_wait=0.6, source="learned")
+    mon = Monitor(store, threshold=3, timeout=60.0, poll_interval=0.1,
+                  clock=clk.clock, sleep=clk.sleep, policy=pol)
+    res = mon.wait()
+    assert res.ready and res.count == 3
+    assert res.waited < 1.0   # closed on the learned threshold, not 60 s
+
+
+# -- service integration (scripted clock) --------------------------------------
+
+
+def _adaptive_service(store, clk, **kw):
+    kw.setdefault("threshold_frac", 1.0)
+    kw.setdefault("monitor_timeout", 30.0)
+    return AggregationService(
+        fusion="fedavg", local_strategy="jnp", store=store,
+        adaptive=True, clock=clk.clock, sleep=clk.sleep, **kw,
+    )
+
+
+def test_service_learns_to_close_dropout_rounds_early():
+    """The end-to-end adaptive claim: expected 10, 8 arrive within 1 s,
+    2 are permanently dropped. Round 1 (static gate) burns the full
+    30 s timeout; round 2 uses the learned gate and closes in ~1 s at
+    the same inclusion."""
+    n, p = 8, 40
+    u, w = _mk(n, p)
+    clk = ScriptedClock()
+    store = UpdateStore(clock=clk.clock)
+    svc = _adaptive_service(store, clk)
+
+    def schedule(base):
+        for i in range(n):
+            clk.at(base + 0.1 * (i + 1),
+                   lambda i=i: store.write(f"c{i}", u[i],
+                                           weight=float(w[i])))
+
+    schedule(0.0)
+    fused1, rep1 = svc.aggregate(from_store=True, expected_clients=10,
+                                 async_round=True)
+    assert rep1.close_policy.source == "static"
+    assert rep1.monitor.waited >= 30.0       # static gate: full timeout
+    assert rep1.n_clients == n
+
+    schedule(clk.t)
+    fused2, rep2 = svc.aggregate(from_store=True, expected_clients=10,
+                                 async_round=True)
+    assert rep2.close_policy.source == "learned"
+    assert rep2.n_clients == n               # equal inclusion
+    assert rep2.monitor.waited < 3.0         # ~10x faster close
+    np.testing.assert_allclose(np.asarray(fused2), _fedavg(u, w),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_service_serialized_adaptive_round_learns_too():
+    """The learned gate also drives serialized (non-async) store
+    rounds: same dropout fleet, monitor.wait() closes early on round
+    two."""
+    n, p = 6, 32
+    u, w = _mk(n, p)
+    clk = ScriptedClock()
+    store = UpdateStore(clock=clk.clock)
+    svc = _adaptive_service(store, clk)
+
+    def schedule(base):
+        for i in range(n):
+            clk.at(base + 0.2 * (i + 1),
+                   lambda i=i: store.write(f"c{i}", u[i],
+                                           weight=float(w[i])))
+
+    schedule(0.0)
+    _, rep1 = svc.aggregate(from_store=True, expected_clients=8)
+    store.clear()
+    assert rep1.monitor.waited >= 30.0
+    schedule(clk.t)
+    _, rep2 = svc.aggregate(from_store=True, expected_clients=8)
+    assert rep2.close_policy.source == "learned"
+    assert rep2.monitor.waited < 4.0
+    assert rep2.n_clients == n
+
+
+def test_per_tenant_carry_isolation():
+    """Interleaved tenants with staleness_discount: each tenant's carry
+    accumulator evolves from ITS rounds only."""
+    p = 24
+    u, w = _mk(6, p)
+    g = 0.5
+    clk = ScriptedClock()
+    store = UpdateStore(clock=clk.clock)
+    svc = AggregationService(
+        fusion="fedavg", local_strategy="jnp", store=store,
+        threshold_frac=1.0, monitor_timeout=0.5, staleness_discount=g,
+        clock=clk.clock, sleep=clk.sleep,
+    )
+
+    def round_for(rows, weights, tenant):
+        for cid, (uu, ww) in enumerate(zip(rows, weights)):
+            store.write(f"{tenant}-{cid}", uu, weight=float(ww))
+        fused, rep = svc.aggregate(
+            from_store=True, expected_clients=len(rows),
+            async_round=True, tenant=tenant,
+        )
+        return np.asarray(fused), rep
+
+    fused_a1, _ = round_for(u[:2], w[:2], "A")
+    fused_b1, _ = round_for(u[2:4], w[2:4], "B")
+    fused_a2, _ = round_for(u[4:5], w[4:5], "A")
+    fused_b2, _ = round_for(u[5:6], w[5:6], "B")
+
+    # tenant A's round 2 = gamma * A's sums + the new row — B never leaks
+    ws_a1 = np.einsum("np,n->p", u[:2], w[:2])
+    tot_a1 = w[:2].sum()
+    exp_a2 = (g * ws_a1 + w[4] * u[4]) / (g * tot_a1 + w[4] + 1e-6)
+    np.testing.assert_allclose(fused_a2, exp_a2, rtol=1e-4, atol=1e-5)
+    ws_b1 = np.einsum("np,n->p", u[2:4], w[2:4])
+    tot_b1 = w[2:4].sum()
+    exp_b2 = (g * ws_b1 + w[5] * u[5]) / (g * tot_b1 + w[5] + 1e-6)
+    np.testing.assert_allclose(fused_b2, exp_b2, rtol=1e-4, atol=1e-5)
+    assert rep_tenants(svc) == {"A", "B"}
+
+
+def rep_tenants(svc):
+    return {r.tenant for r in svc.history}
+
+
+def test_per_tenant_controller_isolation():
+    """Two tenants with different arrival behavior learn different
+    gates through one service."""
+    c = AdaptiveController(cost_bias=0.5, threshold_frac=1.0,
+                           timeout=30.0)
+    for _ in range(3):
+        c.observe_round("fast", np.linspace(0.01, 0.1, 10), 10)
+        c.observe_round("slow", np.linspace(0.5, 8.0, 10), 10)
+    fast, slow = c.policy("fast", 10), c.policy("slow", 10)
+    assert fast.deadline < slow.deadline
+    assert fast.expected_wait < slow.expected_wait
+
+
+# -- store arrival capture + event-driven tailing ------------------------------
+
+
+def test_store_arrival_times_follow_store_clock():
+    clk = ScriptedClock()
+    store = UpdateStore(clock=clk.clock)
+    store.write("a", np.ones(4, np.float32))
+    clk.sleep(2.5)
+    store.write("b", np.ones(4, np.float32))
+    at = store.arrival_times()
+    assert at["b"] - at["a"] == pytest.approx(2.5)
+    store.remove(["a"])
+    assert "a" not in store.arrival_times()
+    store.clear()
+    assert store.arrival_times() == {}
+
+
+def test_wait_for_arrival_wakes_on_write_not_timeout():
+    """The arrival condition wakes a real-clock waiter as soon as a
+    write lands — it does not sleep out the full poll window."""
+    store = UpdateStore()
+    t = threading.Timer(
+        0.15, lambda: store.write("x", np.ones(4, np.float32))
+    )
+    t.start()
+    t0 = time.perf_counter()
+    store.wait_for_arrival(timeout=10.0)
+    elapsed = time.perf_counter() - t0
+    t.join()
+    assert store.count() == 1
+    assert elapsed < 5.0, "waiter slept through the arrival notify"
+
+
+def test_spool_tailer_ingests_external_writes(tmp_path):
+    """Blobs dropped into the spool by an external process (bypassing
+    write()) are registered by the tailer — weights from the sidecar,
+    arrival timestamp stamped, visible to count()/reads."""
+    store = UpdateStore(backend="disk", spool_dir=str(tmp_path))
+    with SpoolTailer(store, poll_interval=0.05) as tailer:
+        def foreign_writer():
+            time.sleep(0.1)
+            np.save(tmp_path / "ext0.npy", np.full(8, 3.0, np.float32))
+            with open(tmp_path / "ext0.npy.w", "w") as f:
+                f.write("2.5")
+        th = threading.Thread(target=foreign_writer)
+        th.start()
+        deadline = time.time() + 5.0
+        while store.count() < 1 and time.time() < deadline:
+            time.sleep(0.02)
+        th.join()
+        assert store.count() == 1, "tailer never saw the external blob"
+        upd, weight = store.read("ext0")
+        assert weight == 2.5
+        np.testing.assert_array_equal(np.asarray(upd),
+                                      np.full(8, 3.0, np.float32))
+        assert "ext0" in store.arrival_times()
+    # stopped: a later foreign write is NOT auto-registered
+    np.save(tmp_path / "ext1.npy", np.ones(8, np.float32))
+    time.sleep(0.15)
+    assert store.count() == 1
+
+
+def test_ingest_external_skips_partial_blobs(tmp_path):
+    store = UpdateStore(backend="disk", spool_dir=str(tmp_path),
+                        sidecar_grace_seconds=0.05)
+    (tmp_path / "broken.npy").write_bytes(b"\x93NUMPY garbage")
+    np.save(tmp_path / "good.npy", np.ones(4, np.float32))
+    # a blob with no sidecar defers for the grace window (the sidecar
+    # may still be in flight behind the blob)
+    assert store.ingest_external() == []
+    time.sleep(0.1)
+    assert store.ingest_external() == ["good"]
+    assert store.client_ids() == ["good"]
+    _, weight = store.read("good")
+    assert weight == 1.0   # still no sidecar: default weight
+    # later passes are idempotent
+    assert store.ingest_external() == []
+
+
+def test_ingest_external_waits_for_inflight_sidecar(tmp_path):
+    """The review race: blob lands and MULTIPLE ingest passes run
+    before the sidecar is written — the update must register with the
+    sidecar's weight, not freeze at the 1.0 default."""
+    store = UpdateStore(backend="disk", spool_dir=str(tmp_path))
+    np.save(tmp_path / "c7.npy", np.ones(4, np.float32))
+    assert store.ingest_external() == []          # within grace
+    assert store.ingest_external() == []          # event-storm re-pass
+    with open(tmp_path / "c7.npy.w", "w") as f:   # sidecar lands late
+        f.write("42.0")
+    assert store.ingest_external() == ["c7"]
+    _, weight = store.read("c7")
+    assert weight == 42.0
+
+
+def test_spool_tailer_rejects_memory_backend():
+    with pytest.raises(ValueError):
+        SpoolTailer(UpdateStore())
+
+
+def test_tailed_arrivals_feed_async_round(tmp_path):
+    """End to end: external spool writes only, discovered by the
+    tailer, folded by an async round's arrival stream."""
+    u, w = _mk(5, 16)
+    store = UpdateStore(backend="disk", spool_dir=str(tmp_path))
+    svc = AggregationService(
+        fusion="fedavg", local_strategy="jnp", store=store,
+        threshold_frac=1.0, monitor_timeout=10.0, poll_interval=0.02,
+    )
+
+    def foreign_writer():
+        for i in range(5):
+            time.sleep(0.05)
+            np.save(tmp_path / f"e{i}.npy", u[i])
+            with open(tmp_path / f"e{i}.npy.w", "w") as f:
+                f.write(repr(float(w[i])))
+
+    with SpoolTailer(store, poll_interval=0.05):
+        th = threading.Thread(target=foreign_writer)
+        th.start()
+        fused, rep = svc.aggregate(from_store=True, expected_clients=5,
+                                   async_round=True)
+        th.join()
+    assert rep.n_clients == 5 and rep.monitor.ready
+    np.testing.assert_allclose(np.asarray(fused), _fedavg(u, w),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,115 @@
+"""Docs smoke checks: the README / ARCHITECTURE / benchmarks docs stay
+truthful as the code moves.
+
+  * every intra-repo markdown link resolves to a real file;
+  * every ``python <path>`` / ``python -m <module>`` command in a doc
+    code block references a file / importable module that exists;
+  * every ``--flag`` a doc passes to ``repro.launch.aggregate`` (or a
+    benchmark script) is actually defined by that script's parser.
+
+Runtime execution of the documented commands lives in the verify
+recipe (the ``--quick`` benchmark paths), not here — this suite must
+stay fast enough for tier-1.
+"""
+import importlib.util
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOCS = [
+    "README.md",
+    "docs/ARCHITECTURE.md",
+    "benchmarks/README.md",
+]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```(?:bash|sh|console)?\n(.*?)```", re.DOTALL)
+CMD_RE = re.compile(
+    r"python\s+(?:-m\s+(?P<module>[\w.]+)|(?P<path>[\w/.-]+\.py))"
+    r"(?P<rest>[^\n\\]*(?:\\\n[^\n\\]*)*)"
+)
+FLAG_RE = re.compile(r"(--[\w-]+)")
+
+
+def _read(rel):
+    with open(os.path.join(REPO, rel)) as f:
+        return f.read()
+
+
+@pytest.mark.parametrize("doc", DOCS)
+def test_docs_exist(doc):
+    assert os.path.exists(os.path.join(REPO, doc)), f"{doc} missing"
+
+
+@pytest.mark.parametrize("doc", DOCS)
+def test_intra_repo_links_resolve(doc):
+    text = _read(doc)
+    base = os.path.dirname(os.path.join(REPO, doc))
+    broken = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        path = os.path.normpath(os.path.join(base, target.split("#")[0]))
+        if not os.path.exists(path):
+            broken.append(target)
+    assert not broken, f"{doc}: broken intra-repo links: {broken}"
+
+
+def _commands(doc):
+    text = _read(doc)
+    for block in FENCE_RE.findall(text):
+        for m in CMD_RE.finditer(block):
+            yield m
+
+
+@pytest.mark.parametrize("doc", DOCS)
+def test_doc_commands_reference_real_entry_points(doc):
+    missing = []
+    for m in _commands(doc):
+        if m.group("module"):
+            if importlib.util.find_spec(m.group("module")) is None:
+                missing.append(m.group("module"))
+        else:
+            if not os.path.exists(os.path.join(REPO, m.group("path"))):
+                missing.append(m.group("path"))
+    assert not missing, f"{doc}: commands reference missing entry " \
+                        f"points: {missing}"
+
+
+@pytest.mark.parametrize("doc", DOCS)
+def test_doc_flags_exist_in_target_scripts(doc):
+    """A doc showing ``python x.py --flag`` must only use flags the
+    script's argparse actually defines."""
+    unknown = []
+    for m in _commands(doc):
+        if m.group("module"):
+            spec = importlib.util.find_spec(m.group("module"))
+            if spec is None or not spec.origin:
+                continue
+            src_path = spec.origin
+        else:
+            src_path = os.path.join(REPO, m.group("path"))
+            if not os.path.exists(src_path):
+                continue
+        with open(src_path) as f:
+            src = f.read()
+        for flag in FLAG_RE.findall(m.group("rest") or ""):
+            if f'"{flag}"' not in src and f"'{flag}'" not in src:
+                unknown.append((os.path.basename(src_path), flag))
+    assert not unknown, f"{doc}: flags not defined by their script: " \
+                        f"{unknown}"
+
+
+def test_readme_documents_tier1_and_bench_artifacts():
+    """The README must keep the tier-1 command and a row per BENCH
+    artifact actually present in the repo root."""
+    text = _read("README.md")
+    assert "python -m pytest -x -q" in text
+    for artifact in sorted(
+        f for f in os.listdir(REPO)
+        if f.startswith("BENCH_") and f.endswith(".json")
+    ):
+        assert artifact in text, f"README missing a row for {artifact}"
