@@ -1,0 +1,210 @@
+"""Multi-tenant rounds: K tenants on ONE shared store vs K isolated
+stores.
+
+The tenant-partitioned UpdateStore's claim: K applications can
+interleave open rounds on one shared store — every round gates on,
+folds, and consumes only its own tenant's partition — and lose NOTHING
+against the static per-app deployment (one store + one service per
+tenant), while gaining what the static deployment cannot have: every
+tenant after the first folds through the SAME engine's warm compile
+cache instead of paying its own cold trace+compile.
+
+Per round-cycle, every tenant's writer thread spreads its arrivals over
+the straggler window CONCURRENTLY — tenant k's updates land while
+tenant j's round is open, which is exactly the interleaving a shared
+spool must survive. Rounds are async (monitor-overlapped) with a full
+inclusion threshold, so any cross-tenant steal would surface as a wrong
+fused vector or missing inclusion.
+
+Reported per mode:
+  * mean_inclusion      — clients folded / clients expected (must match
+                          the isolated deployment),
+  * total_compile_seconds / cold_compiles — the cross-tenant warm-cache
+                          win (shared pays ~1 cold compile, isolated
+                          pays ~K),
+  * equivalent          — every tenant's fused vector matches the dense
+                          FedAvg formula on that tenant's updates alone.
+
+Acceptance (ISSUE 4): shared-store inclusion >= isolated-store
+inclusion AND shared cold compiles < isolated cold compiles AND both
+modes equivalent to the formula.
+
+Emits BENCH_multitenant.json.
+
+Usage:
+  python benchmarks/multitenant_rounds.py --quick     # CI smoke (~30 s)
+  python benchmarks/multitenant_rounds.py             # full  (~2 min)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+from repro.core import AggregationService, UpdateStore
+
+
+def make_tenant_clients(k: int, n: int, p: int, seed: int = 1):
+    """Per-tenant client updates/weights (distinct per tenant, so a
+    cross-tenant steal cannot cancel out numerically)."""
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=(k, n, p)).astype(np.float32)
+    w = rng.uniform(1, 7, size=(k, n)).astype(np.float32)
+    return u, w
+
+
+def fedavg_formula(u, w):
+    return np.einsum("np,n->p", u, w) / (w.sum() + 1e-6)
+
+
+def spread_writer(store, tenant, u, w, spread):
+    """Write tenant's n clients spread evenly over ``spread`` seconds,
+    tagged with the tenant (one thread per tenant; all tenants' writers
+    run concurrently)."""
+    n = u.shape[0]
+
+    def run():
+        t0 = time.perf_counter()
+        for i in range(n):
+            lag = (i + 1) * spread / n - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            store.write(f"c{i:04d}", u[i], weight=float(w[i]),
+                        tenant=tenant)
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    return t
+
+
+def _mk_service(store, n, p, timeout):
+    return AggregationService(
+        fusion="fedavg", local_strategy="jnp", store=store,
+        threshold_frac=1.0, monitor_timeout=timeout,
+        stream_chunk_bytes=max(p * 4 * max(n // 4, 1), 1 << 20),
+    )
+
+
+def run_mode(shared: bool, tenants, u, w, p, spread, timeout, rounds):
+    """One deployment mode: ``shared`` = one store + one service for all
+    tenants; else one isolated store + service per tenant."""
+    n = u.shape[1]
+    if shared:
+        store = UpdateStore()
+        svc = _mk_service(store, n, p, timeout)
+        stores = {t: store for t in tenants}
+        services = {t: svc for t in tenants}
+    else:
+        stores = {t: UpdateStore() for t in tenants}
+        services = {
+            t: _mk_service(stores[t], n, p, timeout) for t in tenants
+        }
+    inclusions, compiles, walls = [], [], []
+    cold = 0
+    equivalent = True
+    for _ in range(rounds):
+        writers = [
+            spread_writer(stores[t], t, u[k], w[k], spread)
+            for k, t in enumerate(tenants)
+        ]
+        for k, t in enumerate(tenants):
+            t0 = time.perf_counter()
+            fused, rep = services[t].aggregate(
+                from_store=True, expected_clients=n, async_round=True,
+                tenant=t,
+            )
+            walls.append(time.perf_counter() - t0)
+            inclusions.append(rep.n_clients / n)
+            compile_s = rep.phase_seconds.get("compile", 0.0)
+            compiles.append(compile_s)
+            cold += compile_s > 0.0
+            if rep.n_clients > n or (rep.n_clients == n and not
+                np.allclose(
+                    np.asarray(fused), fedavg_formula(u[k], w[k]),
+                    rtol=1e-4, atol=1e-5,
+                )
+            ):
+                equivalent = False   # a steal or a lost update
+        for wt in writers:
+            wt.join()
+        for t in tenants:   # drop close-race stragglers between cycles
+            stores[t].clear(tenant=t)
+    return {
+        "mean_inclusion": float(np.mean(inclusions)),
+        "inclusions": inclusions,
+        "mean_wall_seconds": float(np.mean(walls)),
+        "total_compile_seconds": float(np.sum(compiles)),
+        "cold_compiles": int(cold),
+        "equivalent": bool(equivalent),
+    }
+
+
+def bench(k, n, p, spread, timeout, rounds, seed):
+    tenants = [f"app{i}" for i in range(k)]
+    u, w = make_tenant_clients(k, n, p, seed)
+    results = {}
+    for mode, shared in (("isolated", False), ("shared", True)):
+        results[mode] = run_mode(
+            shared, tenants, u, w, p, spread, timeout, rounds
+        )
+        r = results[mode]
+        print(f"{mode:>9}: inclusion {r['mean_inclusion']:.3f} "
+              f"wall {r['mean_wall_seconds']:.3f}s "
+              f"compile {r['total_compile_seconds']:.3f}s "
+              f"({r['cold_compiles']} cold) "
+              f"equivalent={r['equivalent']}")
+    sh, iso = results["shared"], results["isolated"]
+    acceptance = (
+        sh["mean_inclusion"] >= iso["mean_inclusion"] - 1.0 / n - 1e-9
+        and sh["cold_compiles"] < iso["cold_compiles"]
+        and sh["equivalent"] and iso["equivalent"]
+    )
+    compile_saved = iso["total_compile_seconds"] - sh["total_compile_seconds"]
+    print(f"shared store saves {compile_saved:.3f}s of compile over "
+          f"{k} tenants ({iso['cold_compiles']} -> {sh['cold_compiles']} "
+          f"cold compiles); acceptance={acceptance}")
+    return results, acceptance, compile_saved
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--n", type=int, default=48)
+    ap.add_argument("--p", type=int, default=100_000)
+    ap.add_argument("--spread", type=float, default=1.0)
+    ap.add_argument("--timeout", type=float, default=8.0)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--out", default="BENCH_multitenant.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.tenants, args.n, args.p = 3, 16, 20_000
+        args.spread, args.timeout = 0.4, 4.0
+        args.rounds = 2
+    results, acceptance, compile_saved = bench(
+        args.tenants, args.n, args.p, args.spread, args.timeout,
+        args.rounds, args.seed,
+    )
+    payload = {
+        "benchmark": "multitenant_rounds",
+        "config": {
+            "tenants": args.tenants, "n_clients_per_tenant": args.n,
+            "p": args.p, "spread_seconds": args.spread,
+            "timeout_seconds": args.timeout, "rounds": args.rounds,
+            "quick": args.quick,
+        },
+        "results": results,
+        "compile_seconds_saved": compile_saved,
+        "acceptance": bool(acceptance),
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,13 @@
-from repro.checkpoint.ckpt import load_pytree, save_pytree
+from repro.checkpoint.ckpt import (
+    load_controller_state,
+    load_pytree,
+    save_controller_state,
+    save_pytree,
+)
 
-__all__ = ["save_pytree", "load_pytree"]
+__all__ = [
+    "save_pytree",
+    "load_pytree",
+    "save_controller_state",
+    "load_controller_state",
+]

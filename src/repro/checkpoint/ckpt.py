@@ -1,8 +1,17 @@
-"""Checkpointing: pytrees <-> a single .npz + structure manifest.
+"""Checkpointing: pytrees <-> a single .npz + structure manifest, and
+adaptive-controller state <-> a JSON sidecar.
 
 Sharded arrays are gathered to host before saving (fine at the scales this
 container runs; on a real pod you'd swap in per-shard files keyed by the
 same path strings — the format is already path-addressed to allow that).
+
+``save_controller_state`` / ``load_controller_state`` persist an
+:class:`repro.core.adaptive.AdaptiveController`'s learned arrival
+curves (per-tenant models + the cross-tenant prior) NEXT TO the model
+checkpoint, so an aggregator restart resumes with its learned gates
+instead of re-learning from static-timeout rounds. The controller's
+``state_dict`` is already JSON-able, so the format is plain JSON —
+inspectable, diffable, and independent of the .npz model format.
 """
 from __future__ import annotations
 
@@ -41,6 +50,47 @@ def save_pytree(path: str, tree: PyTree) -> None:
     }
     with open(path.removesuffix(".npz") + ".json", "w") as f:
         json.dump(manifest, f, indent=1)
+
+
+def _controller_path(path: str) -> str:
+    """Canonical on-disk name: ``<path>.controller.json`` (``path`` may
+    be the model checkpoint path — the controller state lands beside
+    it)."""
+    if path.endswith(".controller.json"):
+        return path
+    return path.removesuffix(".npz") + ".controller.json"
+
+
+def save_controller_state(path: str, controller: Any) -> str:
+    """Persist an ``AdaptiveController`` (or a raw ``state_dict``)
+    as JSON at ``<path>.controller.json``. Returns the written path.
+
+    ``path`` is typically the model checkpoint path passed to
+    :func:`save_pytree`, so the learned gates travel with the model
+    state they were learned under."""
+    state = (
+        controller.state_dict()
+        if hasattr(controller, "state_dict") else controller
+    )
+    out = _controller_path(path)
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(state, f, indent=1)
+    return out
+
+
+def load_controller_state(path: str, controller: Any = None) -> Dict:
+    """Load controller state saved by :func:`save_controller_state`.
+
+    Returns the raw state dict; with ``controller`` given (anything
+    exposing ``load_state_dict``, e.g. an ``AdaptiveController`` or an
+    adaptive ``AggregationService``'s ``.controller``), the state is
+    also restored into it."""
+    with open(_controller_path(path)) as f:
+        state = json.load(f)
+    if controller is not None:
+        controller.load_state_dict(state)
+    return state
 
 
 def load_pytree(path: str, template: PyTree) -> PyTree:

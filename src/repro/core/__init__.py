@@ -7,9 +7,12 @@ Layers:
   fusion/        fusion-algorithm library (FedAvg ... Krum/Zeno/GeoMedian)
   local.py       single-chip engine (jnp baseline | fused Pallas kernel)
   distributed.py shard_map map-reduce engine (+ hierarchical pod mode)
-  store.py       UpdateStore (the HDFS analogue) + SpoolTailer
-  monitor.py     threshold/timeout straggler gate (pluggable policy)
+  store.py       UpdateStore (the HDFS analogue, tenant-partitioned)
+                 + SpoolTailer (external-blob tailing with tenant routing)
+  monitor.py     threshold/timeout straggler gate (pluggable policy,
+                 per-tenant counts)
   adaptive.py    learned arrival curves -> per-tenant close policies
+                 (+ cross-tenant prior, drift-widened deadlines)
   secure.py      pairwise additive-mask secure aggregation
   service.py     AggregationService facade (seamless transition)
 """
@@ -21,7 +24,7 @@ from repro.core.monitor import Monitor, MonitorResult
 from repro.core.planner import Plan, Planner
 from repro.core.secure import SecureMasking
 from repro.core.service import AggregationService, RoundReport
-from repro.core.store import SpoolTailer, UpdateStore
+from repro.core.store import DEFAULT_TENANT, SpoolTailer, UpdateStore
 from repro.core.workload import (
     Workload,
     WorkloadClass,
@@ -34,6 +37,7 @@ __all__ = [
     "AggregationService",
     "ArrivalModel",
     "ClosePolicy",
+    "DEFAULT_TENANT",
     "DistributedEngine",
     "FusionAlgorithm",
     "LocalEngine",

@@ -15,14 +15,23 @@ and re-derives the gate every round:
                          round start to each client's store write), with
                          censoring: fractions that did not arrive within
                          a round's window stay unknown rather than
-                         polluting the curve, and an EW *attainable
-                         fraction* tracks client drop-out.
-  ``AdaptiveController`` owns one model per tenant, turns the learned
-                         curve into a ``ClosePolicy`` by minimizing the
-                         planner's cost-vs-staleness objective
-                         (``Planner.round_objective``) over a fraction
-                         grid, and persists across rounds (and — via
-                         ``state_dict`` — across aggregator restarts).
+                         polluting the curve, an EW *attainable
+                         fraction* tracks client drop-out, and an EW
+                         *drift* score tracks how fast the curve itself
+                         is moving round-over-round.
+  ``AdaptiveController`` owns one model per tenant PLUS a cross-tenant
+                         prior (the pooled curve cold-start tenants
+                         borrow until they have their own mass), turns
+                         the selected curve into a ``ClosePolicy`` by
+                         minimizing the planner's cost-vs-staleness
+                         objective (``Planner.round_objective``) over a
+                         fraction grid — widening the learned deadline
+                         while the tenant's drift score says arrival
+                         behavior is shifting faster than the EW window
+                         tracks — and persists across rounds (and — via
+                         ``state_dict`` — across aggregator restarts;
+                         ``repro.checkpoint.save_controller_state``
+                         writes it next to model checkpoints).
   ``ClosePolicy``        the pluggable gate predicate ``Monitor``
                          accepts: close at a learned threshold count OR
                          a learned deadline, whichever first.
@@ -56,7 +65,11 @@ class ClosePolicy:
     deadline: float         # seconds after which the gate closes anyway
     threshold_frac: float   # threshold / expected (for reporting)
     expected_wait: float    # learned t(threshold_frac); deadline basis
-    source: str = "static"  # "static" | "learned"
+    # "static" — the configured threshold_frac/timeout gate;
+    # "learned" — derived from this tenant's own arrival curve;
+    # "prior"  — derived from the cross-tenant prior curve (cold-start
+    #            tenant borrowing pooled mass until it has its own)
+    source: str = "static"
 
     def __call__(self, count: int, waited: float) -> bool:
         return count >= self.threshold or waited >= self.deadline
@@ -75,9 +88,20 @@ class ArrivalModel:
     ``attainable`` fraction decays instead, so the policy stops aiming
     at fractions the fleet no longer delivers.
 
+    ``drift`` is an EW score of how much the freshly observed quantiles
+    disagree with the stored curve (relative error over the fractions
+    both reached, capped at 1.0): ~0 for a fleet in steady state, large
+    while arrival behavior is shifting faster than the EW window has
+    caught up. The controller widens the learned deadline while drift
+    is high, so a regime change degrades toward the static timeout
+    instead of closing rounds against a stale curve.
+
     ``ema`` is the weight of the NEWEST round (0.5 adapts within ~2
     rounds; lower is smoother).
     """
+
+    # relative-error floor (seconds): offsets below this are all jitter
+    _DRIFT_DENOM_FLOOR = 1e-2
 
     def __init__(self, n_quantiles: int = 20, ema: float = 0.5):
         if not 0 < ema <= 1:
@@ -89,6 +113,9 @@ class ArrivalModel:
         # so the policy can aim at "everyone who actually comes" even
         # when that fraction falls between grid points
         self.tail_wait: Optional[float] = None
+        # EW round-over-round curve disagreement (None until two rounds
+        # have reached at least one common fraction)
+        self.drift: Optional[float] = None
         self.ema = ema
         self.rounds = 0
 
@@ -101,6 +128,20 @@ class ArrivalModel:
             if need <= len(arr):
                 fresh[k] = max(arr[need - 1], 0.0)
         a = self.ema
+        # drift BEFORE blending: how far did this round land from the
+        # curve we believed? Only fractions observed on both sides count
+        # (censored tails are the attainable fraction's business, not
+        # drift's — permanent drop-out must not read as endless drift).
+        both = ~np.isnan(fresh) & ~np.isnan(self.quantiles)
+        if both.any():
+            rel = np.abs(fresh[both] - self.quantiles[both]) / np.maximum(
+                np.abs(self.quantiles[both]), self._DRIFT_DENOM_FLOOR
+            )
+            shift = float(np.minimum(rel, 1.0).mean())
+            self.drift = (
+                shift if self.drift is None
+                else (1 - a) * self.drift + a * shift
+            )
         keep = np.isnan(fresh)
         seed = np.isnan(self.quantiles)
         blended = (1 - a) * self.quantiles + a * fresh
@@ -139,6 +180,7 @@ class ArrivalModel:
             ],
             "attainable": self.attainable,
             "tail_wait": self.tail_wait,
+            "drift": self.drift,
             "ema": self.ema,
             "rounds": self.rounds,
         }
@@ -153,6 +195,7 @@ class ArrivalModel:
         )
         m.attainable = state["attainable"]
         m.tail_wait = state.get("tail_wait")
+        m.drift = state.get("drift")
         m.rounds = int(state["rounds"])
         return m
 
@@ -168,15 +211,30 @@ class AdaptiveController:
         controller.observe_round(tenant, offsets, expected,
                                  est_seconds=report.fuse_seconds)
 
-    ``policy`` returns the STATIC gate (``threshold_frac`` / ``timeout``,
-    exactly PR 2's behavior) until ``warmup_rounds`` observations exist
-    for the tenant; after that it minimizes
-    ``Planner.round_objective(wait, inclusion, cost_bias)`` over the
-    learned curve's fraction grid and emits a learned
-    threshold/deadline. The learned deadline is
-    ``deadline_slack * t(f*) + deadline_margin`` capped at the static
-    ``timeout`` — the controller can only ever close EARLIER than the
-    static gate's worst case, never later.
+    ``policy`` selects the curve to derive the gate from:
+
+      * the tenant's OWN model once it has ``warmup_rounds``
+        observations (``source="learned"``);
+      * else the cross-tenant PRIOR — every observed round of every
+        tenant also folds into one pooled curve, so a cold-start tenant
+        borrows the fleet-wide arrival behavior instead of burning
+        static timeouts while its own curve warms up
+        (``source="prior"``);
+      * else the STATIC gate (``threshold_frac`` / ``timeout``, exactly
+        PR 2's behavior; also the fallback whenever a curve yields no
+        finite candidate).
+
+    The selected curve is minimized against
+    ``Planner.round_objective(wait, inclusion, cost_bias)`` over its
+    fraction grid and emitted as a learned threshold/deadline. The
+    deadline is ``deadline_slack * t(f*) * widen + deadline_margin``
+    capped at the static ``timeout`` — the controller can only ever
+    close EARLIER than the static gate's worst case, never later —
+    where ``widen >= 1`` grows with the model's drift score
+    (``1 + drift_gain * max(drift - drift_tolerance, 0)``): while
+    arrival behavior is shifting faster than the EW window tracks, the
+    deadline backstop loosens toward the static timeout instead of
+    cutting off a fleet the stale curve mispredicts.
 
     ``est_seconds`` (the tenant's observed fuse wall) enters the
     objective through ``max(wait, est)``: waiting for stragglers is free
@@ -194,6 +252,8 @@ class AdaptiveController:
         warmup_rounds: int = 1,
         deadline_slack: float = 1.25,
         deadline_margin: float = 0.25,
+        drift_tolerance: float = 0.25,
+        drift_gain: float = 4.0,
     ):
         if not 0 <= cost_bias <= 1:
             raise ValueError("cost_bias must be in [0, 1]")
@@ -206,8 +266,16 @@ class AdaptiveController:
         self.warmup_rounds = warmup_rounds
         self.deadline_slack = deadline_slack
         self.deadline_margin = deadline_margin
+        # drift below the tolerance is steady-state jitter; above it the
+        # deadline widens by drift_gain per unit of excess drift
+        self.drift_tolerance = drift_tolerance
+        self.drift_gain = drift_gain
         self._models: Dict[str, ArrivalModel] = {}
         self._est_seconds: Dict[str, float] = {}
+        # the cross-tenant prior: every tenant's rounds pool here, and
+        # tenants without their own mass borrow it (cold-start transfer)
+        self._prior = ArrivalModel(n_quantiles=n_quantiles, ema=ema)
+        self._prior_est: Optional[float] = None
 
     # -- learning ------------------------------------------------------------
     def observe_round(
@@ -218,25 +286,47 @@ class AdaptiveController:
         est_seconds: Optional[float] = None,
     ) -> None:
         """Fold one closed round's arrival offsets (seconds from round
-        start per landed client) into the tenant's curve."""
+        start per landed client) into the tenant's curve AND the
+        cross-tenant prior (the pooled curve cold-start tenants
+        borrow). An EMPTY round is evidence for the tenant's own curve
+        (its attainable fraction decays) but is kept OUT of the prior:
+        one dead tenant's fleet must not drag every cold-start tenant's
+        borrowed threshold toward zero."""
+        offsets = list(offsets)
         model = self._models.get(tenant)
         if model is None:
             model = self._models[tenant] = ArrivalModel(
                 n_quantiles=self.n_quantiles, ema=self.ema
             )
         model.observe(offsets, expected)
+        if offsets:
+            self._prior.observe(offsets, expected)
         if est_seconds is not None:
             prev = self._est_seconds.get(tenant)
             self._est_seconds[tenant] = (
                 est_seconds if prev is None
                 else (1 - self.ema) * prev + self.ema * est_seconds
             )
+            self._prior_est = (
+                est_seconds if self._prior_est is None
+                else (1 - self.ema) * self._prior_est
+                + self.ema * est_seconds
+            )
 
     def model(self, tenant: str) -> Optional[ArrivalModel]:
+        """The tenant's own arrival curve (None before its first
+        observed round)."""
         return self._models.get(tenant)
+
+    def prior_model(self) -> ArrivalModel:
+        """The cross-tenant prior curve (pooled over every tenant's
+        observed rounds)."""
+        return self._prior
 
     # -- policy --------------------------------------------------------------
     def static_policy(self, expected: int) -> ClosePolicy:
+        """The configured static gate for an ``expected``-client round —
+        what ``policy`` falls back to before any curve has mass."""
         return ClosePolicy(
             threshold=max(int(expected * self.threshold_frac), 1),
             deadline=self.timeout,
@@ -246,13 +336,31 @@ class AdaptiveController:
         )
 
     def policy(self, tenant: str, expected: int) -> ClosePolicy:
-        """The gate for the tenant's next round: static until the curve
-        has ``warmup_rounds`` observations, learned after."""
+        """The gate for the tenant's next round: its own learned curve
+        once warmed up, the cross-tenant prior while cold, the static
+        gate before anything has mass."""
+        if expected <= 0:
+            return self.static_policy(1)
         model = self._models.get(tenant)
-        if model is None or model.rounds < self.warmup_rounds \
-                or expected <= 0:
-            return self.static_policy(max(expected, 1))
-        est = self._est_seconds.get(tenant, 0.0)
+        if model is not None and model.rounds >= self.warmup_rounds:
+            return self._derive(
+                model, expected, self._est_seconds.get(tenant, 0.0),
+                source="learned",
+            )
+        if self._prior.rounds >= self.warmup_rounds:
+            return self._derive(
+                self._prior, expected,
+                self._est_seconds.get(tenant, self._prior_est or 0.0),
+                source="prior",
+            )
+        return self.static_policy(expected)
+
+    def _derive(
+        self, model: ArrivalModel, expected: int, est: float, source: str
+    ) -> ClosePolicy:
+        """Minimize the planner objective over ``model``'s curve and
+        emit the close gate (threshold count + drift-widened deadline
+        backstop, capped at the static timeout)."""
         attainable = model.attainable if model.attainable is not None \
             else 1.0
         candidates = []
@@ -289,10 +397,13 @@ class AdaptiveController:
         if best_f is None:
             return self.static_policy(expected)
         # slack + a fixed margin: the threshold closes the common path,
-        # the deadline is a jitter-tolerant backstop — never past the
-        # static timeout
+        # the deadline is a jitter-tolerant backstop — widened while the
+        # curve is drifting, never past the static timeout
+        widen = 1.0 + self.drift_gain * max(
+            (model.drift or 0.0) - self.drift_tolerance, 0.0
+        )
         deadline = min(
-            self.deadline_slack * best_wait + self.deadline_margin,
+            self.deadline_slack * best_wait * widen + self.deadline_margin,
             self.timeout,
         )
         return ClosePolicy(
@@ -300,26 +411,41 @@ class AdaptiveController:
             deadline=deadline,
             threshold_frac=best_f,
             expected_wait=best_wait,
-            source="learned",
+            source=source,
         )
 
     # -- restart persistence -------------------------------------------------
     def state_dict(self) -> Dict:
-        """JSON-able controller state (per-tenant curves + fuse-wall
-        estimates) so an aggregator restart resumes learned, not cold."""
+        """JSON-able controller state (per-tenant curves, the
+        cross-tenant prior, and fuse-wall estimates) so an aggregator
+        restart resumes learned, not cold.
+        ``repro.checkpoint.save_controller_state`` persists this next to
+        model checkpoints; ``AggregationService.save_controller`` /
+        ``load_controller`` are the service-level hooks."""
         return {
             "models": {
                 t: m.state_dict() for t, m in self._models.items()
             },
             "est_seconds": dict(self._est_seconds),
+            "prior": self._prior.state_dict(),
+            "prior_est": self._prior_est,
         }
 
     def load_state_dict(self, state: Dict) -> None:
+        """Restore ``state_dict`` output (older checkpoints without a
+        prior section restore with a fresh prior)."""
         self._models = {
             t: ArrivalModel.from_state_dict(s)
             for t, s in state.get("models", {}).items()
         }
         self._est_seconds = dict(state.get("est_seconds", {}))
+        prior = state.get("prior")
+        self._prior = (
+            ArrivalModel.from_state_dict(prior) if prior
+            else ArrivalModel(n_quantiles=self.n_quantiles, ema=self.ema)
+        )
+        self._prior_est = state.get("prior_est")
 
     def tenants(self) -> List[str]:
+        """Tenants with at least one observed round."""
         return sorted(self._models)

@@ -36,8 +36,11 @@ class Monitor:
     overrides the close predicate itself — the adaptive controller
     passes its learned :class:`~repro.core.adaptive.ClosePolicy` here
     with ``threshold`` / ``timeout`` mirroring the learned values so
-    reporting stays truthful. ``clock`` / ``sleep`` are injectable for
-    deterministic tests."""
+    reporting stays truthful. ``tenant`` scopes the count to one store
+    partition, so concurrent tenants' monitors never gate on each
+    other's arrivals (``None``: whole spool, the single-tenant
+    behavior). ``clock`` / ``sleep`` are injectable for deterministic
+    tests."""
 
     def __init__(
         self,
@@ -48,6 +51,7 @@ class Monitor:
         clock: Callable[[], float] = time.monotonic,
         sleep: Callable[[float], None] = time.sleep,
         policy: Optional[Callable[[int, float], bool]] = None,
+        tenant: Optional[str] = None,
     ):
         self.store = store
         self.threshold = threshold
@@ -56,6 +60,7 @@ class Monitor:
         self.clock = clock
         self.sleep = sleep
         self.policy = policy
+        self.tenant = tenant
 
     def should_close(self, count: int, waited: float) -> bool:
         """The gate, as a pure predicate: True once the threshold is met
@@ -76,7 +81,7 @@ class Monitor:
     def wait(self) -> MonitorResult:
         start = self.clock()
         while True:
-            count = self.store.count()
+            count = self.store.count(self.tenant)
             waited = self.clock() - start
             if self.should_close(count, waited):
                 return self.result(count, waited)

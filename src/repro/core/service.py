@@ -41,12 +41,19 @@ the store's write timestamps) is minimized against the planner's
 cost-vs-staleness objective, so the gate closes exactly when the
 marginal straggler stops being worth the wait. ``cost_bias`` is the
 paper's user knob: 0 optimizes round wall-clock, 1 optimizes update
-inclusion. All service-side cross-round state — carry accumulator,
-straggler ages, learned curves — is keyed by ``tenant`` (model id).
-NOTE the UpdateStore itself has no tenant key: a round folds whatever
-ids are in the store, so tenants interleaving through one service must
-drain their own writes within their rounds (or use separate stores);
-tenant keying isolates the CONTINUITY state, not the spool.
+inclusion. A tenant without arrival history borrows the controller's
+cross-tenant PRIOR curve (cold-start transfer), and a tenant whose
+arrival behavior is drifting faster than the EW window gets a widened
+deadline backstop. ``save_controller`` / ``load_controller`` persist
+the learned state into ``repro/checkpoint`` alongside model state.
+
+MULTI-TENANT ROUNDS: both the service-side cross-round state — carry
+accumulator, straggler ages, learned curves — AND the UpdateStore
+itself are keyed by ``tenant``: every write lands in one tenant's
+store partition, and a round gates on, folds, and consumes ONLY its
+own tenant's partition. Concurrent tenants interleave open rounds on
+one shared store (and share the engines' warm compile caches) without
+stealing each other's updates — see docs/MULTITENANCY.md.
 
 Convergence guarantee (paper §IV-C): every engine computes the *same*
 fusion formula — tests/test_equivalence.py asserts allclose across
@@ -68,7 +75,7 @@ from repro.core.fusion import FusionAlgorithm, get_fusion
 from repro.core.local import LocalEngine
 from repro.core.monitor import Monitor, MonitorResult
 from repro.core.planner import Plan, Planner
-from repro.core.store import UpdateStore
+from repro.core.store import DEFAULT_TENANT, UpdateStore
 from repro.core.workload import Workload, WorkloadClass, classify
 from repro.utils.mem import TPU_V5E, HardwareSpec
 from repro.utils.pytree import flat_vector_to_tree, tree_to_flat_vector
@@ -101,7 +108,7 @@ class RoundReport:
     overlap_seconds: float = 0.0
     async_round: bool = False    # arrival-driven overlapped round
     empty: bool = False          # monitor timed out with nothing to fuse
-    tenant: str = "default"      # carry/controller key (multi-tenant rounds)
+    tenant: str = DEFAULT_TENANT  # store partition / continuity key
     # the gate that closed this round — source == "learned" once the
     # adaptive controller has enough arrival history for the tenant
     close_policy: Optional[ClosePolicy] = None
@@ -270,7 +277,7 @@ class AggregationService:
         expected_clients: Optional[int] = None,
         from_store: bool = False,
         async_round: bool | str = False,
-        tenant: str = "default",
+        tenant: str = DEFAULT_TENANT,
     ) -> Tuple[PyTree, RoundReport]:
         """One aggregation round. Returns ``(fused, RoundReport)``.
 
@@ -290,15 +297,17 @@ class AggregationService:
         carry the accumulator across rounds per ``tenant`` and discount
         a straggler that is ``a`` rounds late to ``γ^a`` of its weight.
 
-        ``tenant`` keys all service-side cross-round state — carry
-        accumulator, straggler ages, and the adaptive controller's
-        learned arrival curve — so interleaved multi-model rounds
-        through one service keep separate continuity state. The store
-        itself is NOT tenant-partitioned: a round folds whatever ids
-        are present, so concurrent tenants sharing one store must
-        drain their own writes within their rounds. With
-        ``adaptive=True`` on the service, the round's close gate is the
-        controller's learned threshold/deadline for this tenant (see
+        ``tenant`` keys the round end-to-end: the store partition the
+        round gates on, folds, and consumes (writes tagged for other
+        tenants are invisible to it), plus all service-side cross-round
+        state — carry accumulator, straggler ages, and the adaptive
+        controller's learned arrival curve. Concurrent tenants can
+        interleave open rounds on ONE shared store without stealing
+        each other's updates, while sharing the engines' warm compile
+        caches (docs/MULTITENANCY.md). With ``adaptive=True`` on the
+        service, the round's close gate is the controller's learned
+        threshold/deadline for this tenant — borrowed from the
+        cross-tenant prior while the tenant is cold (see
         ``report.close_policy``).
 
         An empty round (timeout, nothing landed) returns
@@ -312,8 +321,8 @@ class AggregationService:
         expected = expected_clients
 
         if from_store:
-            expected = expected_clients or self.store.count()
-            use_async = self._resolve_async(async_round, expected)
+            expected = expected_clients or self.store.count(tenant)
+            use_async = self._resolve_async(async_round, expected, tenant)
             threshold = max(int(expected * self.threshold_frac), 1)
             timeout = self.monitor_timeout
             if self.controller is not None and expected > 0:
@@ -335,6 +344,7 @@ class AggregationService:
                 poll_interval=self.poll_interval,
                 clock=self.clock, sleep=self.sleep,
                 policy=policy,
+                tenant=tenant,
             )
             t_round = self.clock()
             # arrival offsets are computed on the STORE's clock (the
@@ -349,15 +359,15 @@ class AggregationService:
             monitor_result = monitor.wait()
             # arrival snapshot AT CLOSE — the controller's training
             # signal; later stragglers belong to the next round's curve
-            arrivals = self.store.arrival_times()
-            if self.store.count() == 0:
-                # timed-out round on an empty store: structured empty
+            arrivals = self.store.arrival_times(tenant)
+            if self.store.count(tenant) == 0:
+                # timed-out round on an empty partition: structured empty
                 # report, not a LookupError out of store.meta()
                 return self._empty_round(
                     monitor_result, template, tenant=tenant,
                     t_round=t_round, expected=expected,
                 )
-            n, p, dtype = self.store.meta()
+            n, p, dtype = self.store.meta(tenant)
             row_bytes = p * dtype.itemsize
             chunk_rows = self._chunk_rows(n, row_bytes)
             load = Workload(
@@ -380,7 +390,8 @@ class AggregationService:
                 engine = self._stream_engine(plan.engine)
                 t0 = time.perf_counter()
                 fused, srep = engine.fuse_stream(
-                    self.fusion, self.store.iter_chunks(chunk_rows),
+                    self.fusion,
+                    self.store.iter_chunks(chunk_rows, tenant=tenant),
                     chunk_rows=chunk_rows,
                 )
                 dt = time.perf_counter() - t0
@@ -397,7 +408,7 @@ class AggregationService:
                     expected=expected, arrivals=arrivals,
                 )
             t0 = time.perf_counter()
-            stacked, w = self.store.read_stacked()
+            stacked, w = self.store.read_stacked(tenant)
             phase["ingest"] = time.perf_counter() - t0
         else:
             assert updates is not None and len(updates) > 0
@@ -453,24 +464,31 @@ class AggregationService:
         )
 
     # -- async (monitor-overlapped) rounds ------------------------------------
-    def _resolve_async(self, async_round: bool | str, expected: int) -> bool:
+    def _resolve_async(
+        self, async_round: bool | str, expected: int,
+        tenant: str = DEFAULT_TENANT,
+    ) -> bool:
         """Decide whether this store round overlaps fusion with the wait.
         Only reducible fusions can fold partial sums incrementally; "auto"
-        asks the planner whether the expected monitor wait (last round's
-        observed wait, else the timeout) dominates the drain residue."""
+        asks the planner whether the expected monitor wait (the TENANT's
+        last observed wait, else the timeout) dominates the drain
+        residue. Projections are sized off ``tenant``'s store
+        partition."""
         if not async_round or not self.fusion.reducible:
             return False
         if async_round != "auto":
             return True
+        # the tenant's own history only: another tenant's wait says
+        # nothing about this fleet's stragglers
         last_wait = next(
             (r.monitor.waited for r in reversed(self.history)
-             if r.monitor is not None), None,
+             if r.monitor is not None and r.tenant == tenant), None,
         )
         expected_wait = (
             last_wait if last_wait is not None else self.monitor_timeout
         )
         try:
-            n, p, dtype = self.store.meta()
+            n, p, dtype = self.store.meta(tenant)
         except LookupError:
             # nothing has arrived yet — the wait is all there is, so
             # overlapping it is free
@@ -493,35 +511,36 @@ class AggregationService:
 
     def _aggregate_async(
         self, monitor: Monitor, expected: int, template,
-        tenant: str = "default", t_round: Optional[float] = None,
+        tenant: str = DEFAULT_TENANT, t_round: Optional[float] = None,
         policy: Optional[ClosePolicy] = None,
         t_round_store: Optional[float] = None,
     ) -> Tuple[PyTree, RoundReport]:
         """Arrival-driven round: fuse while stragglers write (Algorithm 1
         with the monitor folded INTO the ingest stream). The gate —
         static threshold/timeout or the controller's learned policy —
-        closes the stream; folded updates are consumed from the store;
-        stragglers missing the close age into the next round (per
-        tenant)."""
+        closes the stream; folded updates are consumed from the
+        tenant's store partition (other tenants' concurrent arrivals
+        are invisible); stragglers missing the close age into the next
+        round (per tenant)."""
         if t_round is None:
             t_round = monitor.clock()
         if t_round_store is None:
             t_round_store = self.store.clock()
         # learn (P, dtype) from the first arrival — or time out empty
         while True:
-            count = self.store.count()
+            count = self.store.count(tenant)
             waited = monitor.clock() - t_round
             if count > 0 or monitor.should_close(count, waited):
                 break
             self.store.wait_for_arrival(monitor.poll_interval,
                                         monitor.sleep)
-        if self.store.count() == 0:
+        if self.store.count(tenant) == 0:
             mr = monitor.result(0, monitor.clock() - t_round)
             return self._empty_round(
                 mr, template, async_round=True, tenant=tenant,
                 t_round=t_round, expected=expected,
             )
-        n_now, p, dtype = self.store.meta()
+        n_now, p, dtype = self.store.meta(tenant)
         row_bytes = p * dtype.itemsize
         n_proj = max(expected, n_now, 1)
         chunk_rows = self._chunk_rows(n_proj, row_bytes)
@@ -561,6 +580,7 @@ class AggregationService:
                 poll_interval=monitor.poll_interval,
                 clock=monitor.clock, sleep=monitor.sleep,
                 versions_out=folded_versions, stats_out=io_stats,
+                tenant=tenant,
             ):
                 folded.extend(ids)
                 if gamma is not None and ages:
@@ -584,16 +604,17 @@ class AggregationService:
 
         # arrival snapshot BEFORE the consume drops timestamps — the
         # adaptive controller's training signal for this tenant's curve
-        arrivals = self.store.arrival_times()
-        # queue semantics: what we folded is consumed (version-checked —
-        # an update re-written mid-round survives for the next round);
-        # what raced past the close stays, one round staler
-        self.store.remove(folded, versions=folded_versions)
+        arrivals = self.store.arrival_times(tenant)
+        # queue semantics: what we folded is consumed from the tenant's
+        # partition (version-checked — an update re-written mid-round
+        # survives for the next round); what raced past the close stays,
+        # one round staler
+        self.store.remove(folded, versions=folded_versions, tenant=tenant)
         if gamma is not None:
             self._carry[tenant] = (srep.acc_wsum, srep.acc_tot)
         self._stale_ages[tenant] = {
             cid: ages.get(cid, 0) + 1
-            for cid in self.store.client_ids()
+            for cid in self.store.client_ids(tenant)
         }
 
         overlap = closed_at.get("waited", 0.0)
@@ -620,7 +641,7 @@ class AggregationService:
 
     def _empty_round(
         self, monitor_result: MonitorResult, template, async_round=False,
-        tenant: str = "default", t_round: Optional[float] = None,
+        tenant: str = DEFAULT_TENANT, t_round: Optional[float] = None,
         expected: Optional[int] = None,
     ) -> Tuple[None, RoundReport]:
         """Timed-out round with nothing to fuse: a structured report (the
@@ -648,7 +669,7 @@ class AggregationService:
         self, fused, template, plan, n, load, dt, monitor_result,
         expected_clients, streamed, phase,
         overlap_seconds: float = 0.0, async_round: bool = False,
-        tenant: str = "default", policy: Optional[ClosePolicy] = None,
+        tenant: str = DEFAULT_TENANT, policy: Optional[ClosePolicy] = None,
         t_round: Optional[float] = None, expected: Optional[int] = None,
         arrivals: Optional[Dict[str, float]] = None,
     ):
@@ -692,3 +713,34 @@ class AggregationService:
         if template is not None:
             return flat_vector_to_tree(jnp.asarray(fused), template), report
         return fused, report
+
+    # -- controller persistence (restart continuity) --------------------------
+    def save_controller(self, path: str) -> str:
+        """Persist the adaptive controller's learned state (per-tenant
+        arrival curves + cross-tenant prior) as JSON at
+        ``<path>.controller.json`` — pass the same ``path`` as the
+        model checkpoint (``repro.checkpoint.save_pytree``) so the
+        learned gates travel with the model. Returns the written path.
+        Raises ``ValueError`` on a non-adaptive service."""
+        from repro.checkpoint import save_controller_state
+
+        if self.controller is None:
+            raise ValueError(
+                "save_controller needs an adaptive service "
+                "(AggregationService(adaptive=True))"
+            )
+        return save_controller_state(path, self.controller)
+
+    def load_controller(self, path: str) -> None:
+        """Restore controller state saved by ``save_controller`` — a
+        restarted service resumes with its learned curves instead of
+        re-learning from static-timeout rounds. Raises ``ValueError``
+        on a non-adaptive service."""
+        from repro.checkpoint import load_controller_state
+
+        if self.controller is None:
+            raise ValueError(
+                "load_controller needs an adaptive service "
+                "(AggregationService(adaptive=True))"
+            )
+        load_controller_state(path, self.controller)

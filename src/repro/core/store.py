@@ -11,6 +11,19 @@ Two backends:
   * disk   — one .npy per update under a spool dir (restart-safe; the
              end-to-end example and fault-tolerance tests use this).
 
+The spool is TENANT-PARTITIONED: every write lands in exactly one
+tenant's partition (``tenant="default"`` unless tagged), and every read
+path — ``count`` / ``client_ids`` / ``meta`` / ``iter_chunks`` /
+``iter_arrivals`` / ``arrival_times`` / ``read_stacked`` — takes a
+``tenant`` filter, so concurrent applications sharing one store (the
+paper's multi-application edge aggregator) interleave open rounds
+without folding each other's updates. ``remove`` consumes within a
+single tenant's partition; client ids only need to be unique WITHIN a
+tenant. ``tenant=None`` on the read paths means the legacy whole-spool
+view. On disk, the default tenant spools at the root (restart-compatible
+with pre-tenant spools) and every other tenant under
+``spool_dir/<tenant>/``.
+
 The aggregator-side read path is STREAMING-first: ``iter_chunks`` hands
 the engine fixed-size (chunk, P) blocks with the next block prefetched on
 a reader thread (double buffering), so a round never materializes the
@@ -32,7 +45,10 @@ notifies an arrival condition, so arrival-driven readers
 (``iter_arrivals``, ``Monitor.wait``) wake event-driven instead of
 sleep-polling. ``SpoolTailer`` extends the same arrival path to blobs
 written DIRECTLY into a disk spool by external processes: inotify when
-the platform has it, directory polling elsewhere.
+the platform has it, directory polling elsewhere. External writers
+route blobs to a tenant by writing into the tenant's subdirectory, or
+by dropping a ``<cid>.npy.tenant`` sidecar next to a root-level blob
+(the tailer then moves the files into the named partition).
 
 Ingest-time accounting mirrors the paper's Fig. 12 'average write time':
 bytes / per-datanode bandwidth with ``replication`` copies.
@@ -50,6 +66,30 @@ import numpy as np
 
 from repro.utils.pytree import tree_to_flat_vector
 
+# the partition untagged writes land in; also the root of a disk spool
+DEFAULT_TENANT = "default"
+
+# (tenant, client_id) — the store's internal index key
+_Key = Tuple[str, str]
+
+
+def _stat_identity(path: str) -> Tuple[int, int, int]:
+    """(st_mtime_ns, st_size, st_ino) — the identity a registered root
+    blob's bytes are recognized by. Any rewrite moves at least one
+    component: in-place writes bump mtime/size, rename-based writers
+    change the inode even under coarse filesystem timestamps."""
+    st = os.stat(path)
+    return (st.st_mtime_ns, st.st_size, st.st_ino)
+
+
+def _valid_tenant(tenant: str) -> bool:
+    """A tenant name must be a single path component: it becomes a
+    spool subdirectory, so separators / '..' would escape the spool
+    (path traversal via a crafted ``.tenant`` sidecar)."""
+    return bool(tenant) and tenant not in (".", "..") \
+        and os.path.basename(tenant) == tenant \
+        and "/" not in tenant and "\\" not in tenant
+
 
 @dataclasses.dataclass
 class StoreStats:
@@ -62,7 +102,8 @@ class StoreStats:
 
 
 class UpdateStore:
-    """Thread-safe spool of (client_id -> flat update, weight).
+    """Thread-safe, tenant-partitioned spool of
+    ``(tenant, client_id) -> (flat update, weight)``.
 
     Locking discipline: ``self._lock`` guards ONLY the in-memory index
     (``_mem`` / ``_weights``) and stats. Disk I/O happens outside the
@@ -92,20 +133,36 @@ class UpdateStore:
         self.replication = replication
         self.datanode_bw = datanode_bw
         self.clock = clock   # arrival timestamping; injectable for tests
-        self._mem: Dict[str, Tuple[np.ndarray, float]] = {}
-        self._weights: Dict[str, float] = {}
-        # per-id write counter: lets a version-aware remove() keep an
+        # all index maps are keyed (tenant, client_id) — the partition key
+        self._mem: Dict[_Key, Tuple[np.ndarray, float]] = {}
+        self._weights: Dict[_Key, float] = {}
+        # per-key write counter: lets a version-aware remove() keep an
         # update that was re-written after a round folded its predecessor
-        self._versions: Dict[str, int] = {}
-        # per-id arrival timestamp (self.clock timebase) — the adaptive
+        self._versions: Dict[_Key, int] = {}
+        # per-key arrival timestamp (self.clock timebase) — the adaptive
         # controller's training signal (repro/core/adaptive.py)
-        self._arrivals: Dict[str, float] = {}
+        self._arrivals: Dict[_Key, float] = {}
         # external blobs first sighted without a weight sidecar:
-        # cid -> wall time first seen. They register at the default
+        # key -> wall time first seen. They register at the default
         # weight only after sidecar_grace_seconds, so a sidecar landing
         # just behind its blob (the documented writer order) wins.
         self.sidecar_grace_seconds = sidecar_grace_seconds
-        self._ext_seen: Dict[str, float] = {}
+        self._ext_seen: Dict[_Key, float] = {}
+        # ROOT-blob ownership (disk): a (st_mtime_ns, st_size,
+        # st_ino) identity triple recorded at registration. The root
+        # staging area is shared between default-tenant clients and
+        # sidecar-routed external writers, so ingest_external uses this
+        # to tell a stray late ``.tenant`` sidecar (bytes unchanged:
+        # live entry wins) from a genuine re-submission (bytes
+        # replaced: evict + re-ingest); rename-based rewrites change
+        # the inode even on filesystems with coarse mtime ticks.
+        self._blob_mtime: Dict[_Key, Tuple[int, int, int]] = {}
+        # per-tenant entry count — the monitor's per-wake poll reads
+        # this, so it must be O(1), not a scan of the whole index
+        self._counts: Dict[str, int] = {}
+        # tenant subdirectories already created (write() hot path must
+        # not re-stat the directory on every update)
+        self._made_dirs: set = set()
         self._lock = threading.Lock()
         # notified on every registered arrival: arrival-driven readers
         # (iter_arrivals) block here instead of sleep-polling
@@ -114,17 +171,45 @@ class UpdateStore:
         if backend == "disk":
             # fault tolerance (the HDFS property the paper leans on):
             # recover updates spooled by a previous aggregator incarnation
-            # — weights persist in a sidecar next to each blob
+            # — weights persist in a sidecar next to each blob, tenants
+            # in the directory layout
             recovered = self._recover()
             self._weights.update(recovered)
             now = self.clock()
-            self._arrivals.update({cid: now for cid in recovered})
+            self._arrivals.update({key: now for key in recovered})
+            for t, _ in recovered:
+                self._counts[t] = self._counts.get(t, 0) + 1
+            for t, cid in recovered:
+                # root-blob ownership survives restarts: without the
+                # recorded mtime a post-restart external re-submission
+                # would misread as "unchanged bytes" and never re-ingest
+                if t == DEFAULT_TENANT:
+                    try:
+                        self._blob_mtime[(t, cid)] = _stat_identity(
+                            self._path(cid, t)
+                        )
+                    except OSError:
+                        pass
 
     # -- client side --------------------------------------------------------
-    def write(self, client_id: str, update, weight: float = 1.0) -> float:
-        """Store one update (pytree or flat vector). Returns the modeled
-        write latency (bandwidth model, paper Fig. 12). Concurrent writes
-        to the SAME client_id are last-writer-wins."""
+    def write(
+        self,
+        client_id: str,
+        update,
+        weight: float = 1.0,
+        tenant: str = DEFAULT_TENANT,
+    ) -> float:
+        """Store one update (pytree or flat vector) in ``tenant``'s
+        partition. Returns the modeled write latency (bandwidth model,
+        paper Fig. 12). Concurrent writes to the SAME (tenant,
+        client_id) are last-writer-wins; the same client_id under two
+        tenants are independent updates."""
+        if not _valid_tenant(tenant):
+            raise ValueError(
+                f"invalid tenant name {tenant!r}: must be a non-empty "
+                "single path component (it names a spool subdirectory)"
+            )
+        key = (tenant, client_id)
         vec = np.asarray(
             update if getattr(update, "ndim", None) == 1
             else tree_to_flat_vector(update)
@@ -137,80 +222,139 @@ class UpdateStore:
             # blob + sidecar land on the datanode OUTSIDE the lock.
             # np.save can't round-trip ml_dtypes (bf16 reloads as raw V2),
             # so extension floats spool as raw bytes + a dtype sidecar.
-            dpath = self._path(client_id) + ".dtype"
+            path = self._path(client_id, tenant)
+            if tenant != DEFAULT_TENANT and tenant not in self._made_dirs:
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+                self._made_dirs.add(tenant)
+            dpath = path + ".dtype"
             if vec.dtype.kind == "V":
-                np.save(self._path(client_id), np.ascontiguousarray(vec)
-                        .view(np.uint8))
+                np.save(path, np.ascontiguousarray(vec).view(np.uint8))
                 with open(dpath, "w") as f:
                     f.write(vec.dtype.name)
             else:
-                np.save(self._path(client_id), vec)
+                np.save(path, vec)
                 try:
                     os.remove(dpath)   # stale sidecar from a prior dtype
                 except FileNotFoundError:
                     pass
-            with open(self._path(client_id) + ".w", "w") as f:
+            with open(path + ".w", "w") as f:
                 f.write(repr(float(weight)))
+            try:
+                mtime = _stat_identity(path)
+            except OSError:
+                mtime = None
         with self._lock:
+            src = self._mem if self.backend == "memory" else self._weights
+            if key not in src:
+                self._counts[tenant] = self._counts.get(tenant, 0) + 1
             if self.backend == "memory":
-                self._mem[client_id] = (vec, weight)
+                self._mem[key] = (vec, weight)
             else:
-                self._weights[client_id] = weight
-            self._versions[client_id] = self._versions.get(client_id, 0) + 1
-            self._arrivals[client_id] = self.clock()
+                self._weights[key] = weight
+                if mtime is not None:
+                    self._blob_mtime[key] = mtime
+            self._versions[key] = self._versions.get(key, 0) + 1
+            self._arrivals[key] = self.clock()
             self.stats.writes += 1
             self.stats.bytes_written += nbytes
             self.stats.sim_write_seconds += latency
             self._arrival_cv.notify_all()
         return latency
 
-    # -- aggregator side ----------------------------------------------------
-    def count(self) -> int:
-        with self._lock:
-            if self.backend == "memory":
-                return len(self._mem)
-            return len(self._weights)
+    def _drop_index_entry(self, key: _Key) -> None:
+        """Drop one key from every per-key index map and decrement its
+        tenant's O(1) count. Caller holds ``self._lock``. ``_versions``
+        is deliberately NOT dropped: the counter must never rewind
+        while an old round's version snapshot is in flight."""
+        if key in self._mem or key in self._weights:
+            left = self._counts.get(key[0], 0) - 1
+            if left > 0:
+                self._counts[key[0]] = left
+            else:
+                self._counts.pop(key[0], None)
+        self._mem.pop(key, None)
+        self._weights.pop(key, None)
+        self._arrivals.pop(key, None)
+        self._blob_mtime.pop(key, None)
 
-    def client_ids(self) -> List[str]:
+    # -- aggregator side ----------------------------------------------------
+    def _keys(self, tenant: Optional[str]) -> List[_Key]:
+        """Sorted index keys of one tenant's partition, or of the whole
+        spool (``tenant=None``). Callers must hold ``self._lock``."""
+        src = self._mem if self.backend == "memory" else self._weights
+        if tenant is None:
+            return sorted(src.keys())
+        return sorted(k for k in src.keys() if k[0] == tenant)
+
+    def count(self, tenant: Optional[str] = None) -> int:
+        """Updates present in ``tenant``'s partition (``None``: whole
+        spool). O(1) either way — this is the monitor's per-wake
+        poll, so a per-tenant counter is maintained instead of scanning
+        the index."""
         with self._lock:
             src = self._mem if self.backend == "memory" else self._weights
-            return sorted(src.keys())
+            if tenant is None:
+                return len(src)
+            return self._counts.get(tenant, 0)
 
-    def arrival_times(self) -> Dict[str, float]:
-        """Snapshot of {client_id -> arrival timestamp} on the store's
-        ``clock`` timebase (``time.monotonic`` by default). This is the
-        adaptive controller's training signal: the service subtracts the
-        round's start time to get per-client arrival offsets."""
+    def client_ids(self, tenant: Optional[str] = None) -> List[str]:
+        """Sorted client ids in ``tenant``'s partition. With
+        ``tenant=None`` (whole spool) an id shared by two tenants
+        appears once per tenant."""
         with self._lock:
-            return dict(self._arrivals)
+            return [cid for _, cid in self._keys(tenant)]
+
+    def tenants(self) -> List[str]:
+        """Sorted tenants that currently hold at least one update."""
+        with self._lock:
+            src = self._mem if self.backend == "memory" else self._weights
+            return sorted({t for t, _ in src.keys()})
+
+    def arrival_times(
+        self, tenant: Optional[str] = None
+    ) -> Dict[str, float]:
+        """Snapshot of {client_id -> arrival timestamp} for ``tenant``'s
+        partition (``None``: whole spool; last tenant wins on a shared
+        id) on the store's ``clock`` timebase (``time.monotonic`` by
+        default). This is the adaptive controller's training signal:
+        the service subtracts the round's start time to get per-client
+        arrival offsets."""
+        with self._lock:
+            return {
+                cid: ts for (t, cid), ts in self._arrivals.items()
+                if tenant is None or t == tenant
+            }
 
     def wait_for_arrival(self, timeout: float, sleep=time.sleep) -> None:
         """Block until a new arrival is registered or ``timeout`` elapses.
         Event-driven (condition wait, woken by ``write`` /
         ``ingest_external``) under the real clock; with an INJECTED sleep
-        (scripted test clocks) the caller's sleep drives time instead."""
+        (scripted test clocks) the caller's sleep drives time instead.
+        The condition is spool-global: a waiter filtering on one tenant
+        re-checks its partition on wake (spurious wakes are benign)."""
         if sleep is not time.sleep:
             sleep(timeout)
             return
         with self._arrival_cv:
             self._arrival_cv.wait(timeout)
 
-    def read(self, client_id: str) -> Tuple[np.ndarray, float]:
-        u, w, _ = self._read_versioned(client_id)
+    def read(
+        self, client_id: str, tenant: str = DEFAULT_TENANT
+    ) -> Tuple[np.ndarray, float]:
+        u, w, _ = self._read_versioned((tenant, client_id))
         return u, w
 
-    def _read_versioned(
-        self, client_id: str
-    ) -> Tuple[np.ndarray, float, int]:
+    def _read_versioned(self, key: _Key) -> Tuple[np.ndarray, float, int]:
         """(update, weight, write-version). For the memory backend the
         array and version are captured under ONE lock, so version-checked
         removal is exact; the disk backend's blob read is lock-free as
         ever, so a racing overwrite can at worst cause a harmless re-fold
         next round (never a lost update)."""
+        tenant, client_id = key
         if self.backend == "memory":
             with self._lock:
-                arr, weight = self._mem[client_id]
-                version = self._versions.get(client_id, 0)
+                arr, weight = self._mem[key]
+                version = self._versions.get(key, 0)
             # hand out a read-only VIEW: the spool keeps the only mutable
             # reference, so a caller scribbling on a block cannot corrupt
             # what a concurrent (or later) round will read
@@ -218,44 +362,57 @@ class UpdateStore:
             view.flags.writeable = False
             return view, weight, version
         with self._lock:
-            weight = self._weights[client_id]
-            version = self._versions.get(client_id, 0)
-        blob = np.load(self._path(client_id))
-        dt = self._sidecar_dtype(client_id)
+            weight = self._weights[key]
+            version = self._versions.get(key, 0)
+        path = self._path(client_id, tenant)
+        blob = np.load(path)
+        dt = self._sidecar_dtype(path)
         if dt is not None:
             blob = blob.view(dt)
         return blob, weight, version
 
-    def _sidecar_dtype(self, client_id: str) -> Optional[np.dtype]:
+    @staticmethod
+    def _sidecar_dtype(path: str) -> Optional[np.dtype]:
         try:
-            with open(self._path(client_id) + ".dtype") as f:
+            with open(path + ".dtype") as f:
                 return np.dtype(f.read().strip())
         except FileNotFoundError:
             return None
 
-    def meta(self) -> Tuple[int, int, np.dtype]:
-        """(n_clients, update_dim, stored dtype) without loading the set —
+    def meta(
+        self, tenant: Optional[str] = None
+    ) -> Tuple[int, int, np.dtype]:
+        """(n_clients, update_dim, stored dtype) for ``tenant``'s
+        partition (``None``: whole spool) without loading the set —
         what the planner needs BEFORE choosing an engine."""
-        ids = self.client_ids()
-        if not ids:
-            raise LookupError("empty store")
+        with self._lock:
+            keys = self._keys(tenant)
+        if not keys:
+            raise LookupError(
+                "empty store" if tenant is None
+                else f"empty store partition for tenant {tenant!r}"
+            )
+        first = keys[0]
         if self.backend == "memory":
             with self._lock:
-                vec, _ = self._mem[ids[0]]
-            return len(ids), int(vec.shape[0]), vec.dtype
-        blob = np.load(self._path(ids[0]), mmap_mode="r")  # header only
-        dt = self._sidecar_dtype(ids[0])
+                vec, _ = self._mem[first]
+            return len(keys), int(vec.shape[0]), vec.dtype
+        path = self._path(first[1], first[0])
+        blob = np.load(path, mmap_mode="r")  # header only
+        dt = self._sidecar_dtype(path)
         if dt is not None:
-            return len(ids), int(blob.nbytes // dt.itemsize), dt
-        return len(ids), int(blob.shape[0]), blob.dtype
+            return len(keys), int(blob.nbytes // dt.itemsize), dt
+        return len(keys), int(blob.shape[0]), blob.dtype
 
     def iter_chunks(
         self,
         chunk_rows: int,
         prefetch: bool = True,
+        tenant: Optional[str] = None,
     ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
-        """Yield (updates (c, P) stored-dtype, weights (c,) fp32) blocks,
-        c == chunk_rows except for the ragged final block.
+        """Yield (updates (c, P) stored-dtype, weights (c,) fp32) blocks
+        from ``tenant``'s partition (``None``: whole spool), c ==
+        chunk_rows except for the ragged final block.
 
         With ``prefetch`` a reader thread stages block k+1 while the
         engine consumes block k (double buffering): at most two blocks are
@@ -263,16 +420,19 @@ class UpdateStore:
         regardless of n. The iterator works over a snapshot of the client
         index — updates written after the call don't shift the blocks.
         """
-        ids = self.client_ids()
+        with self._lock:
+            keys = self._keys(tenant)
         chunk_rows = max(int(chunk_rows), 1)
         batches = [
-            ids[i:i + chunk_rows] for i in range(0, len(ids), chunk_rows)
+            keys[i:i + chunk_rows] for i in range(0, len(keys), chunk_rows)
         ]
         load = self._load_block
 
         if not prefetch:
             for batch in batches:
-                yield load(batch)
+                blk = load(batch)
+                if blk is not None:   # None: whole batch raced a consume
+                    yield blk
             return
 
         q: "queue.Queue" = queue.Queue(maxsize=1)
@@ -290,7 +450,12 @@ class UpdateStore:
         def reader():
             try:
                 for batch in batches:
-                    if stop.is_set() or not put(("block", load(batch))):
+                    if stop.is_set():
+                        return
+                    blk = load(batch)
+                    if blk is None:   # whole batch raced a consume
+                        continue
+                    if not put(("block", blk)):
                         return
                 put(("done", None))
             except BaseException as exc:  # surface in the consumer
@@ -317,23 +482,38 @@ class UpdateStore:
 
     def _load_block(
         self,
-        batch: List[str],
+        batch: List[_Key],
         versions_out: Optional[Dict[str, int]] = None,
-    ) -> Tuple[np.ndarray, np.ndarray]:
-        """Stack one batch of client ids into ((c, P) block, (c,) weights)
+        keys_out: Optional[List[_Key]] = None,
+    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Stack one batch of index keys into ((c, P) block, (c,) weights)
         — blob reads happen lock-free, stats update under the lock.
+        A key that vanished between the caller's snapshot and the read
+        (consumed by a concurrent round's ``remove``, or evicted by the
+        tailer's re-submission handling) is SKIPPED, honoring the read
+        contract — a racing consume is at worst a smaller block, never
+        a crashed round; ``None`` is returned when every key vanished.
         ``versions_out`` collects each id's write-version AS READ, for
-        version-checked consumption (``remove``)."""
+        version-checked consumption (``remove``); it is keyed by client
+        id, so it is only meaningful for single-tenant batches.
+        ``keys_out`` collects the keys actually loaded."""
         ups, ws = [], []
-        for cid in batch:
-            u, w, v = self._read_versioned(cid)
+        for key in batch:
+            try:
+                u, w, v = self._read_versioned(key)
+            except (KeyError, FileNotFoundError):
+                continue   # consumed/evicted mid-flight: skip the row
             if versions_out is not None:
-                versions_out[cid] = v
+                versions_out[key[1]] = v
+            if keys_out is not None:
+                keys_out.append(key)
             ups.append(u)
             ws.append(w)
+        if not ups:
+            return None
         block = np.stack(ups)
         with self._lock:
-            self.stats.reads += len(batch)
+            self.stats.reads += len(ups)
             self.stats.bytes_read += block.nbytes
             self.stats.peak_block_bytes = max(
                 self.stats.peak_block_bytes, block.nbytes
@@ -349,21 +529,26 @@ class UpdateStore:
         sleep: Callable[[float], None] = time.sleep,
         versions_out: Optional[Dict[str, int]] = None,
         stats_out: Optional[Dict[str, float]] = None,
+        tenant: Optional[str] = None,
     ) -> Iterator[Tuple[np.ndarray, np.ndarray, List[str]]]:
         """Arrival-driven streaming read — the async-round substrate.
 
         Yields ((c, P) block, (c,) weights, client_ids) as soon as
-        ``chunk_rows`` NEW updates have landed, without snapshotting the
-        index up front: updates written while the stream is live are
-        picked up on the next poll, so an engine can fold partial sums
-        while stragglers are still writing. ``should_close(count, waited)``
-        — the Monitor's threshold/timeout gate — is consulted every poll
-        with the total number of updates observed so far and the seconds
-        since the call; once it returns True the stream CLOSES: everything
-        already landed is drained (full blocks, then one ragged remainder)
-        and iteration stops. Only the final block can be ragged, which is
-        the contract the engines' fixed-shape step executables rely on.
-        Updates written after the close belong to the next round.
+        ``chunk_rows`` NEW updates have landed in ``tenant``'s partition
+        (``None``: whole spool), without snapshotting the index up
+        front: updates written while the stream is live are picked up on
+        the next poll, so an engine can fold partial sums while
+        stragglers are still writing — and writes tagged for OTHER
+        tenants never enter this stream, which is what makes interleaved
+        open rounds safe on one shared store. ``should_close(count,
+        waited)`` — the Monitor's threshold/timeout gate — is consulted
+        every poll with the total number of matching updates observed so
+        far and the seconds since the call; once it returns True the
+        stream CLOSES: everything already landed is drained (full
+        blocks, then one ragged remainder) and iteration stops. Only the
+        final block can be ragged, which is the contract the engines'
+        fixed-shape step executables rely on. Updates written after the
+        close belong to the next round.
 
         NOTE the third tuple element is the block's client ids — the
         engines' ``fuse_stream`` block protocol instead expects an
@@ -376,114 +561,251 @@ class UpdateStore:
         """
         chunk_rows = max(int(chunk_rows), 1)
         seen: set = set()
-        pending: List[str] = []
+        pending: List[_Key] = []
         start = clock()
         while True:
-            fresh = [cid for cid in self.client_ids() if cid not in seen]
+            with self._lock:
+                keys = self._keys(tenant)
+            fresh = [key for key in keys if key not in seen]
             seen.update(fresh)
             pending.extend(fresh)
             closed = should_close(len(seen), clock() - start)
             while len(pending) >= chunk_rows or (closed and pending):
                 batch, pending = pending[:chunk_rows], pending[chunk_rows:]
                 t0 = time.perf_counter()
-                block, w = self._load_block(batch, versions_out=versions_out)
+                loaded: List[_Key] = []
+                blk = self._load_block(
+                    batch, versions_out=versions_out, keys_out=loaded,
+                )
                 if stats_out is not None:
                     stats_out["load_seconds"] = (
                         stats_out.get("load_seconds", 0.0)
                         + time.perf_counter() - t0
                     )
-                yield block, w, batch
+                if blk is None:   # whole batch raced a consume/eviction
+                    continue
+                block, w = blk
+                # ids of the rows ACTUALLY loaded — a key that raced a
+                # concurrent consume is skipped, so the caller's folded
+                # bookkeeping stays exact
+                yield block, w, [cid for _, cid in loaded]
             if closed:
                 return
             # event-driven under the real clock: wake on the next write's
             # condition notify instead of burning the full poll interval
             self.wait_for_arrival(poll_interval, sleep)
 
-    def read_stacked(self) -> Tuple[np.ndarray, np.ndarray]:
-        """All updates as (n, P) + weights (n,) — the DENSE engine input.
-        Order-statistic fusions still need this; reducible rounds should
-        stream via ``iter_chunks`` instead."""
+    def read_stacked(
+        self, tenant: Optional[str] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """All of ``tenant``'s updates as (n, P) + weights (n,) — the
+        DENSE engine input. Order-statistic fusions still need this;
+        reducible rounds should stream via ``iter_chunks`` instead."""
         ups, ws = [], []
-        for block, w in self.iter_chunks(chunk_rows=1 << 62, prefetch=False):
+        for block, w in self.iter_chunks(
+            chunk_rows=1 << 62, prefetch=False, tenant=tenant
+        ):
             ups.append(block)
             ws.append(w)
         return np.concatenate(ups), np.concatenate(ws)
 
-    def partition(self, n_parts: int) -> List[List[str]]:
-        """Round-robin client placement over partitions (Spark-style)."""
-        ids = self.client_ids()
+    def partition(
+        self, n_parts: int, tenant: Optional[str] = None
+    ) -> List[List[str]]:
+        """Round-robin client placement over partitions (Spark-style),
+        within ``tenant``'s partition (``None``: whole spool)."""
+        ids = self.client_ids(tenant)
         return [ids[i::n_parts] for i in range(n_parts)]
 
     def remove(
         self,
         client_ids: Iterable[str],
         versions: Optional[Dict[str, int]] = None,
+        tenant: str = DEFAULT_TENANT,
     ) -> None:
-        """Consume updates — async rounds treat the store as a queue and
-        remove what they fold, so late stragglers are what remains for the
-        next round. With ``versions`` (id -> write-version as folded, from
-        ``iter_arrivals``), an id whose version has since advanced is
-        KEPT: a client that re-wrote mid-round keeps its newer update for
-        the next round instead of losing it. Index entries drop under the
-        lock; blob deletion, like all disk I/O, happens outside the
-        critical section.
+        """Consume updates from ``tenant``'s partition — async rounds
+        treat the store as a queue and remove what they fold, so late
+        stragglers are what remains for the next round, and a round can
+        only ever consume its OWN tenant's updates. With ``versions``
+        (id -> write-version as folded, from ``iter_arrivals``), an id
+        whose version has since advanced is KEPT: a client that re-wrote
+        mid-round keeps its newer update for the next round instead of
+        losing it. Index entries drop under the lock; blob deletion,
+        like all disk I/O, happens outside the critical section.
 
         The version guard is exact for the memory backend. On disk,
         ``write`` saves the blob before registering it, so a re-write
         racing the unlink batch is re-checked per id right before its
         files go; a write landing inside that last microsecond window can
         still lose its blob (lock-free spool limitation)."""
-        ids = list(client_ids)
+        keys = [(tenant, cid) for cid in client_ids]
         doomed = []
         with self._lock:
-            for cid in ids:
+            for key in keys:
                 if versions is not None and \
-                        self._versions.get(cid, 0) != versions.get(cid, -1):
+                        self._versions.get(key, 0) != \
+                        versions.get(key[1], -1):
                     continue    # re-written since the fold: keep it
-                self._mem.pop(cid, None)
-                self._weights.pop(cid, None)
-                self._arrivals.pop(cid, None)
-                doomed.append(cid)
+                self._drop_index_entry(key)
+                doomed.append(key)
         if self.backend != "disk":
             return
-        for cid in doomed:
+        for key in doomed:
             if versions is not None:
                 with self._lock:
-                    if self._versions.get(cid, 0) != versions.get(cid, -1):
+                    if self._versions.get(key, 0) != \
+                            versions.get(key[1], -1):
                         continue    # re-registered while we were unlinking
-            self._unlink([cid])
+            self._unlink([key])
 
-    def clear(self) -> None:
-        """Drop every update and reset stats for a fresh round sequence.
-        Ids are snapshotted under the lock; spool blobs are deleted outside
-        it (the store's locking discipline: no disk I/O in the critical
-        section)."""
+    def clear(self, tenant: Optional[str] = None) -> None:
+        """Drop every update in ``tenant``'s partition — or the whole
+        spool with ``tenant=None``, which also resets stats for a fresh
+        round sequence. Keys are snapshotted under the lock; spool blobs
+        are deleted outside it (the store's locking discipline: no disk
+        I/O in the critical section)."""
         with self._lock:
-            doomed = list(self._weights) if self.backend == "disk" else []
-            self._mem.clear()
-            self._weights.clear()
-            self._arrivals.clear()
-            self._ext_seen.clear()
-            self.stats = StoreStats()
+            keys = self._keys(tenant)
+            doomed = keys if self.backend == "disk" else []
+            for key in keys:
+                self._drop_index_entry(key)
+            # grace timestamps purge by TENANT, not by index key —
+            # grace-pending external blobs are in _ext_seen but not yet
+            # in the index, and a stale first-seen time would skip the
+            # grace window for the next blob with that id
+            for key in [k for k in self._ext_seen
+                        if tenant is None or k[0] == tenant]:
+                self._ext_seen.pop(key, None)
+            if tenant is None:
+                self.stats = StoreStats()
         self._unlink(doomed)
 
-    def _unlink(self, client_ids: Iterable[str]) -> None:
-        for cid in client_ids:
-            for path in (self._path(cid), self._path(cid) + ".w",
-                         self._path(cid) + ".dtype"):
+    def _unlink(self, keys: Iterable[_Key]) -> None:
+        for tenant, cid in keys:
+            base = self._path(cid, tenant)
+            for path in (base, base + ".w", base + ".dtype",
+                         base + ".tenant"):
                 try:
                     os.remove(path)
                 except FileNotFoundError:
                     pass
 
-    def _path(self, client_id: str) -> str:
-        return os.path.join(self.spool_dir, f"{client_id}.npy")
+    def _tenant_dir(self, tenant: str) -> str:
+        """One tenant's disk partition: the spool root for the default
+        tenant (restart-compatible with pre-tenant spools), a
+        subdirectory for every other tenant."""
+        if tenant == DEFAULT_TENANT:
+            return self.spool_dir
+        return os.path.join(self.spool_dir, tenant)
+
+    def _path(self, client_id: str, tenant: str = DEFAULT_TENANT) -> str:
+        return os.path.join(self._tenant_dir(tenant), f"{client_id}.npy")
 
     # -- external spool writers (tailing) ------------------------------------
+    def _ext_register(
+        self, cid: str, tenant: str, from_root: bool = False
+    ) -> Optional[str]:
+        """Try to register one externally written blob into ``tenant``'s
+        partition. Returns the cid when newly registered, None when
+        skipped (partial write, sidecar grace, already known)."""
+        key = (tenant, cid)
+        path = self._path(cid, tenant)
+        try:
+            blob = np.load(path, mmap_mode="r")
+            nbytes = int(blob.nbytes)
+            mtime = _stat_identity(path)
+        except Exception:
+            return None   # partial write: next pass gets it
+        try:
+            with open(path + ".w") as f:
+                weight = float(f.read())
+        except (FileNotFoundError, ValueError):
+            now = time.monotonic()   # real elapsed, not self.clock
+            first = self._ext_seen.setdefault(key, now)
+            if now - first < self.sidecar_grace_seconds:
+                return None   # sidecar may still be in flight
+            weight = 1.0
+        self._ext_seen.pop(key, None)
+        if from_root:
+            # a sidecar-routed ROOT blob was grace-tracked under the
+            # DEFAULT key while its .tenant sidecar was in flight —
+            # drop that too, or a later root re-submission of this cid
+            # would read the stale first-seen time as an already-
+            # expired grace window. (Subdir registrations must NOT pop
+            # it: an unrelated root blob with the same cid may be
+            # mid-grace.)
+            self._ext_seen.pop((DEFAULT_TENANT, cid), None)
+        with self._arrival_cv:
+            if key in self._weights:
+                return None   # a concurrent write() beat us to it
+            self._weights[key] = weight
+            self._counts[tenant] = self._counts.get(tenant, 0) + 1
+            self._versions[key] = self._versions.get(key, 0) + 1
+            self._arrivals[key] = self.clock()
+            self._blob_mtime[key] = mtime
+            self.stats.writes += 1
+            self.stats.bytes_written += nbytes * self.replication
+            self._arrival_cv.notify_all()
+        return cid
+
+    def _ext_sidecar_tenant(self, cid: str) -> str:
+        """Peek a ROOT-level external blob's ``.tenant`` sidecar — no
+        side effects, so callers can consult the index BEFORE any files
+        move. No sidecar (or one naming the default) -> the default
+        tenant."""
+        try:
+            path = os.path.join(self.spool_dir, f"{cid}.npy.tenant")
+            with open(path) as f:
+                tenant = f.read().strip()
+        except FileNotFoundError:
+            return DEFAULT_TENANT
+        return tenant or DEFAULT_TENANT
+
+    def _ext_move_to_partition(
+        self, cid: str, src_dir: str, tenant: str
+    ) -> bool:
+        """Move an external blob set (blob + sidecars) from ``src_dir``
+        into ``tenant``'s partition directory, in place for
+        registration. Returns False to defer: the ``.w`` weight sidecar
+        may still be in flight behind the blob/``.tenant`` (the
+        documented writer order blob -> .tenant -> .w) — moving before
+        it lands would orphan the weight behind — so the move waits for
+        ``.w`` or the sidecar grace window; an OSError (racing
+        concurrent pass) also re-tries next tick."""
+        src_base = os.path.join(src_dir, f"{cid}.npy")
+        if not os.path.exists(src_base + ".w"):
+            now = time.monotonic()
+            first = self._ext_seen.setdefault((tenant, cid), now)
+            if now - first < self.sidecar_grace_seconds:
+                return False   # defer until .w lands (or grace expires)
+        dest_dir = self._tenant_dir(tenant)
+        os.makedirs(dest_dir, exist_ok=True)
+        try:
+            for suffix in (".w", ".dtype", ""):   # blob moves LAST, so a
+                src = src_base + suffix           # half-moved set never
+                if os.path.exists(src):           # registers half-done
+                    os.replace(src, self._path(cid, tenant) + suffix)
+            try:
+                os.remove(src_base + ".tenant")
+            except FileNotFoundError:
+                pass
+        except OSError:
+            return False
+        return True
+
     def ingest_external(self) -> List[str]:
         """Register spool blobs written DIRECTLY into ``spool_dir`` by
         external processes (clients mounting the spool, not calling
-        ``write``). Disk backend only; returns the newly registered ids.
+        ``write``). Disk backend only; returns the newly registered
+        client ids (across all tenants).
+
+        Tenant routing: a blob inside ``spool_dir/<tenant>/`` registers
+        in that tenant's partition; a root-level blob registers for the
+        default tenant unless a ``<cid>.npy.tenant`` sidecar names one,
+        in which case the files are moved into the named partition
+        first. Writers using the sidecar route must emit it BEFORE the
+        ``.w`` weight sidecar (blob -> .tenant -> .w): registration
+        happens as soon as the weight is readable.
 
         An unreadable blob (a write still in flight under the polling
         fallback) is skipped and picked up on a later pass — external
@@ -494,64 +816,134 @@ class UpdateStore:
         registers at weight 1.0: writers emit blob-then-sidecar, so
         registering on first sight would race the sidecar and freeze the
         weight at the default — the sidecar's own close event (or the
-        next poll tick) re-passes within the grace window."""
+        next poll tick) re-passes within the grace window.
+
+        Lock-free spool limitation (same class ``remove`` documents): a
+        re-submission that collides with a live default entry while the
+        round folding that entry is CLOSING can lose to the close's
+        unlink batch — the eviction and the version-checked remove are
+        not atomic with respect to each other, so the re-submitted blob
+        can be deleted instead of deferred in that microsecond window."""
         if self.backend != "disk":
             return []
         with self._lock:
             known = set(self._weights)
         new: List[str] = []
         for name in sorted(os.listdir(self.spool_dir)):
+            full = os.path.join(self.spool_dir, name)
+            if os.path.isdir(full):
+                for sub in sorted(os.listdir(full)):
+                    if not sub.endswith(".npy"):
+                        continue
+                    cid = sub[: -len(".npy")]
+                    if (name, cid) in known:
+                        continue
+                    if name == DEFAULT_TENANT:
+                        # a literal 'default/' subdirectory: its files
+                        # belong to the root partition — move them there
+                        # (paths for the default tenant resolve to the
+                        # root; registering in place would np.load a
+                        # nonexistent root blob forever)
+                        if not self._ext_move_to_partition(
+                            cid, full, DEFAULT_TENANT
+                        ):
+                            continue
+                    if self._ext_register(cid, name) is not None:
+                        new.append(cid)
+                continue
             if not name.endswith(".npy"):
                 continue
             cid = name[: -len(".npy")]
-            if cid in known:
+            dkey = (DEFAULT_TENANT, cid)
+            if dkey in known:
+                if not os.path.exists(full + ".tenant"):
+                    # common case — registered, no routing intent: one
+                    # existence probe per pass, nothing else to do (a
+                    # sidecar-less external re-write waits until the
+                    # entry is consumed, like subdirectory re-writes)
+                    continue
+                # the root staging area is shared between default-
+                # tenant clients and sidecar-routed external writers.
+                # Ownership check: unchanged bytes (mtime as recorded
+                # at registration) belong to the live entry — a stray
+                # late .tenant sidecar must not move them out from
+                # under the index; changed bytes are a NEW external
+                # submission — evict the stale entry (its payload is
+                # gone from disk) and re-ingest, honoring the sidecar.
+                recorded = self._blob_mtime.get(dkey)
+                try:
+                    current = _stat_identity(full)
+                except OSError:
+                    continue
+                if recorded is None or current == recorded:
+                    try:   # live entry owns the bytes: drop stray sidecar
+                        os.remove(full + ".tenant")
+                    except FileNotFoundError:
+                        pass
+                    continue
+                with self._lock:
+                    self._drop_index_entry(dkey)
+                known.discard(dkey)
+            # peek the tenant BEFORE moving anything: a blob registered
+            # under the NAMED tenant must not have its files moved/
+            # overwritten out from under that entry's version guard —
+            # such a re-submission waits at the root until the
+            # registered one is consumed, like subdirectory re-writes do
+            tenant = self._ext_sidecar_tenant(cid)
+            if not _valid_tenant(tenant):
+                continue   # poisoned sidecar (path separators, ..): never route
+            if (tenant, cid) in known:
                 continue
-            try:
-                blob = np.load(self._path(cid), mmap_mode="r")
-                nbytes = int(blob.nbytes)
-            except Exception:
-                continue   # partial write: next pass gets it
-            try:
-                with open(self._path(cid) + ".w") as f:
-                    weight = float(f.read())
-            except (FileNotFoundError, ValueError):
-                now = time.monotonic()   # real elapsed, not self.clock
-                first = self._ext_seen.setdefault(cid, now)
-                if now - first < self.sidecar_grace_seconds:
-                    continue   # sidecar may still be in flight
-                weight = 1.0
-            self._ext_seen.pop(cid, None)
-            with self._arrival_cv:
-                if cid in self._weights:
-                    continue   # a concurrent write() beat us to it
-                self._weights[cid] = weight
-                self._versions[cid] = self._versions.get(cid, 0) + 1
-                self._arrivals[cid] = self.clock()
-                self.stats.writes += 1
-                self.stats.bytes_written += nbytes * self.replication
-                self._arrival_cv.notify_all()
-            new.append(cid)
+            if tenant != DEFAULT_TENANT and not \
+                    self._ext_move_to_partition(cid, self.spool_dir,
+                                                tenant):
+                continue
+            if self._ext_register(cid, tenant, from_root=True) \
+                    is not None:
+                new.append(cid)
         return new
 
-    def _recover(self) -> Dict[str, float]:
-        """Rebuild the weight index from the spool after a restart."""
-        weights: Dict[str, float] = {}
-        for name in os.listdir(self.spool_dir):
-            if name.endswith(".npy"):
+    def _recover(self) -> Dict[_Key, float]:
+        """Rebuild the weight index from the spool after a restart —
+        root blobs into the default tenant, one subdirectory per other
+        tenant. Blobs still awaiting external ROUTING are left
+        unregistered for ``ingest_external`` / the tailer: a root blob
+        with a ``.tenant`` sidecar naming another tenant (registering
+        it under default would steal it cross-tenant), and anything in
+        a literal ``default/`` subdirectory (its files must move to the
+        root before the default partition's paths resolve)."""
+
+        def scan(directory: str, tenant: str) -> Dict[_Key, float]:
+            weights: Dict[_Key, float] = {}
+            for name in os.listdir(directory):
+                if not name.endswith(".npy") or not \
+                        os.path.isfile(os.path.join(directory, name)):
+                    continue   # a subdirectory named *.npy is not a blob
                 cid = name[: -len(".npy")]
-                wpath = os.path.join(self.spool_dir, name + ".w")
+                wpath = os.path.join(directory, name + ".w")
                 try:
                     with open(wpath) as f:
-                        weights[cid] = float(f.read())
+                        weights[(tenant, cid)] = float(f.read())
                 except (FileNotFoundError, ValueError):
-                    weights[cid] = 1.0
-        return weights
+                    weights[(tenant, cid)] = 1.0
+            return weights
+
+        recovered = scan(self.spool_dir, DEFAULT_TENANT)
+        for cid in [c for _, c in recovered]:
+            if self._ext_sidecar_tenant(cid) != DEFAULT_TENANT:
+                recovered.pop((DEFAULT_TENANT, cid))   # pending routing
+        for name in os.listdir(self.spool_dir):
+            full = os.path.join(self.spool_dir, name)
+            if os.path.isdir(full) and name != DEFAULT_TENANT:
+                recovered.update(scan(full, name))
+        return recovered
 
 
 class _InotifyWatch:
     """Minimal ctypes inotify(7) binding: block until something lands in
-    a directory. Raises ``OSError`` where inotify is unavailable (non-
-    Linux, exhausted watch quota) — callers fall back to polling."""
+    one of a set of directories. Raises ``OSError`` where inotify is
+    unavailable (non-Linux, exhausted watch quota) — callers fall back
+    to polling."""
 
     # no IN_CREATE: waking on creation would pass over files whose
     # contents (and sidecars) are still being written
@@ -567,14 +959,29 @@ class _InotifyWatch:
         self._fd = self._libc.inotify_init()
         if self._fd < 0:
             raise OSError(ctypes.get_errno(), "inotify_init failed")
+        self._watched: set = set()
+        try:
+            self.add(path)
+        except OSError:
+            os.close(self._fd)
+            raise
+
+    def add(self, path: str) -> None:
+        """Watch one more directory (idempotent). Tenant subdirectories
+        created after the tailer started are added this way."""
+        import ctypes
+
+        if path in self._watched:
+            return
         mask = self._IN_CLOSE_WRITE | self._IN_MOVED_TO
         wd = self._libc.inotify_add_watch(
             self._fd, os.fsencode(path), mask
         )
         if wd < 0:
-            err = ctypes.get_errno()
-            os.close(self._fd)
-            raise OSError(err, f"inotify_add_watch({path}) failed")
+            raise OSError(
+                ctypes.get_errno(), f"inotify_add_watch({path}) failed"
+            )
+        self._watched.add(path)
 
     def wait(self, timeout: float) -> bool:
         """True if at least one filesystem event fired within ``timeout``
@@ -601,13 +1008,18 @@ class SpoolTailer:
     """Arrival-driven tailing of a DISK spool written by external
     processes: a daemon thread registers foreign blobs into the store
     index the moment they land, so ``iter_arrivals`` / the monitor see
-    them like any ``write()``.
+    them like any ``write()``. Blobs are routed to their tenant
+    partition by subdirectory (``spool_dir/<tenant>/``) or by a
+    ``.tenant`` sidecar at the spool root (see
+    ``UpdateStore.ingest_external``).
 
     Uses inotify (``IN_CLOSE_WRITE`` / ``IN_MOVED_TO``) when the
     platform provides it — arrivals wake the tailer immediately instead
     of on the next poll tick — and degrades to mtime-free directory
     polling at ``poll_interval`` elsewhere; ``event_driven`` reports
-    which mode is live. Use as a context manager around a round::
+    which mode is live. Tenant subdirectories are discovered (and
+    watched) as they appear, at poll cadence. Use as a context manager
+    around a round::
 
         with SpoolTailer(store) as tailer:
             service.aggregate(from_store=True, async_round=True)
@@ -623,12 +1035,26 @@ class SpoolTailer:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
+    def _watch_tenant_dirs(self) -> None:
+        """Add inotify watches for tenant subdirectories created since
+        the last pass (no-op under the polling fallback)."""
+        if self._watch is None:
+            return
+        for name in os.listdir(self.store.spool_dir):
+            full = os.path.join(self.store.spool_dir, name)
+            if os.path.isdir(full):
+                try:
+                    self._watch.add(full)
+                except OSError:
+                    pass   # quota/teardown race: polling still covers it
+
     def start(self) -> "SpoolTailer":
         try:
             self._watch = _InotifyWatch(self.store.spool_dir)
             self.event_driven = True
         except Exception:
             self._watch = None   # polling fallback
+        self._watch_tenant_dirs()
         self.store.ingest_external()   # catch anything already spooled
         self._thread = threading.Thread(
             target=self._run, name="spool-tailer", daemon=True
@@ -644,6 +1070,7 @@ class SpoolTailer:
                 self._stop.wait(self.poll_interval)
             if self._stop.is_set():
                 return
+            self._watch_tenant_dirs()
             self.store.ingest_external()
 
     def stop(self) -> None:

@@ -22,6 +22,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = [
     "README.md",
     "docs/ARCHITECTURE.md",
+    "docs/MULTITENANCY.md",
+    "docs/TUNING.md",
     "benchmarks/README.md",
 ]
 
@@ -101,6 +103,21 @@ def test_doc_flags_exist_in_target_scripts(doc):
                 unknown.append((os.path.basename(src_path), flag))
     assert not unknown, f"{doc}: flags not defined by their script: " \
                         f"{unknown}"
+
+
+def test_operator_docs_cover_their_subjects():
+    """The operator docs must keep documenting the surfaces they exist
+    for — a rename in the code without a doc update fails here."""
+    multitenancy = _read("docs/MULTITENANCY.md")
+    for term in ("tenant=", "SpoolTailer", ".tenant", "ingest_external",
+                 "save_controller", "--concurrent-tenants",
+                 "BENCH_multitenant.json"):
+        assert term in multitenancy, f"MULTITENANCY.md lost {term!r}"
+    tuning = _read("docs/TUNING.md")
+    for term in ("cost_bias", "staleness_discount", 'async_round="auto"',
+                 "threshold_frac", "monitor_timeout", "phase_seconds",
+                 "RoundReport", "drift"):
+        assert term in tuning, f"TUNING.md lost {term!r}"
 
 
 def test_readme_documents_tier1_and_bench_artifacts():
