@@ -1,0 +1,303 @@
+"""Concurrent round execution: K tenants' rounds at once on ONE service.
+
+PR 4 made interleaved open rounds safe on one shared store, but one
+``AggregationService`` still executed one round at a time — concurrent
+tenants needed one service per tenant. The RoundScheduler closes that
+gap: per-tenant round workers run every tenant's round NOW, overlapping
+their monitor waits and host staging while a bounded device-execution
+semaphore (default 1) serializes only what the hardware requires, and
+the engines' single-flight compile cache lets K racing tenants pay ONE
+cold compile.
+
+Three deployments over identical per-tenant workloads (every tenant's
+writer spreads its n arrivals over the straggler window; rounds are
+async with a full-inclusion threshold):
+
+  * serialized  — ONE service, rounds one at a time (the pre-scheduler
+                  behavior): each tenant's round runs after the
+                  previous tenant's closed, so K straggler windows are
+                  paid end to end.
+  * concurrent  — ONE service + RoundScheduler: all K rounds at once;
+                  the K straggler windows overlap into ~one.
+  * separate    — K services (one per tenant, the PR-4 workaround),
+                  rounds in K threads: walls overlap too, but every
+                  service pays its own cold compile and its own engine
+                  state.
+
+Reported per mode: total round wall-clock, per-round inclusion, cold
+compiles, peak host memory (tracemalloc) — and EQUIVALENCE: every
+tenant's fused vector must match the dense FedAvg formula on that
+tenant's updates alone, and the shared-service (concurrent) vectors
+must match the isolated-service (separate) ones.
+
+Acceptance (ISSUE 5): concurrent total wall < serialized total wall,
+inclusion 1.0 everywhere, all modes formula-equivalent, concurrent
+cold compiles <= the number of DISTINCT shape buckets (not <= K x
+buckets).
+
+Emits BENCH_concurrent.json.
+
+Usage:
+  python benchmarks/concurrent_service.py --quick   # CI smoke (~30 s)
+  python benchmarks/concurrent_service.py           # full   (~2 min)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+import tracemalloc
+
+import numpy as np
+
+from repro.core import AggregationService, RoundScheduler, UpdateStore
+
+
+def make_tenant_clients(k: int, n: int, p: int, seed: int = 1):
+    """Distinct per-tenant updates/weights, so a cross-tenant steal or
+    a crossed accumulator cannot cancel out numerically."""
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=(k, n, p)).astype(np.float32)
+    w = rng.uniform(1, 7, size=(k, n)).astype(np.float32)
+    return u, w
+
+
+def fedavg_formula(u, w):
+    return np.einsum("np,n->p", u, w) / (w.sum() + 1e-6)
+
+
+def spread_writer(store, tenant, u, w, spread):
+    """Write the tenant's n clients spread evenly over ``spread``
+    seconds (one daemon thread; the round is open while they land)."""
+    n = u.shape[0]
+
+    def run():
+        t0 = time.perf_counter()
+        for i in range(n):
+            lag = (i + 1) * spread / n - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            store.write(f"c{i:04d}", u[i], weight=float(w[i]),
+                        tenant=tenant)
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    return t
+
+
+def _mk_service(store, n, p, timeout):
+    return AggregationService(
+        fusion="fedavg", local_strategy="jnp", store=store,
+        threshold_frac=1.0, monitor_timeout=timeout,
+        stream_chunk_bytes=max(p * 4 * max(n // 4, 1), 1 << 20),
+    )
+
+
+def _check_round(rep, fused, u_k, w_k, n, state):
+    state["inclusions"].append(rep.n_clients / n)
+    if rep.n_clients > n or (rep.n_clients == n and not np.allclose(
+        np.asarray(fused), fedavg_formula(u_k, w_k),
+        rtol=1e-4, atol=1e-5,
+    )):
+        state["equivalent"] = False   # a steal or a lost update
+
+
+def run_serialized(tenants, u, w, p, spread, timeout, rounds):
+    """ONE service, one round at a time — each tenant's writer starts
+    with its OWN round, so the K straggler windows are paid end to end
+    (the pre-scheduler deployment's cost)."""
+    n = u.shape[1]
+    store = UpdateStore()
+    svc = _mk_service(store, n, p, timeout)
+    state = {"inclusions": [], "equivalent": True, "fused": {}}
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for k, t in enumerate(tenants):
+            wt = spread_writer(store, t, u[k], w[k], spread)
+            fused, rep = svc.aggregate(
+                from_store=True, expected_clients=n, async_round=True,
+                tenant=t,
+            )
+            wt.join()
+            _check_round(rep, fused, u[k], w[k], n, state)
+            state["fused"][t] = np.asarray(fused)
+            store.clear(tenant=t)
+    state["wall_seconds"] = time.perf_counter() - t0
+    state["cold_compiles"] = svc.local.cache.misses
+    return state
+
+
+def run_concurrent(tenants, u, w, p, spread, timeout, rounds):
+    """ONE service + RoundScheduler: every tenant's round executes NOW;
+    straggler windows overlap, device folds share the semaphore, and
+    racing tenants share one single-flight compile."""
+    n = u.shape[1]
+    store = UpdateStore()
+    svc = _mk_service(store, n, p, timeout)
+    state = {"inclusions": [], "equivalent": True, "fused": {}}
+    t0 = time.perf_counter()
+    with RoundScheduler(svc) as sched:
+        for _ in range(rounds):
+            writers = [
+                spread_writer(store, t, u[k], w[k], spread)
+                for k, t in enumerate(tenants)
+            ]
+            results = sched.run_round(
+                tenants, from_store=True, expected_clients=n,
+                async_round=True,
+            )
+            for wt in writers:
+                wt.join()
+            for k, t in enumerate(tenants):
+                fused, rep = results[t]
+                _check_round(rep, fused, u[k], w[k], n, state)
+                state["fused"][t] = np.asarray(fused)
+                store.clear(tenant=t)
+    state["wall_seconds"] = time.perf_counter() - t0
+    state["cold_compiles"] = svc.local.cache.misses
+    return state
+
+
+def run_separate(tenants, u, w, p, spread, timeout, rounds):
+    """K isolated services (one per tenant — the PR-4 workaround for
+    concurrent execution), rounds in K threads."""
+    n = u.shape[1]
+    stores = {t: UpdateStore() for t in tenants}
+    services = {t: _mk_service(stores[t], n, p, timeout) for t in tenants}
+    state = {"inclusions": [], "equivalent": True, "fused": {}}
+    lock = threading.Lock()
+
+    def one_tenant(k, t):
+        for _ in range(rounds):
+            wt = spread_writer(stores[t], t, u[k], w[k], spread)
+            fused, rep = services[t].aggregate(
+                from_store=True, expected_clients=n, async_round=True,
+                tenant=t,
+            )
+            wt.join()
+            with lock:
+                _check_round(rep, fused, u[k], w[k], n, state)
+                state["fused"][t] = np.asarray(fused)
+            stores[t].clear(tenant=t)
+
+    t0 = time.perf_counter()
+    threads = [
+        threading.Thread(target=one_tenant, args=(k, t), daemon=True)
+        for k, t in enumerate(tenants)
+    ]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    state["wall_seconds"] = time.perf_counter() - t0
+    state["cold_compiles"] = sum(
+        services[t].local.cache.misses for t in tenants
+    )
+    return state
+
+
+def bench(k, n, p, spread, timeout, rounds, seed):
+    tenants = [f"app{i}" for i in range(k)]
+    u, w = make_tenant_clients(k, n, p, seed)
+    # one shape bucket per distinct (n, p) pair — here all tenants share
+    # one, which is exactly what the <= buckets acceptance pins down
+    buckets = len({(n, p)})
+    runners = {
+        "serialized": run_serialized,
+        "concurrent": run_concurrent,
+        "separate": run_separate,
+    }
+    results = {}
+    tracemalloc.start()
+    for mode, fn in runners.items():
+        tracemalloc.reset_peak()
+        st = fn(tenants, u, w, p, spread, timeout, rounds)
+        _, peak = tracemalloc.get_traced_memory()
+        results[mode] = {
+            "total_wall_seconds": st["wall_seconds"],
+            "mean_inclusion": float(np.mean(st["inclusions"])),
+            "cold_compiles": int(st["cold_compiles"]),
+            "equivalent": bool(st["equivalent"]),
+            "peak_host_bytes": int(peak),
+        }
+        results[mode]["_fused"] = st["fused"]
+        r = results[mode]
+        print(f"{mode:>10}: wall {r['total_wall_seconds']:.3f}s "
+              f"inclusion {r['mean_inclusion']:.3f} "
+              f"cold_compiles {r['cold_compiles']} "
+              f"peak_mem {r['peak_host_bytes'] / 1e6:.1f}MB "
+              f"equivalent={r['equivalent']}")
+    tracemalloc.stop()
+    # shared-vs-isolated: the concurrent (shared service) vectors must
+    # match the separate-services (isolated) ones tenant by tenant
+    shared_vs_isolated = all(
+        np.allclose(results["concurrent"]["_fused"][t],
+                    results["separate"]["_fused"][t],
+                    rtol=1e-4, atol=1e-5)
+        for t in tenants
+    )
+    for mode in results:
+        del results[mode]["_fused"]
+    con, ser = results["concurrent"], results["serialized"]
+    speedup = ser["total_wall_seconds"] / max(
+        con["total_wall_seconds"], 1e-9
+    )
+    acceptance = (
+        con["total_wall_seconds"] < ser["total_wall_seconds"]
+        and all(results[m]["mean_inclusion"] >= 1.0 - 1e-9
+                for m in results)
+        and all(results[m]["equivalent"] for m in results)
+        and shared_vs_isolated
+        and con["cold_compiles"] <= buckets
+    )
+    print(f"concurrent beats serialized {speedup:.2f}x on one service "
+          f"({con['cold_compiles']} cold compiles for {k} tenants, "
+          f"{buckets} shape bucket(s)); shared==isolated: "
+          f"{shared_vs_isolated}; acceptance={acceptance}")
+    return results, {
+        "speedup_vs_serialized": speedup,
+        "shape_buckets": buckets,
+        "shared_vs_isolated_equivalent": bool(shared_vs_isolated),
+        "acceptance": bool(acceptance),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--n", type=int, default=48)
+    ap.add_argument("--p", type=int, default=100_000)
+    ap.add_argument("--spread", type=float, default=1.0)
+    ap.add_argument("--timeout", type=float, default=10.0)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--out", default="BENCH_concurrent.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.n, args.p = 12, 20_000
+        args.spread, args.timeout = 0.5, 6.0
+        args.rounds = 1
+    results, summary = bench(
+        args.tenants, args.n, args.p, args.spread, args.timeout,
+        args.rounds, args.seed,
+    )
+    payload = {
+        "benchmark": "concurrent_service",
+        "config": {
+            "tenants": args.tenants, "n_clients_per_tenant": args.n,
+            "p": args.p, "spread_seconds": args.spread,
+            "timeout_seconds": args.timeout, "rounds": args.rounds,
+            "quick": args.quick,
+        },
+        "results": results,
+        **summary,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

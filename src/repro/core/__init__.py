@@ -12,9 +12,11 @@ Layers:
   monitor.py     threshold/timeout straggler gate (pluggable policy,
                  per-tenant counts)
   adaptive.py    learned arrival curves -> per-tenant close policies
-                 (+ cross-tenant prior, drift-widened deadlines)
+                 (+ cross-tenant prior, drift-widened deadlines,
+                 drift-saturation re-warmup)
   secure.py      pairwise additive-mask secure aggregation
   service.py     AggregationService facade (seamless transition)
+                 + RoundScheduler (concurrent per-tenant round workers)
 """
 from repro.core.adaptive import AdaptiveController, ArrivalModel, ClosePolicy
 from repro.core.distributed import DistributedEngine
@@ -23,8 +25,19 @@ from repro.core.local import LocalEngine
 from repro.core.monitor import Monitor, MonitorResult
 from repro.core.planner import Plan, Planner
 from repro.core.secure import SecureMasking
-from repro.core.service import AggregationService, RoundReport
-from repro.core.store import DEFAULT_TENANT, SpoolTailer, UpdateStore
+from repro.core.service import (
+    AggregationService,
+    RoundReport,
+    RoundScheduler,
+)
+from repro.core.store import (
+    DEFAULT_TENANT,
+    QuotaExceededError,
+    SpoolTailer,
+    StoreStats,
+    TenantQuota,
+    UpdateStore,
+)
 from repro.core.workload import (
     Workload,
     WorkloadClass,
@@ -45,10 +58,14 @@ __all__ = [
     "MonitorResult",
     "Plan",
     "Planner",
+    "QuotaExceededError",
     "REGISTRY",
     "RoundReport",
+    "RoundScheduler",
     "SecureMasking",
     "SpoolTailer",
+    "StoreStats",
+    "TenantQuota",
     "UpdateStore",
     "Workload",
     "WorkloadClass",

@@ -42,11 +42,23 @@ wait), 1 optimizes update inclusion alone (efficiency — wait for every
 client the curve says will come). 0.5 balances them. The controller
 never waits past the static timeout: the learned deadline is capped, so
 a fleet whose behavior shifts degrades to the static gate, not worse.
+A shift the EW window cannot catch at all — drift saturated for
+``rewarm_patience`` consecutive rounds — triggers RE-WARMUP: one forced
+static round (``ClosePolicy.source == "rewarm"``) with the tenant's
+curve reset, so the gate re-learns the new regime instead of widening a
+stale deadline forever.
+
+The controller is THREAD-SAFE: one instance serves every tenant's
+concurrent rounds (the RoundScheduler's workers call ``policy`` /
+``observe_round`` from per-tenant threads), so all public entry points
+serialize on an internal lock — model blends and policy derivation are
+numpy state mutations that must not interleave.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -68,7 +80,10 @@ class ClosePolicy:
     # "static" — the configured threshold_frac/timeout gate;
     # "learned" — derived from this tenant's own arrival curve;
     # "prior"  — derived from the cross-tenant prior curve (cold-start
-    #            tenant borrowing pooled mass until it has its own)
+    #            tenant borrowing pooled mass until it has its own);
+    # "rewarm" — the static gate FORCED for one round after the
+    #            tenant's drift stayed saturated (the curve was reset
+    #            and re-learns from this round's arrivals)
     source: str = "static"
 
     def __call__(self, count: int, waited: float) -> bool:
@@ -254,6 +269,8 @@ class AdaptiveController:
         deadline_margin: float = 0.25,
         drift_tolerance: float = 0.25,
         drift_gain: float = 4.0,
+        rewarm_drift: float = 0.75,
+        rewarm_patience: int = 3,
     ):
         if not 0 <= cost_bias <= 1:
             raise ValueError("cost_bias must be in [0, 1]")
@@ -270,12 +287,30 @@ class AdaptiveController:
         # deadline widens by drift_gain per unit of excess drift
         self.drift_tolerance = drift_tolerance
         self.drift_gain = drift_gain
+        # re-warmup: drift at or above rewarm_drift for rewarm_patience
+        # CONSECUTIVE rounds means the EW curve is chasing a regime it
+        # cannot catch — widening the deadline forever is strictly worse
+        # than re-learning, so the next policy() forces ONE static-gated
+        # round (source="rewarm") and resets the tenant's curve
+        self.rewarm_drift = rewarm_drift
+        self.rewarm_patience = max(int(rewarm_patience), 1)
         self._models: Dict[str, ArrivalModel] = {}
         self._est_seconds: Dict[str, float] = {}
+        self._drift_sat: Dict[str, int] = {}   # consecutive saturated rounds
+        self._rewarm_pending: set = set()
+        # tenants re-learning after a rewarm reset: they skip the prior
+        # borrow (it may carry the stale regime they just abandoned)
+        # until their fresh curve reaches warmup
+        self._rewarmed: set = set()
         # the cross-tenant prior: every tenant's rounds pool here, and
         # tenants without their own mass borrow it (cold-start transfer)
         self._prior = ArrivalModel(n_quantiles=n_quantiles, ema=ema)
         self._prior_est: Optional[float] = None
+        # one controller serves every tenant's concurrent rounds: model
+        # mutation (numpy EW blends) and policy derivation are not
+        # atomic, so all public entry points serialize here. RLock —
+        # policy() consults state_dict-free internals re-entrantly.
+        self._lock = threading.RLock()
 
     # -- learning ------------------------------------------------------------
     def observe_round(
@@ -293,35 +328,48 @@ class AdaptiveController:
         one dead tenant's fleet must not drag every cold-start tenant's
         borrowed threshold toward zero."""
         offsets = list(offsets)
-        model = self._models.get(tenant)
-        if model is None:
-            model = self._models[tenant] = ArrivalModel(
-                n_quantiles=self.n_quantiles, ema=self.ema
-            )
-        model.observe(offsets, expected)
-        if offsets:
-            self._prior.observe(offsets, expected)
-        if est_seconds is not None:
-            prev = self._est_seconds.get(tenant)
-            self._est_seconds[tenant] = (
-                est_seconds if prev is None
-                else (1 - self.ema) * prev + self.ema * est_seconds
-            )
-            self._prior_est = (
-                est_seconds if self._prior_est is None
-                else (1 - self.ema) * self._prior_est
-                + self.ema * est_seconds
-            )
+        with self._lock:
+            model = self._models.get(tenant)
+            if model is None:
+                model = self._models[tenant] = ArrivalModel(
+                    n_quantiles=self.n_quantiles, ema=self.ema
+                )
+            model.observe(offsets, expected)
+            # drift-saturation bookkeeping for the re-warmup trigger
+            if model.drift is not None and \
+                    model.drift >= self.rewarm_drift:
+                sat = self._drift_sat.get(tenant, 0) + 1
+                self._drift_sat[tenant] = sat
+                if sat >= self.rewarm_patience:
+                    self._rewarm_pending.add(tenant)
+                    self._drift_sat[tenant] = 0
+            else:
+                self._drift_sat[tenant] = 0
+            if offsets:
+                self._prior.observe(offsets, expected)
+            if est_seconds is not None:
+                prev = self._est_seconds.get(tenant)
+                self._est_seconds[tenant] = (
+                    est_seconds if prev is None
+                    else (1 - self.ema) * prev + self.ema * est_seconds
+                )
+                self._prior_est = (
+                    est_seconds if self._prior_est is None
+                    else (1 - self.ema) * self._prior_est
+                    + self.ema * est_seconds
+                )
 
     def model(self, tenant: str) -> Optional[ArrivalModel]:
         """The tenant's own arrival curve (None before its first
         observed round)."""
-        return self._models.get(tenant)
+        with self._lock:
+            return self._models.get(tenant)
 
     def prior_model(self) -> ArrivalModel:
         """The cross-tenant prior curve (pooled over every tenant's
         observed rounds)."""
-        return self._prior
+        with self._lock:
+            return self._prior
 
     # -- policy --------------------------------------------------------------
     def static_policy(self, expected: int) -> ClosePolicy:
@@ -338,22 +386,43 @@ class AdaptiveController:
     def policy(self, tenant: str, expected: int) -> ClosePolicy:
         """The gate for the tenant's next round: its own learned curve
         once warmed up, the cross-tenant prior while cold, the static
-        gate before anything has mass."""
+        gate before anything has mass — and, after the tenant's drift
+        stayed saturated for ``rewarm_patience`` consecutive rounds,
+        ONE forced static round (``source="rewarm"``) with the EW curve
+        reset, so the tenant re-learns the new regime instead of
+        widening a stale deadline forever."""
         if expected <= 0:
             return self.static_policy(1)
-        model = self._models.get(tenant)
-        if model is not None and model.rounds >= self.warmup_rounds:
-            return self._derive(
-                model, expected, self._est_seconds.get(tenant, 0.0),
-                source="learned",
-            )
-        if self._prior.rounds >= self.warmup_rounds:
-            return self._derive(
-                self._prior, expected,
-                self._est_seconds.get(tenant, self._prior_est or 0.0),
-                source="prior",
-            )
-        return self.static_policy(expected)
+        with self._lock:
+            if tenant in self._rewarm_pending:
+                self._rewarm_pending.discard(tenant)
+                # reset the EW curve: the saturated drift said it no
+                # longer describes the fleet. The static round observed
+                # next seeds the fresh model (cold-start borrows are
+                # skipped on purpose — the prior may carry the same
+                # stale regime this tenant just abandoned).
+                self._models[tenant] = ArrivalModel(
+                    n_quantiles=self.n_quantiles, ema=self.ema
+                )
+                self._drift_sat[tenant] = 0
+                self._rewarmed.add(tenant)
+                pol = self.static_policy(expected)
+                return dataclasses.replace(pol, source="rewarm")
+            model = self._models.get(tenant)
+            if model is not None and model.rounds >= self.warmup_rounds:
+                self._rewarmed.discard(tenant)
+                return self._derive(
+                    model, expected, self._est_seconds.get(tenant, 0.0),
+                    source="learned",
+                )
+            if self._prior.rounds >= self.warmup_rounds and \
+                    tenant not in self._rewarmed:
+                return self._derive(
+                    self._prior, expected,
+                    self._est_seconds.get(tenant, self._prior_est or 0.0),
+                    source="prior",
+                )
+            return self.static_policy(expected)
 
     def _derive(
         self, model: ArrivalModel, expected: int, est: float, source: str
@@ -422,30 +491,41 @@ class AdaptiveController:
         ``repro.checkpoint.save_controller_state`` persists this next to
         model checkpoints; ``AggregationService.save_controller`` /
         ``load_controller`` are the service-level hooks."""
-        return {
-            "models": {
-                t: m.state_dict() for t, m in self._models.items()
-            },
-            "est_seconds": dict(self._est_seconds),
-            "prior": self._prior.state_dict(),
-            "prior_est": self._prior_est,
-        }
+        with self._lock:
+            return {
+                "models": {
+                    t: m.state_dict() for t, m in self._models.items()
+                },
+                "est_seconds": dict(self._est_seconds),
+                "prior": self._prior.state_dict(),
+                "prior_est": self._prior_est,
+                "drift_sat": dict(self._drift_sat),
+                "rewarm_pending": sorted(self._rewarm_pending),
+                "rewarmed": sorted(self._rewarmed),
+            }
 
     def load_state_dict(self, state: Dict) -> None:
         """Restore ``state_dict`` output (older checkpoints without a
-        prior section restore with a fresh prior)."""
-        self._models = {
-            t: ArrivalModel.from_state_dict(s)
-            for t, s in state.get("models", {}).items()
-        }
-        self._est_seconds = dict(state.get("est_seconds", {}))
-        prior = state.get("prior")
-        self._prior = (
-            ArrivalModel.from_state_dict(prior) if prior
-            else ArrivalModel(n_quantiles=self.n_quantiles, ema=self.ema)
-        )
-        self._prior_est = state.get("prior_est")
+        prior or re-warmup section restore those parts fresh)."""
+        with self._lock:
+            self._models = {
+                t: ArrivalModel.from_state_dict(s)
+                for t, s in state.get("models", {}).items()
+            }
+            self._est_seconds = dict(state.get("est_seconds", {}))
+            prior = state.get("prior")
+            self._prior = (
+                ArrivalModel.from_state_dict(prior) if prior
+                else ArrivalModel(
+                    n_quantiles=self.n_quantiles, ema=self.ema
+                )
+            )
+            self._prior_est = state.get("prior_est")
+            self._drift_sat = dict(state.get("drift_sat", {}))
+            self._rewarm_pending = set(state.get("rewarm_pending", []))
+            self._rewarmed = set(state.get("rewarmed", []))
 
     def tenants(self) -> List[str]:
         """Tenants with at least one observed round."""
-        return sorted(self._models)
+        with self._lock:
+            return sorted(self._models)

@@ -32,7 +32,9 @@ never the dense (n, P) matrix.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 import time
 from typing import Iterable, Optional, Tuple
 
@@ -74,7 +76,19 @@ class DistributedEngine:
         )
         self._n_param_shards = self.mesh.shape.get(self.param_axis, 1)
         self.cache = CompiledCache(name=f"distributed:{id(self.mesh)}")
-        self.last_compile_seconds = 0.0   # executable build this fuse call
+        # per-THREAD compile accounting — concurrent rounds sharing this
+        # engine each see their own fuse call's compile phase
+        self._tls = threading.local()
+
+    @property
+    def last_compile_seconds(self) -> float:
+        """Compile seconds paid by the CURRENT thread's last fuse call
+        (0.0 on warm rounds); thread-local under concurrent rounds."""
+        return getattr(self._tls, "compile_seconds", 0.0)
+
+    @last_compile_seconds.setter
+    def last_compile_seconds(self, value: float) -> None:
+        self._tls.compile_seconds = value
 
     # -- shape bucketing -----------------------------------------------------
     def _padded_rows(self, n: int, reducible: bool) -> int:
@@ -323,6 +337,7 @@ class DistributedEngine:
         blocks: Iterable[Tuple[np.ndarray, ...]],
         init: Optional[Tuple[np.ndarray, float]] = None,
         chunk_rows: Optional[int] = None,
+        device_sem=None,
     ) -> Tuple[jax.Array, StreamReport]:
         """Per-shard streaming ingest: fold (chunk, P) blocks (e.g. from
         ``UpdateStore.iter_chunks``) through ONE cached shard_map step
@@ -334,7 +349,9 @@ class DistributedEngine:
         staleness scale; carried accumulator in/out via the StreamReport;
         pass the configured ``chunk_rows`` so variable final blocks reuse
         one executable — ``iter_arrivals`` yields client ids, adapt it
-        before streaming here)."""
+        before streaming here; ``device_sem`` bounds concurrent device
+        execution across rounds sharing this engine, and all accumulator
+        state is per-call local so concurrent folds never cross)."""
         if not fusion.reducible:
             raise ValueError(
                 f"{fusion.name} is not reducible — streamed aggregation "
@@ -346,6 +363,8 @@ class DistributedEngine:
         in_w = P(self._cspec())
         acc = P(self.param_axis)
         rep = StreamReport()
+        sem = device_sem if device_sem is not None \
+            else contextlib.nullcontext()
         it = iter(blocks)
         step = wsum = tot = None
         chunk = dim = None
@@ -410,7 +429,11 @@ class DistributedEngine:
                 rep.compile_seconds = compile_s
                 self.last_compile_seconds = compile_s
             t0 = time.perf_counter()
-            wsum, tot = step(u_dev, w_dev, wsum, tot)
+            with sem:
+                wsum, tot = step(u_dev, w_dev, wsum, tot)
+                if device_sem is not None:
+                    # async dispatch must not escape the execution bound
+                    jax.block_until_ready((wsum, tot))
             rep.compute_seconds += time.perf_counter() - t0
             rep.n_rows += rows
             rep.n_blocks += 1
@@ -424,7 +447,8 @@ class DistributedEngine:
         t0 = time.perf_counter()
         rep.acc_wsum = np.asarray(wsum)[:dim]
         rep.acc_tot = float(np.asarray(tot))
-        fused = jax.block_until_ready(fusion.combine(wsum, tot)[:dim])
+        with sem:
+            fused = jax.block_until_ready(fusion.combine(wsum, tot)[:dim])
         rep.compute_seconds += time.perf_counter() - t0
         return fused, rep
 

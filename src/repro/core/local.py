@@ -26,7 +26,9 @@ FedAdam carry python-side server state that must advance every round.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 import time
 from typing import Iterable, Optional, Tuple
 
@@ -90,10 +92,35 @@ class LocalEngine:
 
     def __post_init__(self):
         self.cache = CompiledCache(name=f"local:{self.strategy}")
-        self.last_compile_seconds = 0.0
+        # per-THREAD compile accounting: concurrent tenants' rounds share
+        # this engine, and one round's warm fold must not read another
+        # round's cold compile time (or vice versa)
+        self._tls = threading.local()
+
+    @property
+    def last_compile_seconds(self) -> float:
+        """Compile seconds paid by the CURRENT thread's last fuse call
+        (0.0 on warm rounds). Thread-local, so concurrent rounds on a
+        shared engine each see their own compile phase."""
+        return getattr(self._tls, "compile_seconds", 0.0)
+
+    @last_compile_seconds.setter
+    def last_compile_seconds(self, value: float) -> None:
+        self._tls.compile_seconds = value
 
     # -- public --------------------------------------------------------------
-    def fuse(self, fusion: FusionAlgorithm, updates, weights) -> jnp.ndarray:
+    def fuse(
+        self, fusion: FusionAlgorithm, updates, weights, device_sem=None,
+    ) -> jnp.ndarray:
+        """Dense fuse. ``device_sem`` (optional semaphore) bounds
+        concurrent device execution like ``fuse_stream``'s. On the
+        REDUCIBLE paths (cached executables) it is held only around
+        executable invocation — a cold compile builds outside it, so
+        one tenant's first-bucket compile never stalls other tenants'
+        folds. The pallas order-statistic and fallback paths compile
+        lazily inside their first call, so a cold round there holds
+        the semaphore through its compile (they have no AOT cache to
+        warm separately)."""
         updates = jnp.asarray(updates)
         if weights is None:
             weights = jnp.ones((updates.shape[0],), jnp.float32)
@@ -101,6 +128,8 @@ class LocalEngine:
         n, P = updates.shape
         batch_bytes = updates.dtype.itemsize * P
         self.last_compile_seconds = 0.0
+        sem = device_sem if device_sem is not None \
+            else contextlib.nullcontext()
 
         if self.memory_cap_bytes is not None:
             max_rows = max(int(self.memory_cap_bytes // max(batch_bytes, 1)), 1)
@@ -111,16 +140,36 @@ class LocalEngine:
                         f"the {self.memory_cap_bytes} B cap and the fusion "
                         "is not streamable — classify as DISTRIBUTED"
                     )
-                return self._streamed(fusion, updates, weights, max_rows)
+                return self._streamed(fusion, updates, weights, max_rows,
+                                      device_sem)
 
         if fusion.reducible:
-            return self._fuse_reducible_dense(fusion, updates, weights)
+            return self._fuse_reducible_dense(fusion, updates, weights,
+                                              device_sem)
         if self.strategy == "pallas" and fusion.name == "coordmedian":
-            return coordmedian_pallas(updates, interpret=self.interpret)
+            with sem:
+                return self._bounded(
+                    coordmedian_pallas(updates, interpret=self.interpret),
+                    device_sem,
+                )
         if self.strategy == "pallas" and fusion.name == "trimmedmean":
             trim = int(n * fusion.beta)
-            return trimmedmean_pallas(updates, trim, interpret=self.interpret)
-        return fusion.fuse(updates, weights)
+            with sem:
+                return self._bounded(
+                    trimmedmean_pallas(updates, trim,
+                                       interpret=self.interpret),
+                    device_sem,
+                )
+        with sem:
+            return self._bounded(fusion.fuse(updates, weights), device_sem)
+
+    @staticmethod
+    def _bounded(out, device_sem):
+        """Wait for ``out`` while a device semaphore is installed —
+        async dispatch would otherwise escape the execution bound."""
+        if device_sem is not None:
+            jax.block_until_ready(out)
+        return out
 
     def fuse_stream(
         self,
@@ -128,6 +177,7 @@ class LocalEngine:
         blocks: Iterable[Tuple[np.ndarray, ...]],
         init: Optional[Tuple[np.ndarray, float]] = None,
         chunk_rows: Optional[int] = None,
+        device_sem=None,
     ) -> Tuple[jnp.ndarray, StreamReport]:
         """Fuse a reducible fusion from an iterator of (chunk, P) blocks
         (e.g. ``UpdateStore.iter_chunks``; ``iter_arrivals`` yields client
@@ -147,13 +197,26 @@ class LocalEngine:
         ``init`` seeds the accumulator with a previous round's
         (wsum, tot) — the async carry-over; the final pre-combine
         accumulator is returned on the report (``acc_wsum``/``acc_tot``).
-        Returns (fused, StreamReport)."""
+        ``device_sem`` (optional semaphore / context manager) bounds
+        concurrent DEVICE execution when several rounds stream through
+        one engine at once: each block's step and the final combine
+        acquire it, while ingest stalls (the straggler wait) stay
+        outside — so concurrent tenants overlap their waits but the
+        hardware only runs the configured number of folds at a time.
+        Returns (fused, StreamReport).
+
+        All accumulator state (``wsum``/``tot``/``step``) is per-call
+        local: concurrent ``fuse_stream`` calls on one shared engine
+        never cross their folds (only the compile cache is shared, and
+        it is single-flight per key)."""
         if not fusion.reducible:
             raise ValueError(
                 f"{fusion.name} is not reducible — streamed aggregation "
                 "needs a weighted-sum decomposition"
             )
         rep = StreamReport()
+        sem = device_sem if device_sem is not None \
+            else contextlib.nullcontext()
         it = iter(blocks)
         step = wsum = tot = None
         chunk = dim = None
@@ -196,7 +259,13 @@ class LocalEngine:
             if rows < chunk:
                 w[rows:] = 0.0         # effective_weights may remap pads
             t0 = time.perf_counter()
-            wsum, tot = step(block, w, wsum, tot)
+            with sem:
+                wsum, tot = step(block, w, wsum, tot)
+                if device_sem is not None:
+                    # dispatch is async: holding the semaphore only
+                    # bounds execution if we wait for it (single-tenant
+                    # rounds skip the sync and keep the pipeline deep)
+                    jax.block_until_ready((wsum, tot))
             rep.compute_seconds += time.perf_counter() - t0
             rep.n_rows += rows
             rep.n_blocks += 1
@@ -208,7 +277,8 @@ class LocalEngine:
         t0 = time.perf_counter()
         rep.acc_wsum = np.asarray(wsum)
         rep.acc_tot = float(tot)
-        fused = jax.block_until_ready(fusion.combine(wsum, tot))
+        with sem:
+            fused = jax.block_until_ready(fusion.combine(wsum, tot))
         rep.compute_seconds += time.perf_counter() - t0
         return fused, rep
 
@@ -273,11 +343,13 @@ class LocalEngine:
 
         return partial
 
-    def _fuse_reducible_dense(self, fusion, updates, weights):
+    def _fuse_reducible_dense(self, fusion, updates, weights,
+                              device_sem=None):
         n, P = updates.shape
         B = bucket_rows(n)
         key = self._dense_key(fusion, n, P, updates.dtype)
         partial = self._partial_fn(fusion)
+        # compile OUTSIDE the device semaphore (single-flight per key)
         fn, compile_s = self.cache.get(
             key, lambda: partial,
             jax.ShapeDtypeStruct((B, P), updates.dtype),
@@ -287,8 +359,11 @@ class LocalEngine:
         if B != n:   # zero-weight rows: no contribution to any reducible op
             updates = jnp.pad(updates, ((0, B - n), (0, 0)))
             weights = jnp.pad(weights, (0, B - n))
-        wsum, tot = fn(updates, weights)
-        return fusion.combine(wsum, tot)
+        sem = device_sem if device_sem is not None \
+            else contextlib.nullcontext()
+        with sem:
+            wsum, tot = fn(updates, weights)
+            return self._bounded(fusion.combine(wsum, tot), device_sem)
 
     def _stream_step(self, fusion, chunk, P, dtype):
         """One compiled accumulate step: (block, w, wsum, tot) -> updated
@@ -311,7 +386,8 @@ class LocalEngine:
             jax.ShapeDtypeStruct((), jnp.float32),
         )
 
-    def _streamed(self, fusion, updates, weights, max_rows) -> jnp.ndarray:
+    def _streamed(self, fusion, updates, weights, max_rows,
+                  device_sem=None) -> jnp.ndarray:
         """Memory-capped dense input: ONE scanned executable over fixed
         (max_rows, P) client chunks — bounded resident set, no Python loop
         of per-chunk jit dispatches (the seed behavior)."""
@@ -344,7 +420,11 @@ class LocalEngine:
         if padded_n != n:
             updates = jnp.pad(updates, ((0, padded_n - n), (0, 0)))
             weights = jnp.pad(weights, (0, padded_n - n))
-        wsum, tot = fn(
-            updates.reshape(k, max_rows, P), weights.reshape(k, max_rows)
-        )
-        return fusion.combine(wsum, tot)
+        sem = device_sem if device_sem is not None \
+            else contextlib.nullcontext()
+        with sem:
+            wsum, tot = fn(
+                updates.reshape(k, max_rows, P),
+                weights.reshape(k, max_rows),
+            )
+            return self._bounded(fusion.combine(wsum, tot), device_sem)

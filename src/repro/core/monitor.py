@@ -40,7 +40,15 @@ class Monitor:
     partition, so concurrent tenants' monitors never gate on each
     other's arrivals (``None``: whole spool, the single-tenant
     behavior). ``clock`` / ``sleep`` are injectable for deterministic
-    tests."""
+    tests.
+
+    Concurrent-round note: each round owns its own Monitor instance
+    (nothing here is shared), and N tenants' monitors may block in
+    ``wait()`` simultaneously — the store's arrival condition is
+    spool-global, so any tenant's write wakes every waiter, each
+    re-checks its OWN tenant's O(1) count, and non-owners go back to
+    sleep. Spurious wakes cost one counter read; arrivals are never
+    missed."""
 
     def __init__(
         self,

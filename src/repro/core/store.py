@@ -51,7 +51,15 @@ by dropping a ``<cid>.npy.tenant`` sidecar next to a root-level blob
 (the tailer then moves the files into the named partition).
 
 Ingest-time accounting mirrors the paper's Fig. 12 'average write time':
-bytes / per-datanode bandwidth with ``replication`` copies.
+bytes / per-datanode bandwidth with ``replication`` copies — kept both
+spool-globally (``stats``, the legacy view) and PER TENANT
+(``stats_for(tenant)``: writes, bytes, reads, evictions). Tenants can
+carry a capacity quota (``set_quota`` — update-count / byte budgets
+with a reject-or-evict policy, :class:`TenantQuota`) so one noisy
+application cannot starve the rest of a shared spool; evictions bump
+the victim's write-version first, so in-flight streaming reads and
+closing rounds skip superseded entries instead of folding
+half-unlinked bytes.
 """
 from __future__ import annotations
 
@@ -99,6 +107,47 @@ class StoreStats:
     reads: int = 0
     bytes_read: int = 0
     peak_block_bytes: int = 0       # largest single ingest block staged
+    evictions: int = 0              # quota / re-submission evictions
+
+
+class QuotaExceededError(RuntimeError):
+    """A write would exceed its tenant's capacity quota under the
+    ``reject`` policy (or no eviction could make room under ``evict``:
+    the update alone is bigger than the tenant's byte budget)."""
+
+
+@dataclasses.dataclass
+class TenantQuota:
+    """Per-tenant capacity budget — the resource-awareness knob that
+    keeps one noisy tenant from starving the rest of a shared spool.
+
+    ``max_updates`` / ``max_bytes`` bound the tenant's resident
+    partition (logical stored bytes, before replication); ``None``
+    leaves that dimension unbounded. ``policy``:
+
+      * ``"reject"`` — an over-budget ``write`` raises
+        :class:`QuotaExceededError`; an over-budget external blob stays
+        unregistered on disk until capacity frees.
+      * ``"evict"``  — the tenant's OLDEST resident updates (by arrival
+        time) are evicted to make room; evictions bump the victims'
+        write-version so in-flight folds and closing rounds skip them
+        (never a half-unlinked fold), and count into the tenant's
+        ``StoreStats.evictions``.
+
+    Enforcement is exact while a tenant's writes are serialized (one
+    writer, or the RoundScheduler's per-tenant worker); concurrent
+    writers to ONE tenant can overshoot by the writes in flight."""
+
+    max_updates: Optional[int] = None
+    max_bytes: Optional[int] = None
+    policy: str = "reject"
+
+    def __post_init__(self):
+        if self.policy not in ("reject", "evict"):
+            raise ValueError(
+                f"quota policy must be 'reject' or 'evict', "
+                f"got {self.policy!r}"
+            )
 
 
 class UpdateStore:
@@ -160,6 +209,13 @@ class UpdateStore:
         # per-tenant entry count — the monitor's per-wake poll reads
         # this, so it must be O(1), not a scan of the whole index
         self._counts: Dict[str, int] = {}
+        # per-key logical stored bytes + per-tenant running total —
+        # what TenantQuota.max_bytes budgets against
+        self._nbytes: Dict[_Key, int] = {}
+        self._tenant_bytes: Dict[str, int] = {}
+        self._quotas: Dict[str, TenantQuota] = {}
+        # per-tenant accounting next to the legacy spool-global stats
+        self._tenant_stats: Dict[str, StoreStats] = {}
         # tenant subdirectories already created (write() hot path must
         # not re-stat the directory on every update)
         self._made_dirs: set = set()
@@ -190,6 +246,174 @@ class UpdateStore:
                         )
                     except OSError:
                         pass
+            for t, cid in recovered:
+                # byte accounting survives restarts too, or a recovered
+                # partition would look empty to its tenant's quota
+                try:
+                    raw = int(np.load(
+                        self._path(cid, t), mmap_mode="r"
+                    ).nbytes)
+                except Exception:
+                    raw = 0
+                self._nbytes[(t, cid)] = raw
+                self._tenant_bytes[t] = self._tenant_bytes.get(t, 0) + raw
+
+    # -- per-tenant accounting / quotas --------------------------------------
+    def _tstats(self, tenant: str) -> StoreStats:
+        """The tenant's live stats record (created on first touch).
+        Caller holds ``self._lock``."""
+        st = self._tenant_stats.get(tenant)
+        if st is None:
+            st = self._tenant_stats[tenant] = StoreStats()
+        return st
+
+    def stats_for(self, tenant: Optional[str] = None) -> StoreStats:
+        """Snapshot of one tenant's accounting (writes / bytes / reads /
+        evictions), or of the legacy spool-global aggregate with
+        ``tenant=None`` — the aggregate keeps counting everything, so
+        pre-tenant dashboards reading ``store.stats`` see no change."""
+        with self._lock:
+            src = self.stats if tenant is None \
+                else self._tenant_stats.get(tenant, StoreStats())
+            return dataclasses.replace(src)
+
+    def set_quota(
+        self,
+        tenant: str,
+        max_updates: Optional[int] = None,
+        max_bytes: Optional[int] = None,
+        policy: str = "reject",
+    ) -> None:
+        """Install (or, with both bounds ``None``, remove) ``tenant``'s
+        capacity quota — see :class:`TenantQuota` for semantics."""
+        if not _valid_tenant(tenant):
+            raise ValueError(f"invalid tenant name {tenant!r}")
+        with self._lock:
+            if max_updates is None and max_bytes is None:
+                self._quotas.pop(tenant, None)
+            else:
+                self._quotas[tenant] = TenantQuota(
+                    max_updates=max_updates, max_bytes=max_bytes,
+                    policy=policy,
+                )
+
+    def quota(self, tenant: str) -> Optional[TenantQuota]:
+        with self._lock:
+            q = self._quotas.get(tenant)
+            return dataclasses.replace(q) if q is not None else None
+
+    def tenant_bytes(self, tenant: str) -> int:
+        """Logical resident bytes in ``tenant``'s partition (what
+        ``TenantQuota.max_bytes`` budgets against)."""
+        with self._lock:
+            return self._tenant_bytes.get(tenant, 0)
+
+    def _evict_locked(self, key: _Key) -> None:
+        """Evict one resident update (quota pressure or external
+        re-submission). Bumps the key's write-version FIRST so every
+        in-flight version-checked consumer — a closing round's
+        ``remove``, a streaming ``_load_block`` read — sees the entry
+        as superseded and skips it instead of folding half-unlinked
+        bytes or unlinking a successor's blob. Caller holds
+        ``self._lock`` and unlinks the spool files outside it."""
+        self._versions[key] = self._versions.get(key, 0) + 1
+        self._drop_index_entry(key)
+        self.stats.evictions += 1
+        self._tstats(key[0]).evictions += 1
+
+    def _unlink_evicted(
+        self, victims: Dict[_Key, Tuple[int, Optional[Tuple]]]
+    ) -> None:
+        """Unlink quota-eviction victims' spool files, guarded two ways
+        so a victim RE-WRITTEN around the eviction keeps its fresh
+        blob: the key's version is re-checked right before its files go
+        (the ``remove`` guard — catches rewrites that already
+        registered), and the on-disk blob's stat identity is compared
+        to the identity the EVICTED entry owned (catches a rewrite that
+        has staged its new bytes but not yet registered — ``write``
+        saves the blob before taking the lock). ``victims`` maps
+        key -> (version at eviction, owned blob identity).
+
+        Residual lock-free-spool window (same class ``remove``
+        documents): a rewrite whose ``np.save`` lands in the
+        microseconds between the identity stat and the unlink can
+        still lose its blob — the guards NARROW the race to that
+        window, they cannot close it without per-key file locks."""
+        if self.backend != "disk":
+            return
+        for key, (ver, ident) in victims.items():
+            with self._lock:
+                if key in self._weights or key in self._mem or \
+                        self._versions.get(key, 0) != ver:
+                    continue   # re-registered since the eviction
+            path = self._path(key[1], key[0])
+            try:
+                if ident is not None and _stat_identity(path) != ident:
+                    continue   # fresh bytes staged by an in-flight write
+            except OSError:
+                continue       # already gone
+            self._unlink([key])
+
+    def _quota_check_locked(
+        self, key: _Key, raw_bytes: int
+    ) -> Tuple[str, Dict[_Key, Tuple[int, Optional[Tuple]]]]:
+        """Decide what admitting ``key`` (``raw_bytes`` logical bytes)
+        does to its tenant's quota. Returns ``(verdict, victims)``:
+        verdict ``"ok"`` (victims already evicted from the index;
+        caller passes the returned {key -> (eviction version, owned
+        blob identity)} map to ``_unlink_evicted`` outside the lock)
+        or ``"reject"``. Caller holds ``self._lock``."""
+        tenant = key[0]
+        q = self._quotas.get(tenant)
+        if q is None:
+            return "ok", {}
+        replacing = key in self._nbytes
+        new_count = self._counts.get(tenant, 0) + (0 if replacing else 1)
+        new_bytes = self._tenant_bytes.get(tenant, 0) + raw_bytes \
+            - (self._nbytes.get(key, 0) if replacing else 0)
+        over_count = q.max_updates is not None and new_count > q.max_updates
+        over_bytes = q.max_bytes is not None and new_bytes > q.max_bytes
+        if not over_count and not over_bytes:
+            return "ok", {}
+        if q.policy == "reject":
+            return "reject", {}
+        # evict policy: drop the tenant's oldest arrivals (never the
+        # incoming key itself) until the newcomer fits
+        order = sorted(
+            (ts, k) for k, ts in self._arrivals.items()
+            if k[0] == tenant and k != key
+        )
+        victims: List[_Key] = []
+        for _, k in order:
+            if (q.max_updates is None or new_count <= q.max_updates) and \
+                    (q.max_bytes is None or new_bytes <= q.max_bytes):
+                break
+            new_count -= 1
+            new_bytes -= self._nbytes.get(k, 0)
+            victims.append(k)
+        still_over = (
+            (q.max_updates is not None and new_count > q.max_updates)
+            or (q.max_bytes is not None and new_bytes > q.max_bytes)
+        )
+        if still_over:
+            # the update alone busts the budget: nothing to evict for it
+            return "reject", {}
+        evicted: Dict[_Key, Tuple[int, Optional[Tuple]]] = {}
+        for k in victims:
+            ident = self._blob_mtime.get(k)   # before the drop pops it
+            self._evict_locked(k)
+            evicted[k] = (self._versions.get(k, 0), ident)
+        return "ok", evicted
+
+    def _account_write_locked(self, key: _Key, raw_bytes: int) -> None:
+        """Byte accounting for a registered write. Caller holds
+        ``self._lock`` and has already updated ``_counts``."""
+        tenant = key[0]
+        self._tenant_bytes[tenant] = (
+            self._tenant_bytes.get(tenant, 0) + raw_bytes
+            - self._nbytes.get(key, 0)
+        )
+        self._nbytes[key] = raw_bytes
 
     # -- client side --------------------------------------------------------
     def write(
@@ -203,7 +427,10 @@ class UpdateStore:
         partition. Returns the modeled write latency (bandwidth model,
         paper Fig. 12). Concurrent writes to the SAME (tenant,
         client_id) are last-writer-wins; the same client_id under two
-        tenants are independent updates."""
+        tenants are independent updates. With a :class:`TenantQuota`
+        installed for ``tenant``, an over-budget write raises
+        :class:`QuotaExceededError` (``reject``) or evicts the tenant's
+        oldest resident updates to make room (``evict``)."""
         if not _valid_tenant(tenant):
             raise ValueError(
                 f"invalid tenant name {tenant!r}: must be a non-empty "
@@ -216,8 +443,25 @@ class UpdateStore:
         )
         if vec.dtype.kind in "biu":   # ints/bools promote; floats keep dtype
             vec = vec.astype(np.float32)
+        raw = int(vec.nbytes)
         nbytes = vec.nbytes * self.replication
         latency = nbytes / (self.datanode_bw * self.n_datanodes)
+        # quota enforcement BEFORE any blob lands on disk: a rejected
+        # write never leaves an orphan file, and evict-policy victims
+        # free their budget before the newcomer stages. The unlocked
+        # emptiness probe keeps the no-quota ingest hot path at ONE
+        # lock acquisition (a quota installed concurrently can miss at
+        # most the writes already in flight — the documented bound).
+        verdict, victims = "ok", {}
+        if self._quotas:
+            with self._lock:
+                verdict, victims = self._quota_check_locked(key, raw)
+        self._unlink_evicted(victims)
+        if verdict == "reject":
+            raise QuotaExceededError(
+                f"tenant {tenant!r}: update of {raw} B for {client_id!r} "
+                f"exceeds the tenant quota {self._quotas.get(tenant)}"
+            )
         if self.backend == "disk":
             # blob + sidecar land on the datanode OUTSIDE the lock.
             # np.save can't round-trip ml_dtypes (bf16 reloads as raw V2),
@@ -255,9 +499,14 @@ class UpdateStore:
                     self._blob_mtime[key] = mtime
             self._versions[key] = self._versions.get(key, 0) + 1
             self._arrivals[key] = self.clock()
+            self._account_write_locked(key, raw)
             self.stats.writes += 1
             self.stats.bytes_written += nbytes
             self.stats.sim_write_seconds += latency
+            ts = self._tstats(tenant)
+            ts.writes += 1
+            ts.bytes_written += nbytes
+            ts.sim_write_seconds += latency
             self._arrival_cv.notify_all()
         return latency
 
@@ -272,8 +521,15 @@ class UpdateStore:
                 self._counts[key[0]] = left
             else:
                 self._counts.pop(key[0], None)
+            freed = self._nbytes.get(key, 0)
+            left_b = self._tenant_bytes.get(key[0], 0) - freed
+            if left_b > 0:
+                self._tenant_bytes[key[0]] = left_b
+            else:
+                self._tenant_bytes.pop(key[0], None)
         self._mem.pop(key, None)
         self._weights.pop(key, None)
+        self._nbytes.pop(key, None)
         self._arrivals.pop(key, None)
         self._blob_mtime.pop(key, None)
 
@@ -349,7 +605,15 @@ class UpdateStore:
         array and version are captured under ONE lock, so version-checked
         removal is exact; the disk backend's blob read is lock-free as
         ever, so a racing overwrite can at worst cause a harmless re-fold
-        next round (never a lost update)."""
+        next round (never a lost update).
+
+        The disk path RE-CHECKS the version after the blob (and its
+        dtype sidecar) are read: an entry evicted or superseded
+        mid-read — quota eviction, external re-submission — bumped its
+        version under the lock before any file was touched, so the
+        re-check raises ``KeyError`` and the consumer skips the row
+        instead of folding a half-unlinked blob (e.g. a bf16 payload
+        whose ``.dtype`` sidecar vanished between the two reads)."""
         tenant, client_id = key
         if self.backend == "memory":
             with self._lock:
@@ -369,6 +633,10 @@ class UpdateStore:
         dt = self._sidecar_dtype(path)
         if dt is not None:
             blob = blob.view(dt)
+        with self._lock:
+            if key not in self._weights or \
+                    self._versions.get(key, 0) != version:
+                raise KeyError(key)   # evicted/superseded mid-read
         return blob, weight, version
 
     @staticmethod
@@ -497,7 +765,7 @@ class UpdateStore:
         version-checked consumption (``remove``); it is keyed by client
         id, so it is only meaningful for single-tenant batches.
         ``keys_out`` collects the keys actually loaded."""
-        ups, ws = [], []
+        ups, ws, loaded = [], [], []
         for key in batch:
             try:
                 u, w, v = self._read_versioned(key)
@@ -507,17 +775,28 @@ class UpdateStore:
                 versions_out[key[1]] = v
             if keys_out is not None:
                 keys_out.append(key)
+            loaded.append(key)
             ups.append(u)
             ws.append(w)
         if not ups:
             return None
         block = np.stack(ups)
+        per_tenant: Dict[str, Tuple[int, int]] = {}
+        row_bytes = block.nbytes // max(len(ups), 1)
+        for t, _ in loaded:
+            n_r, b_r = per_tenant.get(t, (0, 0))
+            per_tenant[t] = (n_r + 1, b_r + row_bytes)
         with self._lock:
             self.stats.reads += len(ups)
             self.stats.bytes_read += block.nbytes
             self.stats.peak_block_bytes = max(
                 self.stats.peak_block_bytes, block.nbytes
             )
+            for t, (n_r, b_r) in per_tenant.items():
+                ts = self._tstats(t)
+                ts.reads += n_r
+                ts.bytes_read += b_r
+                ts.peak_block_bytes = max(ts.peak_block_bytes, b_r)
         return block, np.asarray(ws, np.float32)
 
     def iter_arrivals(
@@ -678,6 +957,7 @@ class UpdateStore:
                 self._ext_seen.pop(key, None)
             if tenant is None:
                 self.stats = StoreStats()
+                self._tenant_stats = {}
         self._unlink(doomed)
 
     def _unlink(self, keys: Iterable[_Key]) -> None:
@@ -735,17 +1015,30 @@ class UpdateStore:
             # it: an unrelated root blob with the same cid may be
             # mid-grace.)
             self._ext_seen.pop((DEFAULT_TENANT, cid), None)
-        with self._arrival_cv:
-            if key in self._weights:
-                return None   # a concurrent write() beat us to it
-            self._weights[key] = weight
-            self._counts[tenant] = self._counts.get(tenant, 0) + 1
-            self._versions[key] = self._versions.get(key, 0) + 1
-            self._arrivals[key] = self.clock()
-            self._blob_mtime[key] = mtime
-            self.stats.writes += 1
-            self.stats.bytes_written += nbytes * self.replication
-            self._arrival_cv.notify_all()
+        victims: Dict[_Key, Tuple[int, Optional[Tuple]]] = {}
+        try:
+            with self._arrival_cv:
+                if key in self._weights:
+                    return None   # a concurrent write() beat us to it
+                verdict, victims = self._quota_check_locked(key, nbytes)
+                if verdict == "reject":
+                    # over budget: the blob stays on disk unregistered
+                    # (re-tried each pass) until capacity frees
+                    return None
+                self._weights[key] = weight
+                self._counts[tenant] = self._counts.get(tenant, 0) + 1
+                self._versions[key] = self._versions.get(key, 0) + 1
+                self._arrivals[key] = self.clock()
+                self._blob_mtime[key] = mtime
+                self._account_write_locked(key, nbytes)
+                self.stats.writes += 1
+                self.stats.bytes_written += nbytes * self.replication
+                ts = self._tstats(tenant)
+                ts.writes += 1
+                ts.bytes_written += nbytes * self.replication
+                self._arrival_cv.notify_all()
+        finally:
+            self._unlink_evicted(victims)
         return cid
 
     def _ext_sidecar_tenant(self, cid: str) -> str:
@@ -818,12 +1111,13 @@ class UpdateStore:
         weight at the default — the sidecar's own close event (or the
         next poll tick) re-passes within the grace window.
 
-        Lock-free spool limitation (same class ``remove`` documents): a
-        re-submission that collides with a live default entry while the
-        round folding that entry is CLOSING can lose to the close's
-        unlink batch — the eviction and the version-checked remove are
-        not atomic with respect to each other, so the re-submitted blob
-        can be deleted instead of deferred in that microsecond window."""
+        A re-submission that collides with a live default entry while
+        the round folding that entry is CLOSING is safe: the eviction
+        bumps the entry's write-version under the lock, so the close's
+        version-checked ``remove`` skips its unlink batch (the
+        re-submitted blob survives) and a streaming read that raced the
+        eviction discards the stale bytes instead of folding them —
+        see ``_evict_locked``."""
         if self.backend != "disk":
             return []
         with self._lock:
@@ -882,7 +1176,13 @@ class UpdateStore:
                         pass
                     continue
                 with self._lock:
-                    self._drop_index_entry(dkey)
+                    # eviction bumps the version, so a round CLOSING on
+                    # the stale entry right now sees it as superseded:
+                    # its version-checked remove skips the unlink (the
+                    # re-submitted blob survives) and an in-flight
+                    # _load_block read of the old bytes is discarded —
+                    # the PR-4 evict-vs-closing-round race is closed
+                    self._evict_locked(dkey)
                 known.discard(dkey)
             # peek the tenant BEFORE moving anything: a blob registered
             # under the NAMED tenant must not have its files moved/

@@ -21,12 +21,17 @@ Run several ``--rounds`` to watch the policy move from ``static`` to
 each round used, labeled with its tenant.
 
 ``--tenant`` tags every write and round with a tenant label (store
-partition + service continuity key). ``--concurrent-tenants K`` is the
-multi-tenant demo: K tenants share ONE store and ONE service, their
-writers land interleaved while rounds are open, and each round folds
-only its own tenant's partition — watch the per-tenant report lines
-show full inclusion and ``compile=0.000s`` (warm compile-cache reuse)
-for every tenant after the first.
+partition + service continuity key). ``--concurrent-tenants K`` runs K
+tenants' rounds GENUINELY CONCURRENTLY on ONE store and ONE service:
+a ``RoundScheduler`` worker per tenant executes all K rounds at once
+(device execution bounded by ``--device-concurrency``, default 1),
+their writers land interleaved while every round is open, and each
+round folds only its own tenant's partition — watch the per-tenant
+report lines show full inclusion and ``compile=0.000s`` for every
+tenant after the first (single-flight compile cache: K racing tenants
+pay ONE cold compile). ``--quota-updates`` / ``--quota-bytes`` /
+``--quota-policy`` install a per-tenant capacity quota on the shared
+store (the noisy-neighbor bound; see docs/MULTITENANCY.md).
 """
 from __future__ import annotations
 
@@ -38,13 +43,23 @@ import zlib
 import numpy as np
 
 from repro.configs import CNN_SUITE
-from repro.core import AggregationService, UpdateStore, Workload, classify
+from repro.core import (
+    AggregationService,
+    QuotaExceededError,
+    RoundScheduler,
+    UpdateStore,
+    Workload,
+    classify,
+)
 from repro.utils.mem import bytes_to_human
 
 
 def _report_line(report, gate: str) -> str:
     """One round's outcome, labeled with its tenant so interleaved
     multi-tenant logs stay unambiguous."""
+    st = report.store_stats
+    stats = (f" writes={st.writes} wbytes={st.bytes_written}"
+             f" evictions={st.evictions}") if st is not None else ""
     return (f"[aggregate] tenant={report.tenant} "
             f"engine={report.plan.engine} "
             f"class={report.plan.workload_class.value} "
@@ -54,7 +69,8 @@ def _report_line(report, gate: str) -> str:
             f"overlap={report.overlap_seconds:.3f}s "
             f"compile={report.phase_seconds.get('compile', 0.0):.3f}s "
             f"est={report.plan.est_seconds:.4f}s(model) "
-            f"route_next_to_store={report.route_next_to_store}")
+            f"route_next_to_store={report.route_next_to_store}"
+            + stats)
 
 
 def _gate_str(report) -> str:
@@ -102,10 +118,24 @@ def main():
                     help="tenant label for writes and rounds (store "
                          "partition + service continuity key)")
     ap.add_argument("--concurrent-tenants", type=int, default=0,
-                    help="multi-tenant demo: this many tenants interleave "
-                         "rounds on ONE shared store/service (overrides "
-                         "--tenant; writers for all tenants run "
-                         "concurrently while rounds are open)")
+                    help="run this many tenants' rounds CONCURRENTLY on "
+                         "ONE shared store/service via the RoundScheduler "
+                         "(overrides --tenant; writers for all tenants "
+                         "run while every round is open)")
+    ap.add_argument("--device-concurrency", type=int, default=1,
+                    help="bound on concurrent device execution across "
+                         "tenants' rounds (the scheduler's hardware "
+                         "semaphore; 1 serializes folds, waits overlap)")
+    ap.add_argument("--quota-updates", type=int, default=None,
+                    help="per-tenant resident-update budget on the "
+                         "shared store (None: unbounded)")
+    ap.add_argument("--quota-bytes", type=int, default=None,
+                    help="per-tenant resident-byte budget on the shared "
+                         "store (None: unbounded)")
+    ap.add_argument("--quota-policy", default="reject",
+                    choices=["reject", "evict"],
+                    help="over-budget writes: reject (raise) or evict "
+                         "the tenant's oldest resident updates")
     args = ap.parse_args()
 
     spec = CNN_SUITE[args.model]
@@ -116,10 +146,20 @@ def main():
         local_strategy=args.local_strategy,
         threshold_frac=args.threshold_frac, monitor_timeout=args.timeout,
         adaptive=args.adaptive, cost_bias=args.cost_bias,
+        device_concurrency=args.device_concurrency,
     )
     tenants = (
         [f"app{i}" for i in range(args.concurrent_tenants)]
         if args.concurrent_tenants else [args.tenant]
+    )
+    if args.quota_updates is not None or args.quota_bytes is not None:
+        for t in tenants:
+            store.set_quota(
+                t, max_updates=args.quota_updates,
+                max_bytes=args.quota_bytes, policy=args.quota_policy,
+            )
+    scheduler = (
+        RoundScheduler(svc) if args.concurrent_tenants else None
     )
     overlapped = args.async_rounds or args.adaptive \
         or args.concurrent_tenants > 0
@@ -134,6 +174,7 @@ def main():
     for rnd in range(args.rounds):
         t0 = time.time()
         write_lat = []
+        rejected = []
 
         def write_all(tenant):
             pause = args.spread / max(args.clients, 1) if overlapped else 0.0
@@ -147,11 +188,17 @@ def main():
                 if pause:
                     time.sleep(pause)
                 u = trng.normal(size=(n_params,)).astype(np.float32)
-                write_lat.append(
-                    store.write(f"client{i:05d}", u,
-                                weight=float(trng.integers(1, 100)),
-                                tenant=tenant)
-                )
+                try:
+                    write_lat.append(
+                        store.write(f"client{i:05d}", u,
+                                    weight=float(trng.integers(1, 100)),
+                                    tenant=tenant)
+                    )
+                except QuotaExceededError:
+                    # reject policy: the write is refused, the writer
+                    # keeps going — the round closes on whatever the
+                    # quota admitted (reported below)
+                    rejected.append(tenant)
 
         if overlapped:
             # arrivals land WHILE rounds are open (the overlapped round,
@@ -164,13 +211,24 @@ def main():
             ]
             for w in writers:
                 w.start()
-            reports = [
-                svc.aggregate(from_store=True,
-                              expected_clients=args.clients,
-                              async_round=args.async_rounds,
-                              tenant=t)
-                for t in tenants
-            ]
+            if scheduler is not None:
+                # truly concurrent execution: every tenant's round runs
+                # NOW on its scheduler worker — monitor waits overlap,
+                # device folds share the execution semaphore
+                results = scheduler.run_round(
+                    tenants, from_store=True,
+                    expected_clients=args.clients,
+                    async_round=args.async_rounds,
+                )
+                reports = [results[t] for t in tenants]
+            else:
+                reports = [
+                    svc.aggregate(from_store=True,
+                                  expected_clients=args.clients,
+                                  async_round=args.async_rounds,
+                                  tenant=t)
+                    for t in tenants
+                ]
             for w in writers:
                 w.join()
         else:
@@ -187,7 +245,9 @@ def main():
         avg_write = np.mean(write_lat) * 1e3 if write_lat else 0.0
         print(f"[aggregate] round={rnd} {len(write_lat)} updates written "
               f"(modeled avg write {avg_write:.1f} ms, "
-              f"wall {time.time()-t0:.2f}s)")
+              f"wall {time.time()-t0:.2f}s)"
+              + (f" [{len(rejected)} writes rejected by quota]"
+                 if rejected else ""))
         for fused, report in reports:
             if report.empty:
                 print(f"[aggregate] tenant={report.tenant} empty round "
@@ -196,6 +256,8 @@ def main():
             print(_report_line(report, _gate_str(report)))
             print(f"[aggregate] tenant={report.tenant} "
                   f"fused[:5]={np.asarray(fused[:5])}")
+    if scheduler is not None:
+        scheduler.shutdown()
 
 
 if __name__ == "__main__":

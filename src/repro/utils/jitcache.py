@@ -96,12 +96,24 @@ class CompiledCache:
         ``shard_map`` closures whose sharded lowering wants real device
         inputs); jit's internal cache handles same-shape reuse, and the
         point is to stop rebuilding the closure per call.
+
+    The compile path is SINGLE-FLIGHT per key: when two threads (two
+    tenants' concurrent rounds) race the same shape bucket, exactly one
+    compiles while the others block on that key's in-flight build and
+    then share the finished executable as a hit — ``misses`` counts cold
+    compiles actually paid, never duplicated work. Builds for DIFFERENT
+    keys still proceed concurrently (the build itself runs outside the
+    cache lock). If a build raises, its waiters retry and one of them
+    takes over the build instead of caching the failure.
     """
 
     def __init__(self, name: str = "cache"):
         self.name = name
         self._entries: Dict[Hashable, CacheEntry] = {}
         self._lock = threading.Lock()
+        # key -> Event for a build in flight; racers of the same key wait
+        # here instead of compiling a duplicate executable
+        self._building: Dict[Hashable, threading.Event] = {}
         self.hits = 0
         self.misses = 0
         self.compile_seconds = 0.0
@@ -126,55 +138,80 @@ class CompiledCache:
         committed) example arrays — the latter is what ``shard_map``
         closures need, since their sharded lowering binds to real input
         shardings."""
-        with self._lock:
-            entry = self._entries.get(key)
-            if entry is not None:
-                self.hits += 1
-                return entry.fn, 0.0
+        done = self._claim(key)
+        if done is not None:
+            return done
         # Build outside the lock: compiling can take seconds and other
-        # shapes' lookups must not serialize behind it.
-        fn = builder()
+        # shapes' lookups must not serialize behind it. This thread owns
+        # the key's in-flight slot; same-key racers wait in _claim.
+        try:
+            fn = builder()
 
-        def traced(*args):
-            note_trace()
-            return fn(*args)
+            def traced(*args):
+                note_trace()
+                return fn(*args)
 
-        t0 = time.perf_counter()
-        compiled = jax.jit(traced).lower(*arg_specs).compile()
-        dt = time.perf_counter() - t0
-        with self._lock:
-            entry = self._entries.get(key)
-            if entry is not None:     # lost a build race: keep the first
-                self.hits += 1
-                return entry.fn, 0.0
-            self._entries[key] = CacheEntry(fn=compiled, compile_seconds=dt)
-            self.misses += 1
-            self.compile_seconds += dt
+            t0 = time.perf_counter()
+            compiled = jax.jit(traced).lower(*arg_specs).compile()
+            dt = time.perf_counter() - t0
+            with self._lock:
+                self._entries[key] = CacheEntry(
+                    fn=compiled, compile_seconds=dt
+                )
+                self.misses += 1
+                self.compile_seconds += dt
+        finally:
+            self._release(key)
         return compiled, dt
+
+    def _claim(self, key: Hashable):
+        """Return the cached ``(fn, 0.0)`` on a hit, else claim the
+        key's build slot and return None (the caller must build and then
+        ``_release``). A thread racing an in-flight build for the SAME
+        key blocks until that build lands and shares it as a hit."""
+        while True:
+            with self._lock:
+                entry = self._entries.get(key)
+                if entry is not None:
+                    self.hits += 1
+                    return entry.fn, 0.0
+                ev = self._building.get(key)
+                if ev is None:
+                    self._building[key] = threading.Event()
+                    return None
+            # same-key build in flight: wait, then re-check — a failed
+            # build wakes us with no entry and we take over the slot
+            ev.wait()
+
+    def _release(self, key: Hashable) -> None:
+        with self._lock:
+            ev = self._building.pop(key, None)
+        if ev is not None:
+            ev.set()
 
     def get_jitted(
         self, key: Hashable, builder: Callable[[], Callable]
     ) -> Callable:
-        """Cache a ``jax.jit``-wrapped builder output (lazy compile)."""
-        with self._lock:
-            entry = self._entries.get(key)
-            if entry is not None:
-                self.hits += 1
-                return entry.fn
-        fn = builder()
+        """Cache a ``jax.jit``-wrapped builder output (lazy compile).
+        Single-flight per key, like ``get``."""
+        done = self._claim(key)
+        if done is not None:
+            return done[0]
+        try:
+            fn = builder()
 
-        def traced(*args):
-            note_trace()
-            return fn(*args)
+            def traced(*args):
+                note_trace()
+                return fn(*args)
 
-        jitted = jax.jit(traced)
-        with self._lock:
-            entry = self._entries.get(key)
-            if entry is not None:
-                self.hits += 1
-                return entry.fn
-            self._entries[key] = CacheEntry(fn=jitted, compile_seconds=0.0)
-            self.misses += 1
+            jitted = jax.jit(traced)
+            with self._lock:
+                self._entries[key] = CacheEntry(
+                    fn=jitted, compile_seconds=0.0
+                )
+                self.misses += 1
+        finally:
+            self._release(key)
         return jitted
 
     def clear(self) -> None:

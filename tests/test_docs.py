@@ -111,12 +111,15 @@ def test_operator_docs_cover_their_subjects():
     multitenancy = _read("docs/MULTITENANCY.md")
     for term in ("tenant=", "SpoolTailer", ".tenant", "ingest_external",
                  "save_controller", "--concurrent-tenants",
-                 "BENCH_multitenant.json"):
+                 "BENCH_multitenant.json", "RoundScheduler",
+                 "set_quota", "QuotaExceededError", "stats_for",
+                 "device_concurrency", "BENCH_concurrent.json"):
         assert term in multitenancy, f"MULTITENANCY.md lost {term!r}"
     tuning = _read("docs/TUNING.md")
     for term in ("cost_bias", "staleness_discount", 'async_round="auto"',
                  "threshold_frac", "monitor_timeout", "phase_seconds",
-                 "RoundReport", "drift"):
+                 "RoundReport", "drift", "device_concurrency",
+                 "set_quota", "rewarm", "store_stats", "RoundScheduler"):
         assert term in tuning, f"TUNING.md lost {term!r}"
 
 
