@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.compress import BLOCK, CompressedBlock
 from repro.core.fusion.base import FusionAlgorithm
 from repro.core.fusion.robust import GeometricMedian, Krum, TrimmedMean, Zeno
 from repro.core.local import StreamReport, _check_scale
@@ -326,10 +327,56 @@ class DistributedEngine:
         return ("stream", fusion_cache_key(fusion), pc, P_ + pad_p,
                 np.dtype(dtype).str, self.hierarchical)
 
-    def is_warm_stream(self, fusion, chunk: int, P_: int, dtype) -> bool:
-        return fusion.reducible and (
-            self._stream_key(fusion, chunk, P_, dtype) in self.cache
-        )
+    def _dequant_key(self, chunk: int, P_: int, blk: int):
+        pc = chunk + (-chunk) % self._n_client_shards
+        Pq = -(-P_ // blk) * blk
+        pad_p = (-P_) % (self._n_param_shards * self._n_client_shards)
+        return ("dequant", pc, Pq, blk, P_, P_ + pad_p)
+
+    def is_warm_stream(self, fusion, chunk: int, P_: int, dtype,
+                       block: Optional[int] = None) -> bool:
+        """Warm-path probe. ``dtype`` int8 probes the COMPRESSED route:
+        the on-device dequant executable (at quantization block
+        ``block``, default ``compress.BLOCK``) AND the fp32 fold step it
+        feeds — a compressed round is only warm with both."""
+        if not fusion.reducible:
+            return False
+        if np.dtype(dtype) == np.int8:
+            blk = int(block) if block else BLOCK
+            return (
+                self._dequant_key(chunk, P_, blk) in self.cache
+                and self._stream_key(fusion, chunk, P_, np.float32)
+                in self.cache
+            )
+        return self._stream_key(fusion, chunk, P_, dtype) in self.cache
+
+    def _dequant_fn(self, pc, Pq, blk, dim, pdim, q_ex, s_ex):
+        """Cached on-device dequant executable for streamed compressed
+        blocks: (codes (pc, Pq) int8, scales (pc, Pq//blk) fp32) ->
+        (pc, pdim) fp32, output sharding-constrained to the step
+        executable's update layout — so the fp32 block exists only as a
+        device-side transient between two compiled artifacts, never on
+        the host, and mixed fp32/int8 rounds share ONE fold step and
+        ONE on-mesh accumulator."""
+        mesh = self.mesh
+        in_u = P(self._cspec(), self.param_axis)
+        key = ("dequant", pc, Pq, blk, dim, pdim)
+
+        def build():
+            def deq(q, s):
+                u = (
+                    q.astype(jnp.float32).reshape(pc, Pq // blk, blk)
+                    * s[:, :, None]
+                ).reshape(pc, Pq)[:, :dim]
+                if pdim != dim:
+                    u = jnp.pad(u, ((0, 0), (0, pdim - dim)))
+                return jax.lax.with_sharding_constraint(
+                    u, NamedSharding(mesh, in_u)
+                )
+
+            return deq
+
+        return self.cache.get(key, build, q_ex, s_ex)
 
     def fuse_stream(
         self,
@@ -344,7 +391,14 @@ class DistributedEngine:
         executable. Each block is staged host-side at O(chunk * P),
         device_put sharded over (client_axes, param_axis), and psum'd
         into a (P,)-sharded on-mesh accumulator — the dense (n, P)
-        matrix never exists on the host. Block / ``init`` / ``chunk_rows``
+        matrix never exists on the host. A block may be a
+        :class:`repro.core.compress.CompressedBlock` (int8 codes + fp32
+        per-block scales): it stages host-side at its COMPRESSED size,
+        dequantizes on-device through a cached executable, and feeds
+        the same fp32 fold step dense fp32 blocks use — mixed
+        dense/compressed rounds (stragglers may be uncompressed) share
+        one step and one on-mesh accumulator, and the fp32 matrix never
+        exists on the host. Block / ``init`` / ``chunk_rows``
         semantics match ``LocalEngine.fuse_stream`` (numeric per-block
         staleness scale; carried accumulator in/out via the StreamReport;
         pass the configured ``chunk_rows`` so variable final blocks reuse
@@ -366,9 +420,12 @@ class DistributedEngine:
         sem = device_sem if device_sem is not None \
             else contextlib.nullcontext()
         it = iter(blocks)
-        step = wsum = tot = None
+        steps: dict = {}   # payload dtype -> cached fold step
+        deqs: dict = {}    # (Pq, blk) -> cached dequant executable
+        wsum = tot = None
         chunk = dim = None
         pc = pdim = 0
+        compile_total = 0.0
         while True:
             t0 = time.perf_counter()
             try:
@@ -378,24 +435,27 @@ class DistributedEngine:
             rep.ingest_seconds += time.perf_counter() - t0
             block, w = item[0], item[1]
             scale = _check_scale(item[2]) if len(item) > 2 else None
+            compressed = isinstance(block, CompressedBlock)
+            rows = block.rows if compressed else block.shape[0]
+            bdim = block.dim if compressed else block.shape[1]
             if chunk is None:
-                dim = block.shape[1]
-                chunk = int(chunk_rows) if chunk_rows else block.shape[0]
+                dim = bdim
+                chunk = int(chunk_rows) if chunk_rows else rows
                 rep.chunk_rows = chunk
                 pc = chunk + (-chunk) % self._n_client_shards
                 pdim = dim + (
                     (-dim) % (self._n_param_shards * self._n_client_shards)
                 )
-            rows = block.shape[0]
+            elif bdim != dim:
+                raise ValueError(
+                    f"fuse_stream: block dim {bdim} != stream dim {dim}"
+                )
             if rows > chunk:
                 raise ValueError(
                     f"fuse_stream: block of {rows} rows exceeds "
                     f"chunk_rows={chunk}"
                 )
-            if rows < pc or pdim != dim:   # shard-multiple / ragged pad
-                padded = np.zeros((pc, pdim), block.dtype)
-                padded[:rows, :dim] = block
-                block = padded
+            rep.ingest_bytes += int(block.nbytes)   # pre-padding payload
             wpad = np.zeros((pc,), np.float32)
             wpad[:rows] = w
             w_eff = np.array(
@@ -405,13 +465,45 @@ class DistributedEngine:
                 w_eff[:rows] *= np.asarray(scale, np.float32)[:rows]
             w_eff[rows:] = 0.0             # effective_weights may remap pads
             t0 = time.perf_counter()
-            u_dev = _device_put(mesh, block, in_u)
+            if compressed:
+                # host staging at the COMPRESSED size; the fp32 block
+                # exists only on device, between the dequant executable
+                # and the fold step
+                Pq, blk = block.codes.shape[1], block.block
+                if rows < pc:
+                    qpad = np.zeros((pc, Pq), np.int8)
+                    qpad[:rows] = block.codes
+                    spad = np.zeros((pc, Pq // blk), np.float32)
+                    spad[:rows] = block.scales
+                else:
+                    qpad, spad = block.codes, block.scales
+                cspec2 = P(self._cspec(), None)
+                q_dev = _device_put(mesh, qpad, cspec2)
+                s_dev = _device_put(mesh, spad, cspec2)
+                deq = deqs.get((Pq, blk))
+                if deq is None:
+                    deq, c_s = self._dequant_fn(
+                        pc, Pq, blk, dim, pdim, q_dev, s_dev
+                    )
+                    deqs[(Pq, blk)] = deq
+                    compile_total += c_s
+                u_dev = deq(q_dev, s_dev)
+                dtype = np.dtype(np.float32)
+            else:
+                if rows < pc or pdim != dim:  # shard-multiple/ragged pad
+                    padded = np.zeros((pc, pdim), block.dtype)
+                    padded[:rows, :dim] = block
+                    block = padded
+                u_dev = _device_put(mesh, block, in_u)
+                dtype = np.dtype(block.dtype)
             w_dev = _device_put(mesh, jnp.asarray(w_eff, jnp.float32), in_w)
             rep.ingest_seconds += time.perf_counter() - t0
-            if step is None:
+            if wsum is None:
                 wsum0, tot0 = self._stream_carry(pdim, dim, init)
                 wsum = _device_put(mesh, wsum0, acc)
                 tot = _device_put(mesh, tot0, P())
+            step = steps.get(dtype.str)
+            if step is None:
                 def build():
                     def step_fn(u, wv, ws, t):
                         dws, dt_ = self._partials(fusion, u, wv)
@@ -423,11 +515,14 @@ class DistributedEngine:
                     )
 
                 step, compile_s = self.cache.get(
-                    self._stream_key(fusion, chunk, dim, block.dtype),
+                    self._stream_key(fusion, chunk, dim, dtype),
                     build, u_dev, w_dev, wsum, tot,
                 )
-                rep.compile_seconds = compile_s
-                self.last_compile_seconds = compile_s
+                steps[dtype.str] = step
+                # mixed rounds accumulate one compile per payload kind
+                compile_total += compile_s
+            rep.compile_seconds = compile_total
+            self.last_compile_seconds = compile_total
             t0 = time.perf_counter()
             with sem:
                 wsum, tot = step(u_dev, w_dev, wsum, tot)

@@ -36,8 +36,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compress import BLOCK, CompressedBlock
 from repro.core.fusion.base import FusionAlgorithm
-from repro.kernels.fused_fusion.kernel import weighted_sum_pallas
+from repro.kernels.fused_fusion.kernel import (
+    weighted_sum_dequant_pallas,
+    weighted_sum_pallas,
+)
 from repro.kernels.robust_fusion.kernel import (
     coordmedian_pallas,
     trimmedmean_pallas,
@@ -74,6 +78,9 @@ class StreamReport:
     n_rows: int = 0
     n_blocks: int = 0
     chunk_rows: int = 0
+    # actual payload bytes ingested (pre-padding; codes + scales for
+    # compressed blocks) — what RoundReport.bytes_ingested reports
+    ingest_bytes: int = 0
     # pre-combine accumulator state, so async rounds can carry partial
     # sums into the next round (continuous aggregation): (P,) fp32 / scalar
     acc_wsum: Optional[np.ndarray] = None
@@ -189,7 +196,16 @@ class LocalEngine:
         Blocks are ``(updates, weights)`` or ``(updates, weights, scale)``
         — the optional NUMERIC (c,) ``scale`` multiplies the EFFECTIVE
         weights, so staleness discounting bites even for fusions (IterAvg)
-        that remap client weights. ``chunk_rows`` pins the step
+        that remap client weights. ``updates`` is a dense (c, P) array OR
+        a :class:`repro.core.compress.CompressedBlock` (int8 codes + fp32
+        per-block scales): compressed blocks fold WITHOUT host
+        dequantization — the pallas strategy folds the scales into the
+        weighted-sum kernel, the jnp strategy into the einsum — and a
+        single round may freely mix dense and compressed blocks
+        (stragglers may be uncompressed): each payload kind gets its own
+        cached step executable (the compile cache is keyed by payload
+        dtype/shape), all folding into ONE shared (P,) fp32 accumulator.
+        ``chunk_rows`` pins the step
         executable's row count (undersized blocks are zero-weight padded):
         pass the configured chunk so elastic/async rounds whose LAST block
         varies still hit one cached executable — the key
@@ -218,8 +234,11 @@ class LocalEngine:
         sem = device_sem if device_sem is not None \
             else contextlib.nullcontext()
         it = iter(blocks)
-        step = wsum = tot = None
+        steps: dict = {}   # payload kind -> cached step executable
+        wsum = tot = None
         chunk = dim = None
+        compile_total = 0.0
+        self.last_compile_seconds = 0.0
         while True:
             t0 = time.perf_counter()
             try:
@@ -229,28 +248,59 @@ class LocalEngine:
             rep.ingest_seconds += time.perf_counter() - t0
             block, w = item[0], item[1]
             scale = _check_scale(item[2]) if len(item) > 2 else None
+            compressed = isinstance(block, CompressedBlock)
+            rows = block.rows if compressed else block.shape[0]
+            bdim = block.dim if compressed else block.shape[1]
             if chunk is None:
-                dim = block.shape[1]
-                chunk = int(chunk_rows) if chunk_rows else block.shape[0]
+                dim = bdim
+                chunk = int(chunk_rows) if chunk_rows else rows
                 rep.chunk_rows = chunk
-                step, compile_s = self._stream_step(
-                    fusion, chunk, dim, block.dtype
-                )
-                rep.compile_seconds = compile_s
-                self.last_compile_seconds = compile_s
                 wsum, tot = self._stream_init(dim, init)
-            if block.shape[0] > chunk:
+            elif bdim != dim:
                 raise ValueError(
-                    f"fuse_stream: block of {block.shape[0]} rows exceeds "
+                    f"fuse_stream: block dim {bdim} != stream dim {dim}"
+                )
+            rep.ingest_bytes += int(block.nbytes)   # pre-padding payload
+            kind = ("q", block.codes.shape[1], block.block) if compressed \
+                else ("d", np.dtype(block.dtype).str)
+            step = steps.get(kind)
+            if step is None:
+                if compressed:
+                    step, compile_s = self._stream_step_q(
+                        fusion, chunk, dim, block.codes.shape[1],
+                        block.block,
+                    )
+                else:
+                    step, compile_s = self._stream_step(
+                        fusion, chunk, dim, block.dtype
+                    )
+                steps[kind] = step
+                # mixed rounds accumulate one compile per payload kind
+                compile_total += compile_s
+                rep.compile_seconds = compile_total
+                self.last_compile_seconds = compile_total
+            if rows > chunk:
+                raise ValueError(
+                    f"fuse_stream: block of {rows} rows exceeds "
                     f"chunk_rows={chunk}"
                 )
-            rows = block.shape[0]
             if rows < chunk:           # ragged final block: zero-weight pad
-                padded = np.zeros((chunk, dim), block.dtype)
-                padded[:rows] = block
                 wpad = np.zeros((chunk,), np.float32)
                 wpad[:rows] = w
-                block, w = padded, wpad
+                w = wpad
+                if compressed:
+                    qpad = np.zeros((chunk, block.codes.shape[1]), np.int8)
+                    qpad[:rows] = block.codes
+                    spad = np.zeros(
+                        (chunk, block.scales.shape[1]), np.float32
+                    )
+                    spad[:rows] = block.scales
+                    block = CompressedBlock(codes=qpad, scales=spad,
+                                            dim=dim)
+                else:
+                    padded = np.zeros((chunk, dim), block.dtype)
+                    padded[:rows] = block
+                    block = padded
             w = np.array(
                 fusion.effective_weights(jnp.asarray(w, jnp.float32))
             )
@@ -260,7 +310,11 @@ class LocalEngine:
                 w[rows:] = 0.0         # effective_weights may remap pads
             t0 = time.perf_counter()
             with sem:
-                wsum, tot = step(block, w, wsum, tot)
+                if compressed:
+                    wsum, tot = step(block.codes, block.scales, w, wsum,
+                                     tot)
+                else:
+                    wsum, tot = step(block, w, wsum, tot)
                 if device_sem is not None:
                     # dispatch is async: holding the semaphore only
                     # bounds execution if we wait for it (single-tenant
@@ -306,10 +360,19 @@ class LocalEngine:
                     in self.cache
         return self._dense_key(fusion, n, P, dtype) in self.cache
 
-    def is_warm_stream(self, fusion, chunk: int, P: int, dtype) -> bool:
-        return fusion.reducible and (
-            self._step_key(fusion, chunk, P, dtype) in self.cache
-        )
+    def is_warm_stream(self, fusion, chunk: int, P: int, dtype,
+                       block: Optional[int] = None) -> bool:
+        """Warm-path probe for the streamed step executable. ``dtype``
+        int8 probes the COMPRESSED step (int8 codes + fp32 scales at
+        quantization block ``block``, default ``compress.BLOCK``) —
+        the key a compressed round's first fold would build."""
+        if not fusion.reducible:
+            return False
+        if np.dtype(dtype) == np.int8:
+            blk = int(block) if block else BLOCK
+            Pq = -(-P // blk) * blk
+            return self._step_key_q(fusion, chunk, P, Pq, blk) in self.cache
+        return self._step_key(fusion, chunk, P, dtype) in self.cache
 
     # -- internals ------------------------------------------------------------
     def _dense_key(self, fusion, n, P, dtype):
@@ -319,6 +382,10 @@ class LocalEngine:
     def _step_key(self, fusion, chunk, P, dtype):
         return ("stream", fusion_cache_key(fusion), self.strategy,
                 chunk, P, np.dtype(dtype).str)
+
+    def _step_key_q(self, fusion, chunk, P, Pq, blk):
+        return ("streamq", fusion_cache_key(fusion), self.strategy,
+                chunk, P, Pq, blk)
 
     def _scan_key(self, fusion, n, max_rows, P, dtype):
         # keyed by chunk COUNT, not n: rounds sharing ceil(n/chunk) reuse
@@ -381,6 +448,74 @@ class LocalEngine:
         return self.cache.get(
             key, build,
             jax.ShapeDtypeStruct((chunk, P), np.dtype(dtype)),
+            jax.ShapeDtypeStruct((chunk,), jnp.float32),
+            jax.ShapeDtypeStruct((P,), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+
+    def _partial_q_fn(self, fusion, dim, blk):
+        """The 'map' stage for COMPRESSED blocks: (codes (c, Pq) int8,
+        scales (c, Pq//blk) fp32, w (c,)) -> (partial wsum (dim,), tot).
+        The fp32 update matrix never exists on the host; on device it
+        either never materializes at all (pallas: scales fold into the
+        weighted-sum kernel tile by tile; jnp weighted-sum fusions: the
+        per-row weight and per-block scale fold into one einsum with the
+        same MAC count as the dense path) or exists only as a transient
+        inside the compiled step (general reducible fusions that need
+        real update values, e.g. clipping norms)."""
+        use_pallas = self.strategy == "pallas" and fusion.name in _PALLAS_WSUM
+        # _PALLAS_WSUM fusions' partial IS the plain weighted sum + sum(w),
+        # which is what justifies the scale-folding shortcut for exactly
+        # this set under the jnp strategy too
+        plain_wsum = fusion.name in _PALLAS_WSUM
+        interpret = self.interpret
+
+        def partial_q(q, s, w):
+            if use_pallas:
+                ws = weighted_sum_dequant_pallas(
+                    q, s, w, block=blk, interpret=interpret
+                )
+                return ws[:dim], jnp.sum(w)
+            c, Pq = q.shape
+            B = Pq // blk
+            if plain_wsum:
+                # block-batched contraction over clients: out[b] =
+                # (w * s[:, b]) @ codes[:, b] — XLA lowers it to B small
+                # matvecs, ~4x faster here than the flat (c, B, blk)
+                # einsum because the transposed int8 operand is
+                # convert-and-contracted per block
+                ws = jnp.einsum(
+                    "bn,bnk->bk",
+                    (w[:, None] * s).T,
+                    q.reshape(c, B, blk).transpose(1, 0, 2)
+                     .astype(jnp.float32),
+                ).reshape(-1)[:dim]
+                return ws, jnp.sum(w)
+            u = (q.astype(jnp.float32).reshape(c, B, blk)
+                 * s[:, :, None]).reshape(c, Pq)[:, :dim]
+            return fusion.partial(u, w)
+
+        return partial_q
+
+    def _stream_step_q(self, fusion, chunk, P, Pq, blk):
+        """The compressed twin of ``_stream_step``: (codes, scales, w,
+        wsum, tot) -> updated (wsum, tot), same (P,) fp32 accumulator —
+        which is what lets mixed dense/compressed rounds share one
+        carry."""
+        key = self._step_key_q(fusion, chunk, P, Pq, blk)
+        partial_q = self._partial_q_fn(fusion, P, blk)
+
+        def build():
+            def step(q, s, w, wsum, tot):
+                ws, t = partial_q(q, s, w)
+                return wsum + ws, tot + t
+
+            return step
+
+        return self.cache.get(
+            key, build,
+            jax.ShapeDtypeStruct((chunk, Pq), np.int8),
+            jax.ShapeDtypeStruct((chunk, Pq // blk), jnp.float32),
             jax.ShapeDtypeStruct((chunk,), jnp.float32),
             jax.ShapeDtypeStruct((P,), jnp.float32),
             jax.ShapeDtypeStruct((), jnp.float32),

@@ -92,6 +92,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.adaptive import AdaptiveController, ClosePolicy
+from repro.core.compress import (
+    BLOCK,
+    CompressedUpdate,
+    ErrorFeedbackCompressor,
+    compressed_bytes,
+)
 from repro.core.distributed import DistributedEngine
 from repro.core.fusion import FusionAlgorithm, get_fusion
 from repro.core.local import LocalEngine
@@ -137,6 +143,10 @@ class RoundReport:
     # snapshot of the TENANT's store accounting at round close (writes /
     # bytes / reads / evictions — per-partition, not spool-global)
     store_stats: Optional[StoreStats] = None
+    # actual payload bytes the fusion ingested (pre-padding): int8 codes
+    # + fp32 scales on compressed rounds, the dense matrix bytes
+    # otherwise — the paper's transport-cost metric
+    bytes_ingested: int = 0
 
 
 class AggregationService:
@@ -156,6 +166,7 @@ class AggregationService:
         staleness_discount: Optional[float] = None,
         adaptive: bool = False,
         cost_bias: float = 0.5,
+        compress: bool | int = False,
         device_concurrency: int = 1,
         clock=time.monotonic,
         sleep=time.sleep,
@@ -196,6 +207,14 @@ class AggregationService:
           cost_bias: the paper's user knob in [0, 1] — 0 optimizes
             round wall-clock (cost), 1 optimizes update inclusion
             (efficiency); only meaningful with ``adaptive=True``.
+          compress: quantized transport. ``True`` (block size
+            ``repro.core.compress.BLOCK``) or an explicit block size
+            enables ``compress_update`` — clients spool int8 codes +
+            fp32 per-block scales (~4x fewer bytes) with per-tenant
+            error feedback, and store rounds stream them through the
+            engines' dequant-folding step without ever materializing
+            the fp32 matrix. Mixed rounds are fine: a straggler that
+            writes uncompressed fp32 folds into the same accumulator.
           device_concurrency: how many concurrent rounds may EXECUTE on
             the device at once (a bounded semaphore the engines acquire
             per fold step). Default 1 — on a small edge host the
@@ -260,6 +279,18 @@ class AggregationService:
         if not 0 <= cost_bias <= 1:
             raise ValueError("cost_bias must be in [0, 1]")
         self.cost_bias = cost_bias
+        # quantized transport: normalize compress to an Optional block
+        # size; per-tenant EF compressors are created lazily (client
+        # residuals must not leak across tenants)
+        if compress is True:
+            self.compress_block: Optional[int] = BLOCK
+        elif compress:
+            if int(compress) < 1:
+                raise ValueError("compress block size must be >= 1")
+            self.compress_block = int(compress)
+        else:
+            self.compress_block = None
+        self._compressors: Dict[str, ErrorFeedbackCompressor] = {}
         # the adaptive layer: learns per-tenant arrival curves off the
         # store's timestamps and re-derives the gate every round
         self.controller: Optional[AdaptiveController] = (
@@ -272,7 +303,40 @@ class AggregationService:
         )
         self.history: List[RoundReport] = []
 
+    # -- quantized transport --------------------------------------------------
+    def compress_update(
+        self, client_id: str, update, tenant: str = DEFAULT_TENANT,
+    ) -> CompressedUpdate:
+        """Quantize one client update for spooling: int8 codes + fp32
+        per-block scales, with per-tenant ERROR FEEDBACK — the client's
+        quantization residual is carried into its next round's update,
+        so the multi-round fused mean converges to the uncompressed
+        one. Pass the result straight to ``store.write``; requires
+        ``AggregationService(compress=...)``."""
+        if self.compress_block is None:
+            raise ValueError(
+                "compress_update needs a compressing service "
+                "(AggregationService(compress=True) or =block_size)"
+            )
+        if getattr(update, "ndim", None) != 1:
+            update = tree_to_flat_vector(update)
+        with self._state_lock:
+            comp = self._compressors.get(tenant)
+            if comp is None:
+                comp = self._compressors[tenant] = ErrorFeedbackCompressor(
+                    block=self.compress_block
+                )
+        return comp.compress_update(client_id, update)
+
     # -- streaming knobs ------------------------------------------------------
+    def _row_bytes(self, p: int, dtype) -> int:
+        """Per-client payload bytes in the store: real compressed size
+        (padded codes + fp32 scales) when the partition holds int8
+        quantized updates, dense bytes otherwise."""
+        if np.dtype(dtype) == np.int8:
+            return compressed_bytes(p, self.compress_block or BLOCK)
+        return p * np.dtype(dtype).itemsize
+
     def _chunk_rows(self, n: int, row_bytes: int) -> int:
         """Rows per streamed block: half the memory cap (two blocks are
         resident under double buffering), else the chunk-size default."""
@@ -288,13 +352,17 @@ class AggregationService:
         dense keys, or (with ``chunk_rows``) the streamed step keys."""
         warm = set()
         if chunk_rows is not None:
-            if self.local.is_warm_stream(self.fusion, chunk_rows, p, dtype):
+            blk = self.compress_block or BLOCK
+            if self.local.is_warm_stream(
+                    self.fusion, chunk_rows, p, dtype, block=blk):
                 warm.add("local")
             if self.distributed is not None and self.distributed \
-                    .is_warm_stream(self.fusion, chunk_rows, p, dtype):
+                    .is_warm_stream(self.fusion, chunk_rows, p, dtype,
+                                    block=blk):
                 warm.add("distributed")
             if self.hierarchical is not None and self.hierarchical \
-                    .is_warm_stream(self.fusion, chunk_rows, p, dtype):
+                    .is_warm_stream(self.fusion, chunk_rows, p, dtype,
+                                    block=blk):
                 warm.add("hierarchical")
             return warm
         if self.local.is_warm(self.fusion, n, p, dtype):
@@ -443,7 +511,7 @@ class AggregationService:
                     t_round=t_round, expected=expected,
                 )
             n, p, dtype = self.store.meta(tenant)
-            row_bytes = p * dtype.itemsize
+            row_bytes = self._row_bytes(p, dtype)
             chunk_rows = self._chunk_rows(n, row_bytes)
             load = Workload(
                 update_bytes=row_bytes, n_clients=n,
@@ -482,6 +550,7 @@ class AggregationService:
                     expected_clients, streamed, phase,
                     tenant=tenant, policy=policy, t_round=t_round_store,
                     expected=expected, arrivals=arrivals,
+                    ingest_bytes=srep.ingest_bytes,
                 )
             t0 = time.perf_counter()
             stacked, w = self.store.read_stacked(tenant)
@@ -553,6 +622,7 @@ class AggregationService:
             expected_clients, streamed, phase,
             tenant=tenant, policy=policy, t_round=t_round_store,
             expected=expected, arrivals=arrivals,
+            ingest_bytes=int(stacked.nbytes),
         )
 
     # -- async (monitor-overlapped) rounds ------------------------------------
@@ -584,7 +654,7 @@ class AggregationService:
             # overlapping it is free
             return True
         n_proj = max(expected, n, 1)
-        row_bytes = p * dtype.itemsize
+        row_bytes = self._row_bytes(p, dtype)
         load = Workload(
             update_bytes=row_bytes, n_clients=n_proj,
             dtype_bytes=dtype.itemsize,
@@ -631,7 +701,7 @@ class AggregationService:
                 t_round=t_round, expected=expected,
             )
         n_now, p, dtype = self.store.meta(tenant)
-        row_bytes = p * dtype.itemsize
+        row_bytes = self._row_bytes(p, dtype)
         n_proj = max(expected, n_now, 1)
         chunk_rows = self._chunk_rows(n_proj, row_bytes)
         load = Workload(
@@ -728,6 +798,7 @@ class AggregationService:
             overlap_seconds=overlap, async_round=True,
             tenant=tenant, policy=policy, t_round=t_round_store,
             expected=expected, arrivals=arrivals,
+            ingest_bytes=srep.ingest_bytes,
         )
 
     def _empty_round(
@@ -767,6 +838,7 @@ class AggregationService:
         tenant: str = DEFAULT_TENANT, policy: Optional[ClosePolicy] = None,
         t_round: Optional[float] = None, expected: Optional[int] = None,
         arrivals: Optional[Dict[str, float]] = None,
+        ingest_bytes: int = 0,
     ):
         # §III-D3 seamless transition: if next round's projected load would
         # overflow a single chip (even the streamed local path then needs
@@ -803,6 +875,7 @@ class AggregationService:
             tenant=tenant,
             close_policy=policy,
             store_stats=self.store.stats_for(tenant),
+            bytes_ingested=ingest_bytes,
         )
         with self._state_lock:
             self.history.append(report)

@@ -39,6 +39,25 @@ Stored dtype is preserved (bf16 updates stay 2 bytes on the wire and in
 the spool; the seed force-cast to fp32, doubling bytes); only integer /
 bool inputs are promoted to fp32.
 
+COMPRESSED TRANSPORT: ``write`` also accepts a
+:class:`repro.core.compress.CompressedUpdate` (int8 block-quantized
+codes + fp32 per-block scales). On disk the codes spool as the ``.npy``
+blob with a ``.scale`` sidecar (the fp32 scale vector, npy format) and
+a ``.dim`` sidecar (the logical parameter count, text) — the same
+sidecar mechanism the ``.dtype`` sidecar uses for extension floats.
+External writers route compressed blobs the same way (codes blob +
+``.scale`` next to it); ``ingest_external`` / ``SpoolTailer`` move and
+register the sidecar set atomically-enough (blob last). The streaming
+read paths — ``iter_chunks`` / ``iter_arrivals`` — yield compressed
+rows as :class:`repro.core.compress.CompressedBlock` WITHOUT host-side
+dequantization (the engines fold the scales in-kernel); a round may mix
+dense and compressed entries (stragglers may be uncompressed), in which
+case each yielded block is homogeneous: rows are grouped by payload
+kind, only the per-kind final block is ragged. Quota/byte accounting
+(``tenant_bytes``, ``StoreStats.bytes*``, ``TenantQuota.max_bytes``)
+counts the REAL compressed size (codes + scales), not the logical fp32
+size — compressing buys actual quota headroom.
+
 Every registered write is TIMESTAMPED on the store's injectable clock
 (``arrival_times()``) — the adaptive controller's training signal — and
 notifies an arrival condition, so arrival-driven readers
@@ -72,6 +91,7 @@ from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.compress import CompressedBlock, CompressedUpdate
 from repro.utils.pytree import tree_to_flat_vector
 
 # the partition untagged writes land in; also the root of a disk spool
@@ -249,12 +269,18 @@ class UpdateStore:
             for t, cid in recovered:
                 # byte accounting survives restarts too, or a recovered
                 # partition would look empty to its tenant's quota
+                path = self._path(cid, t)
                 try:
-                    raw = int(np.load(
-                        self._path(cid, t), mmap_mode="r"
-                    ).nbytes)
+                    raw = int(np.load(path, mmap_mode="r").nbytes)
                 except Exception:
                     raw = 0
+                try:
+                    # compressed blobs count their .scale sidecar too
+                    raw += int(np.load(
+                        path + ".scale", mmap_mode="r"
+                    ).nbytes)
+                except Exception:
+                    pass
                 self._nbytes[(t, cid)] = raw
                 self._tenant_bytes[t] = self._tenant_bytes.get(t, 0) + raw
 
@@ -437,14 +463,21 @@ class UpdateStore:
                 "single path component (it names a spool subdirectory)"
             )
         key = (tenant, client_id)
-        vec = np.asarray(
-            update if getattr(update, "ndim", None) == 1
-            else tree_to_flat_vector(update)
-        )
-        if vec.dtype.kind in "biu":   # ints/bools promote; floats keep dtype
-            vec = vec.astype(np.float32)
-        raw = int(vec.nbytes)
-        nbytes = vec.nbytes * self.replication
+        if isinstance(update, CompressedUpdate):
+            vec = None
+            cu: Optional[CompressedUpdate] = update
+            # quota/stats budget the REAL stored payload: codes + scales
+            raw = cu.nbytes
+        else:
+            cu = None
+            vec = np.asarray(
+                update if getattr(update, "ndim", None) == 1
+                else tree_to_flat_vector(update)
+            )
+            if vec.dtype.kind in "biu":   # ints/bools promote; floats keep
+                vec = vec.astype(np.float32)
+            raw = int(vec.nbytes)
+        nbytes = raw * self.replication
         latency = nbytes / (self.datanode_bw * self.n_datanodes)
         # quota enforcement BEFORE any blob lands on disk: a rejected
         # write never leaves an orphan file, and evict-policy victims
@@ -466,21 +499,41 @@ class UpdateStore:
             # blob + sidecar land on the datanode OUTSIDE the lock.
             # np.save can't round-trip ml_dtypes (bf16 reloads as raw V2),
             # so extension floats spool as raw bytes + a dtype sidecar.
+            # Compressed updates spool their int8 codes as the blob plus
+            # a .scale sidecar (fp32 scale vector, npy format — written
+            # through an open file so np.save can't append '.npy') and a
+            # .dim sidecar (logical parameter count, text).
             path = self._path(client_id, tenant)
             if tenant != DEFAULT_TENANT and tenant not in self._made_dirs:
                 os.makedirs(os.path.dirname(path), exist_ok=True)
                 self._made_dirs.add(tenant)
             dpath = path + ".dtype"
-            if vec.dtype.kind == "V":
-                np.save(path, np.ascontiguousarray(vec).view(np.uint8))
-                with open(dpath, "w") as f:
-                    f.write(vec.dtype.name)
-            else:
-                np.save(path, vec)
+            if cu is not None:
+                np.save(path, cu.codes)
+                with open(path + ".scale", "wb") as f:
+                    np.save(f, cu.scales)
+                with open(path + ".dim", "w") as f:
+                    f.write(str(int(cu.dim)))
                 try:
-                    os.remove(dpath)   # stale sidecar from a prior dtype
+                    os.remove(dpath)   # stale sidecar from a dense write
                 except FileNotFoundError:
                     pass
+            else:
+                if vec.dtype.kind == "V":
+                    np.save(path, np.ascontiguousarray(vec).view(np.uint8))
+                    with open(dpath, "w") as f:
+                        f.write(vec.dtype.name)
+                else:
+                    np.save(path, vec)
+                    try:
+                        os.remove(dpath)   # stale sidecar, prior dtype
+                    except FileNotFoundError:
+                        pass
+                for suffix in (".scale", ".dim"):
+                    try:   # stale sidecars from a prior compressed write
+                        os.remove(path + suffix)
+                    except FileNotFoundError:
+                        pass
             with open(path + ".w", "w") as f:
                 f.write(repr(float(weight)))
             try:
@@ -492,7 +545,7 @@ class UpdateStore:
             if key not in src:
                 self._counts[tenant] = self._counts.get(tenant, 0) + 1
             if self.backend == "memory":
-                self._mem[key] = (vec, weight)
+                self._mem[key] = (cu if cu is not None else vec, weight)
             else:
                 self._weights[key] = weight
                 if mtime is not None:
@@ -622,6 +675,8 @@ class UpdateStore:
             # hand out a read-only VIEW: the spool keeps the only mutable
             # reference, so a caller scribbling on a block cannot corrupt
             # what a concurrent (or later) round will read
+            if isinstance(arr, CompressedUpdate):
+                return self._readonly_cu(arr), weight, version
             view = arr.view()
             view.flags.writeable = False
             return view, weight, version
@@ -630,14 +685,28 @@ class UpdateStore:
             version = self._versions.get(key, 0)
         path = self._path(client_id, tenant)
         blob = np.load(path)
-        dt = self._sidecar_dtype(path)
-        if dt is not None:
-            blob = blob.view(dt)
+        scales = self._sidecar_scales(path)
+        if scales is not None:
+            blob = CompressedUpdate(
+                codes=blob, scales=scales,
+                dim=self._sidecar_dim(path, default=int(blob.shape[0])),
+            )
+        else:
+            dt = self._sidecar_dtype(path)
+            if dt is not None:
+                blob = blob.view(dt)
         with self._lock:
             if key not in self._weights or \
                     self._versions.get(key, 0) != version:
                 raise KeyError(key)   # evicted/superseded mid-read
         return blob, weight, version
+
+    @staticmethod
+    def _readonly_cu(cu: CompressedUpdate) -> CompressedUpdate:
+        codes, scales = cu.codes.view(), cu.scales.view()
+        codes.flags.writeable = False
+        scales.flags.writeable = False
+        return CompressedUpdate(codes=codes, scales=scales, dim=cu.dim)
 
     @staticmethod
     def _sidecar_dtype(path: str) -> Optional[np.dtype]:
@@ -647,12 +716,35 @@ class UpdateStore:
         except FileNotFoundError:
             return None
 
+    @staticmethod
+    def _sidecar_scales(path: str) -> Optional[np.ndarray]:
+        """The ``.scale`` sidecar (fp32 per-block scale vector) marking
+        a compressed blob, or None for a dense one."""
+        try:
+            with open(path + ".scale", "rb") as f:
+                return np.load(f)
+        except FileNotFoundError:
+            return None
+
+    @staticmethod
+    def _sidecar_dim(path: str, default: int) -> int:
+        """Logical parameter count of a compressed blob. External
+        writers may omit it — the codes length (no padding) is assumed
+        then."""
+        try:
+            with open(path + ".dim") as f:
+                return int(f.read().strip())
+        except (FileNotFoundError, ValueError):
+            return default
+
     def meta(
         self, tenant: Optional[str] = None
     ) -> Tuple[int, int, np.dtype]:
         """(n_clients, update_dim, stored dtype) for ``tenant``'s
         partition (``None``: whole spool) without loading the set —
-        what the planner needs BEFORE choosing an engine."""
+        what the planner needs BEFORE choosing an engine. A compressed
+        first entry reports its LOGICAL dim and dtype int8 (the planner
+        sizes chunks from ``compressed_bytes``, not ``dim * 1``)."""
         with self._lock:
             keys = self._keys(tenant)
         if not keys:
@@ -664,9 +756,14 @@ class UpdateStore:
         if self.backend == "memory":
             with self._lock:
                 vec, _ = self._mem[first]
+            if isinstance(vec, CompressedUpdate):
+                return len(keys), int(vec.dim), np.dtype(np.int8)
             return len(keys), int(vec.shape[0]), vec.dtype
         path = self._path(first[1], first[0])
         blob = np.load(path, mmap_mode="r")  # header only
+        if os.path.exists(path + ".scale"):
+            dim = self._sidecar_dim(path, default=int(blob.shape[0]))
+            return len(keys), dim, np.dtype(np.int8)
         dt = self._sidecar_dtype(path)
         if dt is not None:
             return len(keys), int(blob.nbytes // dt.itemsize), dt
@@ -678,9 +775,13 @@ class UpdateStore:
         prefetch: bool = True,
         tenant: Optional[str] = None,
     ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
-        """Yield (updates (c, P) stored-dtype, weights (c,) fp32) blocks
-        from ``tenant``'s partition (``None``: whole spool), c ==
-        chunk_rows except for the ragged final block.
+        """Yield (updates, weights (c,) fp32) blocks from ``tenant``'s
+        partition (``None``: whole spool) — updates is a dense (c, P)
+        stored-dtype array, or a :class:`CompressedBlock` for int8
+        block-quantized rows (no host-side dequantization). c ==
+        chunk_rows except for ragged final blocks; in a MIXED
+        dense/compressed partition each chunk splits into one
+        homogeneous block per payload kind (see ``_load_block``).
 
         With ``prefetch`` a reader thread stages block k+1 while the
         engine consumes block k (double buffering): at most two blocks are
@@ -698,9 +799,10 @@ class UpdateStore:
 
         if not prefetch:
             for batch in batches:
-                blk = load(batch)
-                if blk is not None:   # None: whole batch raced a consume
-                    yield blk
+                blks = load(batch)
+                if blks is not None:  # None: whole batch raced a consume
+                    for payload, w, _ in blks:
+                        yield payload, w
             return
 
         q: "queue.Queue" = queue.Queue(maxsize=1)
@@ -720,11 +822,12 @@ class UpdateStore:
                 for batch in batches:
                     if stop.is_set():
                         return
-                    blk = load(batch)
-                    if blk is None:   # whole batch raced a consume
+                    blks = load(batch)
+                    if blks is None:  # whole batch raced a consume
                         continue
-                    if not put(("block", blk)):
-                        return
+                    for payload, w, _ in blks:
+                        if not put(("block", (payload, w))):
+                            return
                 put(("done", None))
             except BaseException as exc:  # surface in the consumer
                 put(("error", exc))
@@ -753,19 +856,29 @@ class UpdateStore:
         batch: List[_Key],
         versions_out: Optional[Dict[str, int]] = None,
         keys_out: Optional[List[_Key]] = None,
-    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
-        """Stack one batch of index keys into ((c, P) block, (c,) weights)
+    ) -> Optional[List[Tuple[object, np.ndarray, List[_Key]]]]:
+        """Stack one batch of index keys into homogeneous sub-blocks
+        ``[(payload, (c,) weights, loaded keys), ...]`` where payload is
+        a dense (c, P) stored-dtype array or a :class:`CompressedBlock`
         — blob reads happen lock-free, stats update under the lock.
-        A key that vanished between the caller's snapshot and the read
-        (consumed by a concurrent round's ``remove``, or evicted by the
-        tailer's re-submission handling) is SKIPPED, honoring the read
-        contract — a racing consume is at worst a smaller block, never
-        a crashed round; ``None`` is returned when every key vanished.
-        ``versions_out`` collects each id's write-version AS READ, for
-        version-checked consumption (``remove``); it is keyed by client
-        id, so it is only meaningful for single-tenant batches.
-        ``keys_out`` collects the keys actually loaded."""
-        ups, ws, loaded = [], [], []
+
+        Rows are GROUPED by payload kind (dense dtype+width, or
+        compressed codes-width+block): an all-dense or all-compressed
+        batch yields exactly one sub-block (the common case — grouping
+        costs nothing), a mixed batch one per kind, in first-seen
+        order, so the engines' fixed-shape step executables each see
+        rectangular input. A key that vanished between the caller's
+        snapshot and the read (consumed by a concurrent round's
+        ``remove``, or evicted by the tailer's re-submission handling)
+        is SKIPPED, honoring the read contract — a racing consume is at
+        worst a smaller block, never a crashed round; ``None`` is
+        returned when every key vanished. ``versions_out`` collects
+        each id's write-version AS READ, for version-checked
+        consumption (``remove``); it is keyed by client id, so it is
+        only meaningful for single-tenant batches. ``keys_out``
+        collects the keys actually loaded."""
+        groups: Dict[tuple, Tuple[list, list, List[_Key]]] = {}
+        n_loaded = 0
         for key in batch:
             try:
                 u, w, v = self._read_versioned(key)
@@ -775,29 +888,49 @@ class UpdateStore:
                 versions_out[key[1]] = v
             if keys_out is not None:
                 keys_out.append(key)
-            loaded.append(key)
+            if isinstance(u, CompressedUpdate):
+                kind = ("q", u.codes.shape[0], u.scales.shape[0], u.dim)
+            else:
+                kind = ("d", u.dtype.str, u.shape[0])
+            ups, ws, loaded = groups.setdefault(kind, ([], [], []))
             ups.append(u)
             ws.append(w)
-        if not ups:
+            loaded.append(key)
+            n_loaded += 1
+        if not n_loaded:
             return None
-        block = np.stack(ups)
+        out: List[Tuple[object, np.ndarray, List[_Key]]] = []
+        total_bytes = 0
         per_tenant: Dict[str, Tuple[int, int]] = {}
-        row_bytes = block.nbytes // max(len(ups), 1)
-        for t, _ in loaded:
-            n_r, b_r = per_tenant.get(t, (0, 0))
-            per_tenant[t] = (n_r + 1, b_r + row_bytes)
+        for kind, (ups, ws, loaded) in groups.items():
+            if kind[0] == "q":
+                payload: object = CompressedBlock(
+                    codes=np.stack([cu.codes for cu in ups]),
+                    scales=np.stack([cu.scales for cu in ups]),
+                    dim=kind[3],
+                )
+                nbytes = payload.nbytes
+            else:
+                payload = np.stack(ups)
+                nbytes = payload.nbytes
+            out.append((payload, np.asarray(ws, np.float32), loaded))
+            total_bytes += nbytes
+            row_bytes = nbytes // max(len(ups), 1)
+            for t, _ in loaded:
+                n_r, b_r = per_tenant.get(t, (0, 0))
+                per_tenant[t] = (n_r + 1, b_r + row_bytes)
         with self._lock:
-            self.stats.reads += len(ups)
-            self.stats.bytes_read += block.nbytes
+            self.stats.reads += n_loaded
+            self.stats.bytes_read += total_bytes
             self.stats.peak_block_bytes = max(
-                self.stats.peak_block_bytes, block.nbytes
+                self.stats.peak_block_bytes, total_bytes
             )
             for t, (n_r, b_r) in per_tenant.items():
                 ts = self._tstats(t)
                 ts.reads += n_r
                 ts.bytes_read += b_r
                 ts.peak_block_bytes = max(ts.peak_block_bytes, b_r)
-        return block, np.asarray(ws, np.float32)
+        return out
 
     def iter_arrivals(
         self,
@@ -812,7 +945,9 @@ class UpdateStore:
     ) -> Iterator[Tuple[np.ndarray, np.ndarray, List[str]]]:
         """Arrival-driven streaming read — the async-round substrate.
 
-        Yields ((c, P) block, (c,) weights, client_ids) as soon as
+        Yields (block, (c,) weights, client_ids) — block a dense (c, P)
+        array or a :class:`CompressedBlock` (mixed partitions split each
+        chunk into homogeneous per-kind blocks) — as soon as
         ``chunk_rows`` NEW updates have landed in ``tenant``'s partition
         (``None``: whole spool), without snapshotting the index up
         front: updates written while the stream is live are picked up on
@@ -852,22 +987,19 @@ class UpdateStore:
             while len(pending) >= chunk_rows or (closed and pending):
                 batch, pending = pending[:chunk_rows], pending[chunk_rows:]
                 t0 = time.perf_counter()
-                loaded: List[_Key] = []
-                blk = self._load_block(
-                    batch, versions_out=versions_out, keys_out=loaded,
-                )
+                blks = self._load_block(batch, versions_out=versions_out)
                 if stats_out is not None:
                     stats_out["load_seconds"] = (
                         stats_out.get("load_seconds", 0.0)
                         + time.perf_counter() - t0
                     )
-                if blk is None:   # whole batch raced a consume/eviction
+                if blks is None:  # whole batch raced a consume/eviction
                     continue
-                block, w = blk
                 # ids of the rows ACTUALLY loaded — a key that raced a
                 # concurrent consume is skipped, so the caller's folded
                 # bookkeeping stays exact
-                yield block, w, [cid for _, cid in loaded]
+                for payload, w, loaded in blks:
+                    yield payload, w, [cid for _, cid in loaded]
             if closed:
                 return
             # event-driven under the real clock: wake on the next write's
@@ -879,11 +1011,16 @@ class UpdateStore:
     ) -> Tuple[np.ndarray, np.ndarray]:
         """All of ``tenant``'s updates as (n, P) + weights (n,) — the
         DENSE engine input. Order-statistic fusions still need this;
-        reducible rounds should stream via ``iter_chunks`` instead."""
+        reducible rounds should stream via ``iter_chunks`` instead.
+        Compressed entries ARE dequantized here (host-side, fp32): the
+        dense path exists precisely for fusions that need the full
+        matrix."""
         ups, ws = [], []
         for block, w in self.iter_chunks(
             chunk_rows=1 << 62, prefetch=False, tenant=tenant
         ):
+            if isinstance(block, CompressedBlock):
+                block = block.dequantize()
             ups.append(block)
             ws.append(w)
         return np.concatenate(ups), np.concatenate(ws)
@@ -964,6 +1101,7 @@ class UpdateStore:
         for tenant, cid in keys:
             base = self._path(cid, tenant)
             for path in (base, base + ".w", base + ".dtype",
+                         base + ".scale", base + ".dim",
                          base + ".tenant"):
                 try:
                     os.remove(path)
@@ -996,6 +1134,13 @@ class UpdateStore:
             mtime = _stat_identity(path)
         except Exception:
             return None   # partial write: next pass gets it
+        try:
+            # a compressed external blob's .scale sidecar counts into
+            # its quota/stats bytes — real on-disk size, like write()
+            scales = np.load(path + ".scale", mmap_mode="r")
+            nbytes += int(scales.nbytes)
+        except Exception:
+            pass   # dense blob (no sidecar) or sidecar mid-write
         try:
             with open(path + ".w") as f:
                 weight = float(f.read())
@@ -1074,9 +1219,12 @@ class UpdateStore:
         dest_dir = self._tenant_dir(tenant)
         os.makedirs(dest_dir, exist_ok=True)
         try:
-            for suffix in (".w", ".dtype", ""):   # blob moves LAST, so a
-                src = src_base + suffix           # half-moved set never
-                if os.path.exists(src):           # registers half-done
+            # blob moves LAST, so a half-moved set never registers
+            # half-done (the .scale/.dim sidecars of a compressed blob
+            # are in place before the codes land)
+            for suffix in (".w", ".dtype", ".scale", ".dim", ""):
+                src = src_base + suffix
+                if os.path.exists(src):
                     os.replace(src, self._path(cid, tenant) + suffix)
             try:
                 os.remove(src_base + ".tenant")
@@ -1098,7 +1246,11 @@ class UpdateStore:
         in which case the files are moved into the named partition
         first. Writers using the sidecar route must emit it BEFORE the
         ``.w`` weight sidecar (blob -> .tenant -> .w): registration
-        happens as soon as the weight is readable.
+        happens as soon as the weight is readable. COMPRESSED external
+        blobs spool their int8 codes as the ``.npy`` plus ``.scale``
+        (and optionally ``.dim``) sidecars, emitted before ``.w`` like
+        ``.tenant`` — the registered bytes then count codes + scales,
+        and reads yield the entry compressed.
 
         An unreadable blob (a write still in flight under the polling
         fallback) is skipped and picked up on a later pass — external

@@ -87,3 +87,85 @@ def weighted_sum_pallas(
         interpret=interpret,
     )(w2, updates)
     return out[0]
+
+
+def _wsum_dequant_kernel(w_ref, q_ref, s_ref, out_ref, *, n_rows, tn, blk,
+                         ragged):
+    """w: (1, TN) fp32; q: (TN, TP) int8; s: (TN, TP//blk) fp32 per-block
+    scales; out: (1, TP) fp32 accumulator.
+
+    Dequantization is folded into the weighted sum: the int8 tile is
+    upcast in VMEM, scaled by its per-block fp32 scales (broadcast over
+    the blk lanes of each quantization block), and fed straight to the
+    same (1, TN) x (TN, TP) dot as the dense kernel — the fp32 update
+    matrix never exists in HBM, only one (TN, TP) tile at a time in
+    VMEM. Ragged client tiles mask both the weight lane and the
+    dequantized rows (scale lanes past n_rows are unspecified VMEM, so
+    0 * garbage could still be NaN)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    q = q_ref[...].astype(jnp.float32)          # (tn, tp)
+    s = s_ref[...]                              # (tn, tp // blk)
+    w = w_ref[...]
+    tp = q.shape[1]
+    u = (q.reshape(tn, tp // blk, blk) * s[:, :, None]).reshape(tn, tp)
+    if ragged:
+        valid = n_rows - j * tn
+        ids = jax.lax.broadcasted_iota(jnp.int32, (1, tn), 1)
+        w = jnp.where(ids < valid, w, 0.0)
+        u = jnp.where(ids.reshape(tn, 1) < valid, u, 0.0)
+    out_ref[...] += jnp.dot(w, u, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "param_tile", "client_tile",
+                              "interpret")
+)
+def weighted_sum_dequant_pallas(
+    codes: jnp.ndarray,          # (n, Pq) int8, Pq a multiple of block
+    scales: jnp.ndarray,         # (n, Pq // block) fp32 per-block scales
+    weights: jnp.ndarray,        # (n,) fp32
+    *,
+    block: int = 2048,           # quantization block (compress.BLOCK)
+    param_tile: int = PARAM_TILE,
+    client_tile: int = CLIENT_TILE,
+    interpret: bool = True,      # CPU container: interpret mode
+) -> jnp.ndarray:
+    """Weighted sum of block-quantized rows with the dequant scales
+    folded in-kernel: out[p] = sum_i w[i] * s[i, p//block] * q[i, p].
+
+    Returns the (Pq,) fp32 weighted sum over the PADDED parameter axis
+    (codes past the logical dim are zero by the CompressedUpdate
+    contract, so callers just slice [:dim])."""
+    note_trace()
+    n, Pq = codes.shape
+    if Pq % block:
+        raise ValueError(f"codes width {Pq} not a multiple of block {block}")
+    tn = min(client_tile, n)
+    # the param tile must cover whole quantization blocks so each grid
+    # cell sees its own scales; Pq is always a multiple of block
+    tp = min(max(block, (param_tile // block) * block), Pq)
+    w2 = weights.astype(jnp.float32).reshape(1, n)
+
+    kernel = functools.partial(
+        _wsum_dequant_kernel, n_rows=n, tn=tn, blk=block,
+        ragged=bool(n % tn),
+    )
+    m = tp // block
+    out = pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(Pq, tp), pl.cdiv(n, tn)),
+        in_specs=[
+            pl.BlockSpec((1, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((tn, tp), lambda i, j: (j, i)),
+            pl.BlockSpec((tn, m), lambda i, j: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((1, tp), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Pq), jnp.float32),
+        interpret=interpret,
+    )(w2, codes, scales)
+    return out[0]

@@ -16,3 +16,15 @@ def fedavg_ref(updates: jnp.ndarray, weights: jnp.ndarray,
     """The paper's Eq. (1)."""
     w = weights.astype(jnp.float32)
     return weighted_sum_ref(updates, weights) / (jnp.sum(w) + eps)
+
+
+def weighted_sum_dequant_ref(codes: jnp.ndarray, scales: jnp.ndarray,
+                             weights: jnp.ndarray,
+                             block: int = 2048) -> jnp.ndarray:
+    """Oracle for the scale-folding kernel: dequantize int8 codes
+    (n, Pq) with per-block fp32 scales (n, Pq // block), then weighted
+    sum -> (Pq,) fp32."""
+    n, Pq = codes.shape
+    u = codes.astype(jnp.float32).reshape(n, Pq // block, block)
+    u = (u * scales.astype(jnp.float32)[:, :, None]).reshape(n, Pq)
+    return weighted_sum_ref(u, weights)

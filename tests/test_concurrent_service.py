@@ -364,9 +364,10 @@ def test_mid_read_eviction_skips_row_instead_of_folding(tmp_path,
         keys = s._keys("default")
     blk = s._load_block(keys)
     assert evicted
-    block, w = blk
+    (block, w, loaded), = blk                   # one dense sub-block
     assert block.shape[0] == 1                  # c0's row was skipped
     np.testing.assert_allclose(block[0], 2.0)   # only c1 folded
+    assert loaded == [("default", "c1")]
 
 
 # -- drift-triggered re-warmup ------------------------------------------------

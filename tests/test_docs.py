@@ -119,8 +119,15 @@ def test_operator_docs_cover_their_subjects():
     for term in ("cost_bias", "staleness_discount", 'async_round="auto"',
                  "threshold_frac", "monitor_timeout", "phase_seconds",
                  "RoundReport", "drift", "device_concurrency",
-                 "set_quota", "rewarm", "store_stats", "RoundScheduler"):
+                 "set_quota", "rewarm", "store_stats", "RoundScheduler",
+                 "compress=True", "--compress", "compress_update",
+                 "bytes_ingested", "stream_chunk_bytes"):
         assert term in tuning, f"TUNING.md lost {term!r}"
+    arch = _read("docs/ARCHITECTURE.md")
+    for term in ("compress_update", "weighted_sum_dequant_pallas",
+                 "CompressedBlock", "error feedback", ".scale",
+                 "bytes_ingested", "BENCH_compressed.json"):
+        assert term in arch, f"ARCHITECTURE.md lost {term!r}"
 
 
 def test_readme_documents_tier1_and_bench_artifacts():

@@ -8,9 +8,20 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.fused_fusion.kernel import weighted_sum_pallas
-from repro.kernels.fused_fusion.ops import fedavg_fused, iteravg_fused
-from repro.kernels.fused_fusion.ref import fedavg_ref, weighted_sum_ref
+from repro.kernels.fused_fusion.kernel import (
+    weighted_sum_dequant_pallas,
+    weighted_sum_pallas,
+)
+from repro.kernels.fused_fusion.ops import (
+    fedavg_fused,
+    fedavg_fused_dequant,
+    iteravg_fused,
+)
+from repro.kernels.fused_fusion.ref import (
+    fedavg_ref,
+    weighted_sum_dequant_ref,
+    weighted_sum_ref,
+)
 from repro.kernels.robust_fusion.kernel import (
     coordmedian_pallas,
     trimmedmean_pallas,
@@ -62,6 +73,70 @@ def test_weighted_sum_property(n, p, seed):
     w = jnp.asarray(r.uniform(0, 3, size=(n,)).astype(np.float32))
     np.testing.assert_allclose(
         weighted_sum_pallas(u, w), weighted_sum_ref(u, w),
+        rtol=1e-4, atol=1e-3,
+    )
+
+
+# -- fused_fusion: in-kernel dequant fold -------------------------------------
+
+
+def _quantized(n, p, block, rng):
+    """Random (codes, scales, weights) with Pq padded to the block."""
+    n_blocks = -(-p // block)
+    codes = rng.integers(-127, 128, size=(n, n_blocks * block),
+                         dtype=np.int8)
+    codes[:, p:] = 0
+    scales = rng.uniform(1e-4, 1e-2, size=(n, n_blocks)).astype(np.float32)
+    w = rng.uniform(1, 4, size=(n,)).astype(np.float32)
+    return jnp.asarray(codes), jnp.asarray(scales), jnp.asarray(w)
+
+
+@pytest.mark.parametrize("n,p,block", [
+    (1, 128, 128),        # single client, single tile
+    (5, 5003, 2048),      # ragged param dim, default block
+    (37, 4096, 2048),     # multi-tile clients
+    (65, 300, 128),       # ragged client tile + small block
+    (256, 1024, 256),     # many clients
+])
+def test_weighted_sum_dequant_parity(n, p, block):
+    q, s, w = _quantized(n, p, block, np.random.default_rng(n * 1000 + p))
+    out = weighted_sum_dequant_pallas(q, s, w, block=block)
+    ref = weighted_sum_dequant_ref(q, s, w, block=block)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=1e-4)
+
+
+def test_weighted_sum_dequant_matches_dense_kernel():
+    """Folding the scales in-kernel must equal dequantizing first and
+    running the dense weighted-sum kernel."""
+    rng = np.random.default_rng(3)
+    q, s, w = _quantized(19, 6000, 2048, rng)
+    blk = 2048
+    nb = q.shape[1] // blk
+    dense = (np.asarray(q, np.float32).reshape(19, nb, blk)
+             * np.asarray(s)[:, :, None]).reshape(19, -1)
+    np.testing.assert_allclose(
+        weighted_sum_dequant_pallas(q, s, w),
+        weighted_sum_pallas(jnp.asarray(dense), w),
+        rtol=2e-5, atol=1e-4,
+    )
+
+
+def test_fedavg_fused_dequant_op():
+    rng = np.random.default_rng(5)
+    q, s, w = _quantized(9, 3000, 1024, rng)
+    out = fedavg_fused_dequant(q, s, w, block=1024)
+    ref = weighted_sum_dequant_ref(q, s, w, block=1024) / jnp.sum(w)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 40), nb=st.integers(1, 6), seed=st.integers(0, 999))
+def test_weighted_sum_dequant_property(n, nb, seed):
+    block = 128
+    q, s, w = _quantized(n, nb * block, block, np.random.default_rng(seed))
+    np.testing.assert_allclose(
+        weighted_sum_dequant_pallas(q, s, w, block=block),
+        weighted_sum_dequant_ref(q, s, w, block=block),
         rtol=1e-4, atol=1e-3,
     )
 
