@@ -1,0 +1,173 @@
+"""Streamed robust aggregation: the top-k carve vs the dense sort.
+
+Before PR 7 an order-statistic fusion (TrimmedMean / CoordMedian)
+forced every store round to materialize the dense (n, P) fp32 matrix
+on the host and sort it — at n=48 clients x P=100k params that is a
+~19 MB resident set per round, and it grows linearly with n. The
+streaming reducer protocol folds (chunk, P) blocks into an O(K*P)
+carry (running sum + per-coordinate top-k/bottom-k buffers), so host
+ingest is bounded by chunk*P + K*P regardless of n.
+
+Two identical TrimmedMean deployments over the same updates:
+
+  * dense    — the pre-PR path (forced via a 1-byte robust_state_budget:
+               the round falls back to read_stacked + full sort).
+  * streamed — the carve fold over (chunk, P) blocks.
+
+Reported per mode: warm-round rows/s, RoundReport.bytes_ingested, and
+PEAK HOST MEMORY during ``aggregate`` (tracemalloc — numpy staging
+allocations, exactly the ingest the carve is meant to bound). The two
+fused vectors must agree to fp32 tolerance; otherwise the comparison
+is meaningless.
+
+Acceptance: streamed peak host memory <= 0.6x dense at the main
+(n=48, P=100k) point AND max |streamed - dense| <= 1e-4. A second
+(n=256, P=20k) point shows the bound holding as n grows (the dense
+resident set scales with n; the carve carry does not).
+
+Emits BENCH_robust.json.
+
+Usage:
+  python benchmarks/robust_rounds.py --quick   # CI smoke (~20 s)
+  python benchmarks/robust_rounds.py           # full   (~1-2 min)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import tracemalloc
+
+import numpy as np
+
+from repro.core import AggregationService, UpdateStore
+from repro.core.fusion.robust import TrimmedMean
+
+
+def make_updates(n, p, seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, p)).astype(np.float32)
+
+
+def run_mode(streamed, u, rounds, chunk_bytes, beta):
+    """``rounds`` identical TrimmedMean store rounds on one service;
+    round 0 pays the compile, the rest time the warm hot path. The
+    dense mode forces the fallback with a 1-byte state budget."""
+    n, p = u.shape
+    store = UpdateStore()
+    svc = AggregationService(
+        fusion=TrimmedMean(beta=beta), local_strategy="jnp", store=store,
+        stream_chunk_bytes=chunk_bytes,
+        robust_state_budget=(64 << 20) if streamed else 1,
+    )
+    fuse_s, peaks, ingest_bytes, fused_rounds = [], [], [], []
+    for _ in range(rounds):
+        for i in range(n):
+            store.write(f"c{i:04d}", u[i])
+        tracemalloc.start()
+        fused, rep = svc.aggregate(from_store=True, expected_clients=n)
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        assert rep.streamed == streamed, rep.notes
+        fuse_s.append(rep.fuse_seconds)
+        peaks.append(peak)
+        ingest_bytes.append(rep.bytes_ingested)
+        fused_rounds.append(np.asarray(fused))
+        store.clear()
+    warm = fuse_s[1:] or fuse_s
+    fusion = svc.fusion
+    return {
+        "rows_per_s": n / float(np.median(warm)),
+        "warm_fuse_seconds": float(np.median(warm)),
+        "peak_host_bytes": int(np.median(peaks)),
+        "bytes_per_round": int(ingest_bytes[-1]),
+        "state_bytes_model": (
+            int(fusion.state_nbytes(p, n)) if streamed else 0
+        ),
+        "_fused_rounds": fused_rounds,
+    }
+
+
+def bench_point(n, p, rounds, seed, chunk_bytes, beta):
+    u = make_updates(n, p, seed)
+    dense = run_mode(False, u, rounds, chunk_bytes, beta)
+    stream = run_mode(True, u, rounds, chunk_bytes, beta)
+    errs = [
+        float(np.max(np.abs(sf - df)))
+        for sf, df in zip(stream["_fused_rounds"], dense["_fused_rounds"])
+    ]
+    for mode in (dense, stream):
+        del mode["_fused_rounds"]
+    mem_ratio = stream["peak_host_bytes"] / max(dense["peak_host_bytes"], 1)
+    speed_ratio = stream["rows_per_s"] / max(dense["rows_per_s"], 1e-9)
+    point = {
+        "n": n, "p": p, "rounds": rounds, "beta": beta,
+        "dense_matrix_bytes": int(n * p * 4),
+        "dense": dense, "streamed": stream,
+        "peak_memory_ratio": mem_ratio,
+        "rows_per_s_ratio": speed_ratio,
+        "max_fused_error": max(errs),
+        "matched": bool(max(errs) <= 1e-4),
+    }
+    print(f"n={n} P={p}: dense {dense['rows_per_s']:.0f} rows/s "
+          f"peak {dense['peak_host_bytes'] / 1e6:.1f} MB | streamed "
+          f"{stream['rows_per_s']:.0f} rows/s peak "
+          f"{stream['peak_host_bytes'] / 1e6:.1f} MB "
+          f"(carry model {stream['state_bytes_model'] / 1e6:.1f} MB) | "
+          f"mem {mem_ratio:.2f}x rows/s {speed_ratio:.2f}x "
+          f"err {max(errs):.2e} matched={point['matched']}")
+    return point
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--n", type=int, default=48)
+    ap.add_argument("--p", type=int, default=100_000)
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--beta", type=float, default=0.1)
+    # 4 MiB blocks: ~10 fp32 rows at P=100k, so the streamed resident
+    # set (chunk*P + K*P) sits well under the 19 MB dense matrix
+    ap.add_argument("--chunk-bytes", type=int, default=4 << 20)
+    ap.add_argument("--out", default="BENCH_robust.json")
+    args = ap.parse_args()
+    t0 = time.time()
+    if args.quick:
+        args.n, args.p, args.rounds = 16, 20_000, 3
+        args.chunk_bytes = 4 * args.p * 4  # 4-row blocks
+    points = [bench_point(args.n, args.p, args.rounds, args.seed,
+                          args.chunk_bytes, args.beta)]
+    if not args.quick:
+        # scaling with client count: the dense resident set grows with
+        # n, the carve carry does not
+        points.append(bench_point(256, 20_000, args.rounds, args.seed,
+                                  4 * 20_000 * 16, args.beta))
+    main_pt = points[0]
+    acceptance = (
+        main_pt["peak_memory_ratio"] <= 0.6
+        and all(pt["matched"] for pt in points)
+    )
+    print(f"acceptance={acceptance} "
+          f"(peak mem {main_pt['peak_memory_ratio']:.2f}x <= 0.6, "
+          f"matched to fp32 tolerance all points) "
+          f"wall {time.time()-t0:.1f}s")
+    payload = {
+        "benchmark": "robust_rounds",
+        "config": {
+            "n": args.n, "p": args.p, "rounds": args.rounds,
+            "beta": args.beta, "chunk_bytes": args.chunk_bytes,
+            "quick": args.quick,
+        },
+        "points": points,
+        "peak_memory_ratio": main_pt["peak_memory_ratio"],
+        "rows_per_s_ratio": main_pt["rows_per_s_ratio"],
+        "acceptance": bool(acceptance),
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -321,46 +321,55 @@ class DistributedEngine:
         return fn(u, w)
 
     # -- streaming: per-shard chunked ingest ----------------------------------
-    def _stream_key(self, fusion, chunk: int, P_: int, dtype):
+    def _stream_key(self, fusion, chunk: int, P_: int, dtype, sig):
         pc = chunk + (-chunk) % self._n_client_shards
         pad_p = (-P_) % (self._n_param_shards * self._n_client_shards)
         return ("stream", fusion_cache_key(fusion), pc, P_ + pad_p,
-                np.dtype(dtype).str, self.hierarchical)
+                np.dtype(dtype).str, self.hierarchical, sig)
 
-    def _dequant_key(self, chunk: int, P_: int, blk: int):
+    def _dequant_key(self, chunk: int, P_: int, blk: int, weighted: bool):
         pc = chunk + (-chunk) % self._n_client_shards
         Pq = -(-P_ // blk) * blk
         pad_p = (-P_) % (self._n_param_shards * self._n_client_shards)
-        return ("dequant", pc, Pq, blk, P_, P_ + pad_p)
+        return ("dequant", pc, Pq, blk, P_, P_ + pad_p, weighted)
 
     def is_warm_stream(self, fusion, chunk: int, P_: int, dtype,
-                       block: Optional[int] = None) -> bool:
+                       block: Optional[int] = None,
+                       n_hint: Optional[int] = None) -> bool:
         """Warm-path probe. ``dtype`` int8 probes the COMPRESSED route:
         the on-device dequant executable (at quantization block
         ``block``, default ``compress.BLOCK``) AND the fp32 fold step it
-        feeds — a compressed round is only warm with both."""
-        if not fusion.reducible:
+        feeds — a compressed round is only warm with both. ``n_hint``
+        sizes order-statistic carve state (its executables are keyed by
+        the carve capacity)."""
+        if not fusion.streamable:
+            return False
+        try:
+            sig = fusion.state_signature(P_, n_hint)
+        except ValueError:   # carve fusion with no n_hint: can't stream
             return False
         if np.dtype(dtype) == np.int8:
             blk = int(block) if block else BLOCK
             return (
-                self._dequant_key(chunk, P_, blk) in self.cache
-                and self._stream_key(fusion, chunk, P_, np.float32)
+                self._dequant_key(chunk, P_, blk, fusion.weighted)
+                in self.cache
+                and self._stream_key(fusion, chunk, P_, np.float32, sig)
                 in self.cache
             )
-        return self._stream_key(fusion, chunk, P_, dtype) in self.cache
+        return self._stream_key(fusion, chunk, P_, dtype, sig) in self.cache
 
-    def _dequant_fn(self, pc, Pq, blk, dim, pdim, q_ex, s_ex):
+    def _dequant_fn(self, pc, Pq, blk, dim, pdim, u_spec, weighted,
+                    q_ex, s_ex):
         """Cached on-device dequant executable for streamed compressed
         blocks: (codes (pc, Pq) int8, scales (pc, Pq//blk) fp32) ->
         (pc, pdim) fp32, output sharding-constrained to the step
-        executable's update layout — so the fp32 block exists only as a
-        device-side transient between two compiled artifacts, never on
-        the host, and mixed fp32/int8 rounds share ONE fold step and
-        ONE on-mesh accumulator."""
+        executable's update layout (``u_spec`` — client-sharded for the
+        sum path, client-replicated for the carve path) — so the fp32
+        block exists only as a device-side transient between two
+        compiled artifacts, never on the host, and mixed fp32/int8
+        rounds share ONE fold step and ONE on-mesh accumulator."""
         mesh = self.mesh
-        in_u = P(self._cspec(), self.param_axis)
-        key = ("dequant", pc, Pq, blk, dim, pdim)
+        key = ("dequant", pc, Pq, blk, dim, pdim, weighted)
 
         def build():
             def deq(q, s):
@@ -371,20 +380,31 @@ class DistributedEngine:
                 if pdim != dim:
                     u = jnp.pad(u, ((0, 0), (0, pdim - dim)))
                 return jax.lax.with_sharding_constraint(
-                    u, NamedSharding(mesh, in_u)
+                    u, NamedSharding(mesh, u_spec)
                 )
 
             return deq
 
         return self.cache.get(key, build, q_ex, s_ex)
 
+    def _leaf_spec(self, shape, pdim) -> P:
+        """Mesh placement for one reducer-state leaf by shape rule:
+        trailing param axis sharded over ``param_axis`` ((pdim,) and
+        (K, pdim) leaves), scalars replicated."""
+        if len(shape) == 0 or shape[-1] != pdim:
+            return P()
+        if len(shape) == 1:
+            return P(self.param_axis)
+        return P(*([None] * (len(shape) - 1) + [self.param_axis]))
+
     def fuse_stream(
         self,
         fusion: FusionAlgorithm,
         blocks: Iterable[Tuple[np.ndarray, ...]],
-        init: Optional[Tuple[np.ndarray, float]] = None,
+        init: Optional[tuple] = None,
         chunk_rows: Optional[int] = None,
         device_sem=None,
+        n_hint: Optional[int] = None,
     ) -> Tuple[jax.Array, StreamReport]:
         """Per-shard streaming ingest: fold (chunk, P) blocks (e.g. from
         ``UpdateStore.iter_chunks``) through ONE cached shard_map step
@@ -398,31 +418,47 @@ class DistributedEngine:
         the same fp32 fold step dense fp32 blocks use — mixed
         dense/compressed rounds (stragglers may be uncompressed) share
         one step and one on-mesh accumulator, and the fp32 matrix never
-        exists on the host. Block / ``init`` / ``chunk_rows``
-        semantics match ``LocalEngine.fuse_stream`` (numeric per-block
-        staleness scale; carried accumulator in/out via the StreamReport;
-        pass the configured ``chunk_rows`` so variable final blocks reuse
-        one executable — ``iter_arrivals`` yields client ids, adapt it
-        before streaming here; ``device_sem`` bounds concurrent device
-        execution across rounds sharing this engine, and all accumulator
-        state is per-call local so concurrent folds never cross)."""
-        if not fusion.reducible:
+        exists on the host. Block / ``init`` / ``chunk_rows`` /
+        ``n_hint`` semantics match ``LocalEngine.fuse_stream`` (numeric
+        per-block staleness scale; carried reducer state in/out via the
+        StreamReport; pass the configured ``chunk_rows`` so variable
+        final blocks reuse one executable — ``iter_arrivals`` yields
+        client ids, adapt it before streaming here; ``device_sem``
+        bounds concurrent device execution across rounds sharing this
+        engine, and all carry state is per-call local so concurrent
+        folds never cross).
+
+        Layouts per reducer family: the SUM path shards blocks
+        P(client_axes, param_axis) and psums partials (the historical
+        map-reduce); the order-statistic CARVE path shards blocks
+        P(None, param_axis) — every device along the client axes holds
+        all chunk rows for its coordinate slice and carves them locally,
+        no collective needed — with the (K, P) extreme buffers sharded
+        over the param axis, so per-device carry stays O(K * P/shards)."""
+        if not fusion.streamable:
             raise ValueError(
-                f"{fusion.name} is not reducible — streamed aggregation "
-                "needs a weighted-sum decomposition"
+                f"{fusion.name} is not streamable — streamed aggregation "
+                "needs a reducer decomposition (weighted sum or "
+                "order-statistic carve)"
             )
+        weighted = fusion.weighted
         mesh = self.mesh
         self.last_compile_seconds = 0.0
-        in_u = P(self._cspec(), self.param_axis)
-        in_w = P(self._cspec())
-        acc = P(self.param_axis)
+        if weighted:
+            in_u = P(self._cspec(), self.param_axis)
+            in_w = P(self._cspec())
+        else:
+            # carve path: replicate rows across client axes, shard coords
+            in_u = P(None, self.param_axis)
+            in_w = P(None)
         rep = StreamReport()
         sem = device_sem if device_sem is not None \
             else contextlib.nullcontext()
         it = iter(blocks)
         steps: dict = {}   # payload dtype -> cached fold step
         deqs: dict = {}    # (Pq, blk) -> cached dequant executable
-        wsum = tot = None
+        state = sig = None
+        leaf_specs = None
         chunk = dim = None
         pc = pdim = 0
         compile_total = 0.0
@@ -435,6 +471,11 @@ class DistributedEngine:
             rep.ingest_seconds += time.perf_counter() - t0
             block, w = item[0], item[1]
             scale = _check_scale(item[2]) if len(item) > 2 else None
+            if scale is not None and not weighted:
+                raise ValueError(
+                    f"{fusion.name}: per-row staleness scales are "
+                    "unsupported — order statistics cannot discount rows"
+                )
             compressed = isinstance(block, CompressedBlock)
             rows = block.rows if compressed else block.shape[0]
             bdim = block.dim if compressed else block.shape[1]
@@ -446,6 +487,7 @@ class DistributedEngine:
                 pdim = dim + (
                     (-dim) % (self._n_param_shards * self._n_client_shards)
                 )
+                sig = fusion.state_signature(dim, n_hint)
             elif bdim != dim:
                 raise ValueError(
                     f"fuse_stream: block dim {bdim} != stream dim {dim}"
@@ -456,14 +498,19 @@ class DistributedEngine:
                     f"chunk_rows={chunk}"
                 )
             rep.ingest_bytes += int(block.nbytes)   # pre-padding payload
-            wpad = np.zeros((pc,), np.float32)
-            wpad[:rows] = w
-            w_eff = np.array(
-                fusion.effective_weights(jnp.asarray(wpad, jnp.float32))
-            )
-            if scale is not None:
-                w_eff[:rows] *= np.asarray(scale, np.float32)[:rows]
-            w_eff[rows:] = 0.0             # effective_weights may remap pads
+            if weighted:
+                wpad = np.zeros((pc,), np.float32)
+                wpad[:rows] = w
+                w_eff = np.array(
+                    fusion.effective_weights(jnp.asarray(wpad, jnp.float32))
+                )
+                if scale is not None:
+                    w_eff[:rows] *= np.asarray(scale, np.float32)[:rows]
+                w_eff[rows:] = 0.0         # effective_weights may remap pads
+            else:
+                # order-statistic fold: weights carry only row VALIDITY
+                w_eff = np.zeros((pc,), np.float32)
+                w_eff[:rows] = 1.0
             t0 = time.perf_counter()
             if compressed:
                 # host staging at the COMPRESSED size; the fp32 block
@@ -477,13 +524,14 @@ class DistributedEngine:
                     spad[:rows] = block.scales
                 else:
                     qpad, spad = block.codes, block.scales
-                cspec2 = P(self._cspec(), None)
+                cspec2 = P(self._cspec(), None) if weighted else P(None, None)
                 q_dev = _device_put(mesh, qpad, cspec2)
                 s_dev = _device_put(mesh, spad, cspec2)
                 deq = deqs.get((Pq, blk))
                 if deq is None:
                     deq, c_s = self._dequant_fn(
-                        pc, Pq, blk, dim, pdim, q_dev, s_dev
+                        pc, Pq, blk, dim, pdim, in_u, weighted, q_dev,
+                        s_dev,
                     )
                     deqs[(Pq, blk)] = deq
                     compile_total += c_s
@@ -498,25 +546,41 @@ class DistributedEngine:
                 dtype = np.dtype(block.dtype)
             w_dev = _device_put(mesh, jnp.asarray(w_eff, jnp.float32), in_w)
             rep.ingest_seconds += time.perf_counter() - t0
-            if wsum is None:
-                wsum0, tot0 = self._stream_carry(pdim, dim, init)
-                wsum = _device_put(mesh, wsum0, acc)
-                tot = _device_put(mesh, tot0, P())
+            if state is None:
+                host_state = self._stream_state_host(fusion, dim, pdim,
+                                                     n_hint, init)
+                leaf_specs = tuple(
+                    self._leaf_spec(np.shape(x), pdim) for x in host_state
+                )
+                state = tuple(
+                    _device_put(mesh, x, s)
+                    for x, s in zip(host_state, leaf_specs)
+                )
             step = steps.get(dtype.str)
             if step is None:
                 def build():
-                    def step_fn(u, wv, ws, t):
-                        dws, dt_ = self._partials(fusion, u, wv)
-                        return ws + dws, t + dt_
+                    def step_fn(u, wv, *leaves):
+                        st = tuple(leaves)
+                        if fusion.reducible:
+                            partial = lambda uu, ww: self._partials(
+                                fusion, uu, ww)
+                            new = fusion.fold_block(st, u, wv,
+                                                    partial=partial)
+                        else:
+                            # local carve per coordinate shard — rows are
+                            # replicated across client axes, no collective
+                            new = fusion.fold_block(st, u, wv)
+                        return tuple(new)
 
                     return shard_map(
-                        step_fn, mesh=mesh, in_specs=(in_u, in_w, acc, P()),
-                        out_specs=(acc, P()), check_vma=False,
+                        step_fn, mesh=mesh,
+                        in_specs=(in_u, in_w) + leaf_specs,
+                        out_specs=leaf_specs, check_vma=False,
                     )
 
                 step, compile_s = self.cache.get(
-                    self._stream_key(fusion, chunk, dim, dtype),
-                    build, u_dev, w_dev, wsum, tot,
+                    self._stream_key(fusion, chunk, dim, dtype, sig),
+                    build, u_dev, w_dev, *state,
                 )
                 steps[dtype.str] = step
                 # mixed rounds accumulate one compile per payload kind
@@ -525,44 +589,64 @@ class DistributedEngine:
             self.last_compile_seconds = compile_total
             t0 = time.perf_counter()
             with sem:
-                wsum, tot = step(u_dev, w_dev, wsum, tot)
+                state = step(u_dev, w_dev, *state)
                 if device_sem is not None:
                     # async dispatch must not escape the execution bound
-                    jax.block_until_ready((wsum, tot))
+                    jax.block_until_ready(state)
             rep.compute_seconds += time.perf_counter() - t0
             rep.n_rows += rows
             rep.n_blocks += 1
         if rep.n_blocks == 0:
             if init is None:
                 raise ValueError("fuse_stream: empty block iterator")
-            # carry-only round: nothing arrived, combine the carried sums
-            dim = int(np.shape(init[0])[0])
-            wsum = jnp.asarray(init[0], jnp.float32)
-            tot = jnp.asarray(init[1], jnp.float32)
+            # carry-only round: nothing arrived, finalize the carried state
+            dim = int(np.shape(init[0])[-1])
+            state = tuple(jnp.asarray(x, jnp.float32) for x in init)
+            pdim = dim
         t0 = time.perf_counter()
-        rep.acc_wsum = np.asarray(wsum)[:dim]
-        rep.acc_tot = float(np.asarray(tot))
+        # slice param-padded leaves back to the real dim BEFORE finalize:
+        # padded coordinates carry garbage (inf sentinels on the carve
+        # path) that must never reach the finalize arithmetic
+        host_leaves = tuple(np.asarray(x) for x in state)
+        sliced = tuple(
+            x[..., :dim] if x.ndim and x.shape[-1] == pdim else x
+            for x in host_leaves
+        )
+        rep.acc_state = sliced
+        if fusion.reducible:
+            rep.acc_wsum = sliced[0]
+            rep.acc_tot = float(sliced[1])
         with sem:
-            fused = jax.block_until_ready(fusion.combine(wsum, tot)[:dim])
+            fused = jax.block_until_ready(fusion.finalize(sliced))
         rep.compute_seconds += time.perf_counter() - t0
         return fused, rep
 
-    @staticmethod
-    def _stream_carry(padded_dim, dim, init):
-        """Initial (wsum, tot) host arrays, zero-padded to the shard
-        multiple so carried accumulators re-shard cleanly."""
-        wsum = np.zeros((padded_dim,), np.float32)
-        tot = 0.0
+    def _stream_state_host(self, fusion, dim, pdim, n_hint, init):
+        """Initial reducer state as host arrays, zero-padded on the
+        param axis to the shard multiple so carried state re-shards
+        cleanly (padded coords are sliced off before finalize)."""
+        proto = tuple(fusion.init_state(dim, n_hint))
         if init is not None:
-            carried = np.asarray(init[0], np.float32)
-            if carried.shape != (dim,):
+            if len(init) != len(proto):
                 raise ValueError(
-                    f"fuse_stream: carried accumulator has shape "
-                    f"{carried.shape}, stream blocks have dim {dim}"
+                    f"fuse_stream: carried state has {len(init)} leaves, "
+                    f"{fusion.name} expects {len(proto)}"
                 )
-            wsum[:dim] = carried
-            tot = float(init[1])
-        return wsum, np.float32(tot)
+            for x, p in zip(init, proto):
+                if np.shape(x) != np.shape(p):
+                    raise ValueError(
+                        f"fuse_stream: carried accumulator has shape "
+                        f"{np.shape(x)}, stream blocks have dim {dim}"
+                    )
+            proto = tuple(np.asarray(x, np.float32) for x in init)
+        out = []
+        for leaf in proto:
+            leaf = np.asarray(leaf, np.float32)
+            if leaf.ndim and leaf.shape[-1] == dim and pdim != dim:
+                pad = [(0, 0)] * (leaf.ndim - 1) + [(0, pdim - dim)]
+                leaf = np.pad(leaf, pad)
+            out.append(leaf)
+        return tuple(out)
 
     # -- cache plumbing -------------------------------------------------------
     def _key_get(self, fusion, padded_updates, n_real, build, *concrete):

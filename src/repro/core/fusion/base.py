@@ -19,15 +19,57 @@ Two capability flags drive engine selection (paper §III-D):
 Algorithms that are neither (Krum, Zeno, geometric median) expose
 ``pairwise_stats``/``score``-style hooks used by the distributed engine to
 compute partial statistics locally and combine with ``psum``.
+
+Streaming reducer protocol
+--------------------------
+
+Engines stream rounds by folding (chunk, P) blocks into a fusion-owned
+carry state instead of materializing the (n, P) matrix. The contract:
+
+* ``streamable``  — capability flag: the fusion can fold blocks into a
+  bounded carry state (defaults to ``reducible``).
+* ``weighted``    — the fold consumes real client weights / staleness
+  scales. Order-statistic reducers set this False: the engine passes a
+  0/1 validity row instead and per-row scales are rejected.
+* ``init_state(dim, n_hint)``  -> state pytree of jnp leaves.
+* ``fold_block(state, payload, weights, scale)``  -> state. Runs inside
+  the engine's AOT-compiled step executable; ``partial``/``carve``
+  kwargs let an engine inject its strategy-specific implementation
+  (Pallas weighted-sum / top-k carve kernels) without owning semantics.
+* ``finalize(state)``  -> (P,). Runs OUTSIDE compiled artifacts (server
+  optimizer state mutation, data-dependent trim counts live here).
+* ``state_signature(dim, n_hint)`` — hashable tuple mixed into the
+  engines' compile-cache keys so carry-state shapes key executables.
+* ``state_nbytes(dim, n_hint)`` — carry footprint, for the service's
+  robust state budget gate.
+* ``discount_state(state, gamma)`` — staleness discount of a carried
+  state between async rounds; only weighted (sum) states support it.
+
+For the reducible family the state is exactly the historical
+``(weighted_sum, weight_sum)`` tuple and finalize is ``combine``, so
+streamed results stay bit-identical with the pre-protocol engines.
 """
 from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Optional
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+def dequant_payload(payload, dim: int) -> jnp.ndarray:
+    """In-trace dequantization of a compressed (codes, scales) payload to
+    a dense (rows, dim) fp32 block. codes: (rows, nblocks*blk) int8;
+    scales: (rows, nblocks) fp32. Matches CompressedBlock.dequantize."""
+    codes, scales = payload
+    rows, pq = codes.shape
+    nblocks = scales.shape[1]
+    blk = pq // nblocks
+    u = codes.astype(jnp.float32).reshape(rows, nblocks, blk)
+    u = (u * scales[:, :, None]).reshape(rows, pq)
+    return u[:, :dim]
 
 
 class FusionAlgorithm(abc.ABC):
@@ -36,6 +78,11 @@ class FusionAlgorithm(abc.ABC):
     name: str = "base"
     reducible: bool = False
     coordinatewise: bool = False
+
+    # the streamed fold consumes real client weights (and staleness
+    # scales). Order-statistic reducers override to False: the engine
+    # then passes a 0/1 validity row and rejects per-row scales.
+    weighted: bool = True
 
     # set when per-client full-row norms are needed before the weighted sum
     # (e.g. ClippedAvg) — the distributed engine psums squared norms across
@@ -63,6 +110,69 @@ class FusionAlgorithm(abc.ABC):
     def combine(self, weighted_sum: jnp.ndarray, weight_sum: jnp.ndarray):
         """Final 'reduce' stage after summing partials across shards."""
         raise NotImplementedError(f"{self.name} is not reducible")
+
+    # -- streaming reducer protocol ---------------------------------------
+    @property
+    def streamable(self) -> bool:
+        """Whether the fusion can fold streamed blocks into a bounded
+        carry state. Sum-reducible fusions stream by construction."""
+        return self.reducible
+
+    def init_state(self, dim: int, n_hint: Optional[int] = None):
+        """Fresh carry state for a streamed round over ``dim`` params.
+        ``n_hint`` is the expected client count — order-statistic
+        reducers size their top-k buffers from it."""
+        if not self.reducible:
+            raise NotImplementedError(f"{self.name} is not streamable")
+        del n_hint
+        return (jnp.zeros((dim,), jnp.float32), jnp.zeros((), jnp.float32))
+
+    def fold_block(self, state, payload, weights, scale=None, *,
+                   partial: Optional[Callable] = None,
+                   carve: Optional[Callable] = None):
+        """Fold one (rows, P) block (dense array or compressed
+        (codes, scales) payload) into ``state``. ``weights`` is the
+        per-row weight vector — a 0/1 validity row for unweighted
+        fusions. ``scale`` is a scalar staleness discount applied to
+        this block's contribution (weighted fusions fold it into the
+        weights before calling). ``partial``/``carve`` are optional
+        engine-supplied kernels."""
+        del carve, scale
+        if not self.reducible:
+            raise NotImplementedError(f"{self.name} is not streamable")
+        fn = partial if partial is not None else self.partial
+        if isinstance(payload, tuple) and partial is None:
+            payload = dequant_payload(payload, state[0].shape[0])
+        wsum, tot = fn(payload, weights)
+        return (state[0] + wsum, state[1] + tot)
+
+    def finalize(self, state) -> jnp.ndarray:
+        """Carry state -> fused (P,). Runs outside compiled artifacts."""
+        if not self.reducible:
+            raise NotImplementedError(f"{self.name} is not streamable")
+        return self.combine(state[0], state[1])
+
+    def state_signature(self, dim: int,
+                        n_hint: Optional[int] = None) -> Tuple:
+        """Hashable description of the carry state's shapes, mixed into
+        engine compile-cache keys."""
+        if not self.reducible:
+            raise NotImplementedError(f"{self.name} is not streamable")
+        del n_hint
+        return ("sum", dim)
+
+    def state_nbytes(self, dim: int, n_hint: Optional[int] = None) -> int:
+        """Bytes of carry state for a streamed round (budget gate)."""
+        if not self.reducible:
+            raise NotImplementedError(f"{self.name} is not streamable")
+        del n_hint
+        return 4 * (dim + 1)
+
+    def discount_state(self, state, gamma: float):
+        """Staleness-discount a carried state between async rounds."""
+        if not self.reducible:
+            raise NotImplementedError(f"{self.name} is not streamable")
+        return (gamma * state[0], gamma * state[1])
 
     def __repr__(self) -> str:
         return f"<fusion:{self.name}>"

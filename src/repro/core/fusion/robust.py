@@ -13,6 +13,26 @@ Distribution notes: median/trimmed-mean are ``coordinatewise`` (the
 distributed engine re-shards coordinates). Krum/Zeno/geomed expose partial
 statistics that are psum-reducible across parameter shards (pairwise Gram
 blocks / score terms), so no device ever needs a full update row.
+
+Streaming (the reducer protocol in ``base.py``): trimmed mean and median
+stream EXACTLY via per-coordinate top-k/bottom-k carving. The carry is
+``(sum (P,), count (), topk (K, P), botk (K, P))`` — running column sum
+plus the K largest and K smallest values seen per coordinate — and
+
+    trimmed_mean = (sum - sum(top_k) - sum(bot_k)) / (n - 2k)
+
+with k = trim_count(n) <= K. The median is the same carve with
+k = (n-1)//2: one survivor for odd n, the mean of the two central
+values for even n — identical to ``jnp.median``. O(K*P) carry instead
+of O(n*P) dense. K is sized from ``n_hint`` at ``init_state``;
+``finalize`` clamps k = min(trim_count(count), K) so async rounds that
+close with a different arrival count stay well-defined.
+
+Sentinel safety: ``topk`` is ascending and initialized to -inf (real
+values fill from the END), ``botk`` ascending initialized to +inf (real
+values fill from the START). After folding ``count`` real rows, the
+slices ``topk[K-k:]`` / ``botk[:k]`` hold only real values whenever
+k <= count, so sentinels never reach the finalize arithmetic.
 """
 from __future__ import annotations
 
@@ -21,12 +41,105 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.fusion.base import EPS, FusionAlgorithm
+from repro.core.fusion.base import EPS, FusionAlgorithm, dequant_payload
 
 
-class CoordMedian(FusionAlgorithm):
+def carve_merge(block, valid, ssum, topk, botk):
+    """Reference fold: merge a (rows, P) block into the carried
+    per-coordinate extremes. ``valid`` is the (rows,) 0/1 row mask
+    (0 = padded row). Returns updated (ssum, topk, botk). The Pallas
+    kernel in ``kernels/robust_fusion`` computes the same merge tiled."""
+    u = block.astype(jnp.float32)
+    k_cap = topk.shape[0]
+    vm = (valid > 0)[:, None]
+    ssum = ssum + jnp.sum(jnp.where(vm, u, 0.0), axis=0)
+    hi = jnp.where(vm, u, -jnp.inf)
+    topk = jnp.sort(jnp.concatenate([topk, hi], axis=0), axis=0)[-k_cap:]
+    lo = jnp.where(vm, u, jnp.inf)
+    botk = jnp.sort(jnp.concatenate([botk, lo], axis=0), axis=0)[:k_cap]
+    return ssum, topk, botk
+
+
+class _CarveStream:
+    """Streaming mixin for order-statistic (carve) reducers. Subclasses
+    define ``trim_count(n)`` — how many extremes to drop per side."""
+
+    weighted = False
+
+    @property
+    def streamable(self) -> bool:
+        return True
+
+    def trim_count(self, n: int) -> int:
+        raise NotImplementedError
+
+    def _capacity(self, n_hint: int) -> int:
+        return max(int(self.trim_count(int(n_hint))), 1)
+
+    def init_state(self, dim, n_hint=None):
+        if n_hint is None:
+            raise ValueError(
+                f"{self.name}: streaming needs n_hint (expected client "
+                "count) to size the top-k carve buffers")
+        k_cap = self._capacity(n_hint)
+        return (
+            jnp.zeros((dim,), jnp.float32),
+            jnp.zeros((), jnp.float32),
+            jnp.full((k_cap, dim), -jnp.inf, jnp.float32),
+            jnp.full((k_cap, dim), jnp.inf, jnp.float32),
+        )
+
+    def fold_block(self, state, payload, weights, scale=None, *,
+                   partial=None, carve=None):
+        del partial
+        if scale is not None:
+            raise ValueError(
+                f"{self.name}: order statistics cannot discount rows — "
+                "staleness scales are unsupported")
+        ssum, cnt, topk, botk = state
+        if isinstance(payload, tuple):
+            payload = dequant_payload(payload, ssum.shape[0])
+        fn = carve if carve is not None else carve_merge
+        ssum, topk, botk = fn(payload, weights, ssum, topk, botk)
+        cnt = cnt + jnp.sum(weights)
+        return (ssum, cnt, topk, botk)
+
+    def finalize(self, state):
+        ssum, cnt, topk, botk = state
+        n = int(cnt)
+        if n <= 0:
+            raise ValueError(f"{self.name}: empty round (count == 0)")
+        k_cap = topk.shape[0]
+        k = min(int(self.trim_count(n)), k_cap)
+        s = ssum
+        if k > 0:
+            s = s - jnp.sum(topk[k_cap - k:], axis=0)
+            s = s - jnp.sum(botk[:k], axis=0)
+        return s / float(n - 2 * k)
+
+    def state_signature(self, dim, n_hint=None):
+        if n_hint is None:
+            raise ValueError(f"{self.name}: state_signature needs n_hint")
+        return ("carve", dim, self._capacity(n_hint))
+
+    def state_nbytes(self, dim, n_hint=None) -> int:
+        if n_hint is None:
+            raise ValueError(f"{self.name}: state_nbytes needs n_hint")
+        return 4 * (dim * (1 + 2 * self._capacity(n_hint)) + 1)
+
+    def discount_state(self, state, gamma):
+        raise ValueError(
+            f"{self.name}: carried order-statistic state cannot be "
+            "staleness-discounted")
+
+
+class CoordMedian(_CarveStream, FusionAlgorithm):
     name = "coordmedian"
     coordinatewise = True
+
+    def trim_count(self, n: int) -> int:
+        # median == trimmed mean that drops all but the central 1 or 2
+        return max((int(n) - 1) // 2, 0)
 
     def fuse(self, updates, weights):
         del weights
@@ -34,17 +147,23 @@ class CoordMedian(FusionAlgorithm):
 
 
 @dataclasses.dataclass
-class TrimmedMean(FusionAlgorithm):
+class TrimmedMean(_CarveStream, FusionAlgorithm):
     """Drop the beta-fraction largest and smallest per coordinate."""
 
     beta: float = 0.1
     name = "trimmedmean"
     coordinatewise = True
 
+    def trim_count(self, n: int) -> int:
+        # clamp so 2k < n: int(n*beta) can otherwise empty the slice
+        # (n=4, beta=0.5 -> k=2 -> mean of zero rows -> NaN)
+        n = int(n)
+        return max(min(int(n * self.beta), (n - 1) // 2), 0)
+
     def fuse(self, updates, weights):
         del weights
         n = updates.shape[0]
-        k = int(n * self.beta)
+        k = self.trim_count(n)
         s = jnp.sort(updates.astype(jnp.float32), axis=0)
         if k > 0:
             s = s[k: n - k]
@@ -97,7 +216,18 @@ class Zeno(FusionAlgorithm):
         self._g_val = None
 
     def set_val_grad(self, g_val: jnp.ndarray) -> None:
+        """Bind g_val IN PLACE. Mutates shared state — under concurrent
+        tenants prefer ``with_val_grad`` (or the service's per-call
+        ``aggregate(val_grad=...)``), which never touches this instance."""
         self._g_val = g_val
+
+    def with_val_grad(self, g_val) -> "Zeno":
+        """Return a clone with ``g_val`` bound, leaving this instance
+        untouched (safe under concurrent multi-tenant rounds)."""
+        clone = dataclasses.replace(self)
+        clone._g_val = (None if g_val is None
+                        else jnp.asarray(g_val, jnp.float32))
+        return clone
 
     def scores(self, inner: jnp.ndarray, sqnorm: jnp.ndarray) -> jnp.ndarray:
         """inner: (n,) <u_i, g_val>; sqnorm: (n,) ||u_i||^2."""

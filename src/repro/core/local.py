@@ -44,6 +44,7 @@ from repro.kernels.fused_fusion.kernel import (
 )
 from repro.kernels.robust_fusion.kernel import (
     coordmedian_pallas,
+    topk_carve_pallas,
     trimmedmean_pallas,
 )
 from repro.utils.jitcache import CompiledCache, bucket_rows, fusion_cache_key
@@ -81,8 +82,11 @@ class StreamReport:
     # actual payload bytes ingested (pre-padding; codes + scales for
     # compressed blocks) — what RoundReport.bytes_ingested reports
     ingest_bytes: int = 0
-    # pre-combine accumulator state, so async rounds can carry partial
-    # sums into the next round (continuous aggregation): (P,) fp32 / scalar
+    # pre-finalize carry state (flat tuple of np arrays, the fusion's
+    # reducer-state pytree) so async rounds can carry it forward
+    acc_state: Optional[tuple] = None
+    # the sum-family view of acc_state, kept populated for reducible
+    # fusions (back-compat with callers that carry (wsum, tot) directly)
     acc_wsum: Optional[np.ndarray] = None
     acc_tot: float = 0.0
 
@@ -141,12 +145,25 @@ class LocalEngine:
         if self.memory_cap_bytes is not None:
             max_rows = max(int(self.memory_cap_bytes // max(batch_bytes, 1)), 1)
             if max_rows < n:
-                if not fusion.reducible:
+                if not fusion.streamable:
                     raise MemoryError(
                         f"{fusion.name}: {n} updates x {batch_bytes} B exceed "
                         f"the {self.memory_cap_bytes} B cap and the fusion "
                         "is not streamable — classify as DISTRIBUTED"
                     )
+                if not fusion.reducible:
+                    # order-statistic reducer: chunk the dense input
+                    # through the streamed carve fold (bounded carry)
+                    def chunks():
+                        for i in range(0, n, max_rows):
+                            yield updates[i: i + max_rows], \
+                                weights[i: i + max_rows]
+
+                    fused, _ = self.fuse_stream(
+                        fusion, chunks(), chunk_rows=max_rows,
+                        device_sem=device_sem, n_hint=n,
+                    )
+                    return fused
                 return self._streamed(fusion, updates, weights, max_rows,
                                       device_sem)
 
@@ -160,7 +177,7 @@ class LocalEngine:
                     device_sem,
                 )
         if self.strategy == "pallas" and fusion.name == "trimmedmean":
-            trim = int(n * fusion.beta)
+            trim = fusion.trim_count(n)
             with sem:
                 return self._bounded(
                     trimmedmean_pallas(updates, trim,
@@ -182,16 +199,24 @@ class LocalEngine:
         self,
         fusion: FusionAlgorithm,
         blocks: Iterable[Tuple[np.ndarray, ...]],
-        init: Optional[Tuple[np.ndarray, float]] = None,
+        init: Optional[tuple] = None,
         chunk_rows: Optional[int] = None,
         device_sem=None,
+        n_hint: Optional[int] = None,
     ) -> Tuple[jnp.ndarray, StreamReport]:
-        """Fuse a reducible fusion from an iterator of (chunk, P) blocks
+        """Fuse a streamable fusion from an iterator of (chunk, P) blocks
         (e.g. ``UpdateStore.iter_chunks``; ``iter_arrivals`` yields client
         ids as its third element, so adapt it — the AggregationService
         async round does — rather than feeding it here directly) without
         ever holding the dense matrix: one cached step executable folds
-        each block into a (P,) fp32 accumulator.
+        each block into the fusion's reducer carry state (the reducer
+        protocol in ``fusion/base.py``) — a (P,) fp32 weighted-sum pair
+        for the reducible family, the O(K*P) top-k carve state for
+        order-statistic fusions. ``n_hint`` (the expected client count)
+        sizes order-statistic carve buffers; reducible fusions ignore it.
+        Order-statistic (``fusion.weighted == False``) streams ignore
+        client weights — the engine passes a 0/1 validity row — and
+        reject per-row staleness scales with a ValueError.
 
         Blocks are ``(updates, weights)`` or ``(updates, weights, scale)``
         — the optional NUMERIC (c,) ``scale`` multiplies the EFFECTIVE
@@ -210,9 +235,11 @@ class LocalEngine:
         pass the configured chunk so elastic/async rounds whose LAST block
         varies still hit one cached executable — the key
         ``is_warm_stream`` probes. Unset, the first block's size is used.
-        ``init`` seeds the accumulator with a previous round's
-        (wsum, tot) — the async carry-over; the final pre-combine
-        accumulator is returned on the report (``acc_wsum``/``acc_tot``).
+        ``init`` seeds the carry state with a previous round's
+        ``acc_state`` — the async carry-over; for reducible fusions this
+        is the historical (wsum, tot) tuple. The final pre-finalize state
+        is returned on the report (``acc_state``, plus
+        ``acc_wsum``/``acc_tot`` for reducible fusions).
         ``device_sem`` (optional semaphore / context manager) bounds
         concurrent DEVICE execution when several rounds stream through
         one engine at once: each block's step and the final combine
@@ -221,21 +248,23 @@ class LocalEngine:
         hardware only runs the configured number of folds at a time.
         Returns (fused, StreamReport).
 
-        All accumulator state (``wsum``/``tot``/``step``) is per-call
-        local: concurrent ``fuse_stream`` calls on one shared engine
-        never cross their folds (only the compile cache is shared, and
-        it is single-flight per key)."""
-        if not fusion.reducible:
+        All carry state (``state``/``step``) is per-call local:
+        concurrent ``fuse_stream`` calls on one shared engine never
+        cross their folds (only the compile cache is shared, and it is
+        single-flight per key)."""
+        if not fusion.streamable:
             raise ValueError(
-                f"{fusion.name} is not reducible — streamed aggregation "
-                "needs a weighted-sum decomposition"
+                f"{fusion.name} is not streamable — streamed aggregation "
+                "needs a reducer decomposition (weighted sum or "
+                "order-statistic carve)"
             )
+        weighted = fusion.weighted
         rep = StreamReport()
         sem = device_sem if device_sem is not None \
             else contextlib.nullcontext()
         it = iter(blocks)
         steps: dict = {}   # payload kind -> cached step executable
-        wsum = tot = None
+        state = sig = None  # flat tuple of jnp leaves + its cache sig
         chunk = dim = None
         compile_total = 0.0
         self.last_compile_seconds = 0.0
@@ -248,6 +277,11 @@ class LocalEngine:
             rep.ingest_seconds += time.perf_counter() - t0
             block, w = item[0], item[1]
             scale = _check_scale(item[2]) if len(item) > 2 else None
+            if scale is not None and not weighted:
+                raise ValueError(
+                    f"{fusion.name}: per-row staleness scales are "
+                    "unsupported — order statistics cannot discount rows"
+                )
             compressed = isinstance(block, CompressedBlock)
             rows = block.rows if compressed else block.shape[0]
             bdim = block.dim if compressed else block.shape[1]
@@ -255,7 +289,8 @@ class LocalEngine:
                 dim = bdim
                 chunk = int(chunk_rows) if chunk_rows else rows
                 rep.chunk_rows = chunk
-                wsum, tot = self._stream_init(dim, init)
+                state = self._stream_state(fusion, dim, n_hint, init)
+                sig = fusion.state_signature(dim, n_hint)
             elif bdim != dim:
                 raise ValueError(
                     f"fuse_stream: block dim {bdim} != stream dim {dim}"
@@ -265,14 +300,19 @@ class LocalEngine:
                 else ("d", np.dtype(block.dtype).str)
             step = steps.get(kind)
             if step is None:
+                avals = tuple(
+                    jax.ShapeDtypeStruct(np.shape(leaf),
+                                         np.asarray(leaf).dtype)
+                    for leaf in state
+                )
                 if compressed:
                     step, compile_s = self._stream_step_q(
                         fusion, chunk, dim, block.codes.shape[1],
-                        block.block,
+                        block.block, sig, avals,
                     )
                 else:
                     step, compile_s = self._stream_step(
-                        fusion, chunk, dim, block.dtype
+                        fusion, chunk, dim, block.dtype, sig, avals,
                     )
                 steps[kind] = step
                 # mixed rounds accumulate one compile per payload kind
@@ -301,52 +341,69 @@ class LocalEngine:
                     padded = np.zeros((chunk, dim), block.dtype)
                     padded[:rows] = block
                     block = padded
-            w = np.array(
-                fusion.effective_weights(jnp.asarray(w, jnp.float32))
-            )
-            if scale is not None:
-                w[:rows] *= np.asarray(scale, np.float32)[:rows]
-            if rows < chunk:
-                w[rows:] = 0.0         # effective_weights may remap pads
+            if weighted:
+                w = np.array(
+                    fusion.effective_weights(jnp.asarray(w, jnp.float32))
+                )
+                if scale is not None:
+                    w[:rows] *= np.asarray(scale, np.float32)[:rows]
+                if rows < chunk:
+                    w[rows:] = 0.0     # effective_weights may remap pads
+            else:
+                # order-statistic fold: weights carry only row VALIDITY
+                w = np.zeros((chunk,), np.float32)
+                w[:rows] = 1.0
             t0 = time.perf_counter()
             with sem:
                 if compressed:
-                    wsum, tot = step(block.codes, block.scales, w, wsum,
-                                     tot)
+                    state = step(block.codes, block.scales, w, *state)
                 else:
-                    wsum, tot = step(block, w, wsum, tot)
+                    state = step(block, w, *state)
                 if device_sem is not None:
                     # dispatch is async: holding the semaphore only
                     # bounds execution if we wait for it (single-tenant
                     # rounds skip the sync and keep the pipeline deep)
-                    jax.block_until_ready((wsum, tot))
+                    jax.block_until_ready(state)
             rep.compute_seconds += time.perf_counter() - t0
             rep.n_rows += rows
             rep.n_blocks += 1
         if rep.n_blocks == 0:
             if init is None:
                 raise ValueError("fuse_stream: empty block iterator")
-            # carry-only round: nothing arrived, combine the carried sums
-            wsum, tot = self._stream_init(init[0].shape[0], init)
+            # carry-only round: nothing arrived, finalize the carried state
+            state = tuple(jnp.asarray(x, jnp.float32) for x in init)
         t0 = time.perf_counter()
-        rep.acc_wsum = np.asarray(wsum)
-        rep.acc_tot = float(tot)
+        rep.acc_state = tuple(np.asarray(leaf) for leaf in state)
+        if fusion.reducible:
+            rep.acc_wsum = rep.acc_state[0]
+            rep.acc_tot = float(rep.acc_state[1])
         with sem:
-            fused = jax.block_until_ready(fusion.combine(wsum, tot))
+            fused = jax.block_until_ready(fusion.finalize(state))
         rep.compute_seconds += time.perf_counter() - t0
         return fused, rep
 
     @staticmethod
-    def _stream_init(dim, init):
+    def _stream_state(fusion, dim, n_hint, init):
+        """Fresh (or carried) reducer state as a flat tuple of jnp
+        leaves. Carried leaves must match the fresh state's shapes."""
+        proto = tuple(fusion.init_state(dim, n_hint))
         if init is None:
-            return jnp.zeros((dim,), jnp.float32), jnp.zeros((), jnp.float32)
-        wsum = jnp.asarray(init[0], jnp.float32)
-        if wsum.shape != (dim,):
+            return proto
+        if len(init) != len(proto):
             raise ValueError(
-                f"fuse_stream: carried accumulator has dim {wsum.shape}, "
-                f"stream blocks have dim {dim}"
+                f"fuse_stream: carried state has {len(init)} leaves, "
+                f"{fusion.name} expects {len(proto)}"
             )
-        return wsum, jnp.asarray(init[1], jnp.float32)
+        state = tuple(
+            jnp.asarray(x, np.asarray(p).dtype) for x, p in zip(init, proto)
+        )
+        for got, want in zip(state, proto):
+            if got.shape != want.shape:
+                raise ValueError(
+                    f"fuse_stream: carried accumulator has dim "
+                    f"{got.shape}, stream blocks have dim {dim}"
+                )
+        return state
 
     # -- cache introspection (planner reuse term) -----------------------------
     def is_warm(self, fusion, n: int, P: int, dtype) -> bool:
@@ -361,31 +418,39 @@ class LocalEngine:
         return self._dense_key(fusion, n, P, dtype) in self.cache
 
     def is_warm_stream(self, fusion, chunk: int, P: int, dtype,
-                       block: Optional[int] = None) -> bool:
+                       block: Optional[int] = None,
+                       n_hint: Optional[int] = None) -> bool:
         """Warm-path probe for the streamed step executable. ``dtype``
         int8 probes the COMPRESSED step (int8 codes + fp32 scales at
         quantization block ``block``, default ``compress.BLOCK``) —
-        the key a compressed round's first fold would build."""
-        if not fusion.reducible:
+        the key a compressed round's first fold would build. ``n_hint``
+        matters for order-statistic fusions, whose carve-state capacity
+        (and hence executable) is sized from it."""
+        if not fusion.streamable:
+            return False
+        try:
+            sig = fusion.state_signature(P, n_hint)
+        except ValueError:   # carve fusion with no n_hint: can't stream
             return False
         if np.dtype(dtype) == np.int8:
             blk = int(block) if block else BLOCK
             Pq = -(-P // blk) * blk
-            return self._step_key_q(fusion, chunk, P, Pq, blk) in self.cache
-        return self._step_key(fusion, chunk, P, dtype) in self.cache
+            return self._step_key_q(fusion, chunk, P, Pq, blk, sig) \
+                in self.cache
+        return self._step_key(fusion, chunk, P, dtype, sig) in self.cache
 
     # -- internals ------------------------------------------------------------
     def _dense_key(self, fusion, n, P, dtype):
         return ("dense", fusion_cache_key(fusion), self.strategy,
                 bucket_rows(n), P, np.dtype(dtype).str)
 
-    def _step_key(self, fusion, chunk, P, dtype):
+    def _step_key(self, fusion, chunk, P, dtype, sig):
         return ("stream", fusion_cache_key(fusion), self.strategy,
-                chunk, P, np.dtype(dtype).str)
+                chunk, P, np.dtype(dtype).str, sig)
 
-    def _step_key_q(self, fusion, chunk, P, Pq, blk):
+    def _step_key_q(self, fusion, chunk, P, Pq, blk, sig):
         return ("streamq", fusion_cache_key(fusion), self.strategy,
-                chunk, P, Pq, blk)
+                chunk, P, Pq, blk, sig)
 
     def _scan_key(self, fusion, n, max_rows, P, dtype):
         # keyed by chunk COUNT, not n: rounds sharing ceil(n/chunk) reuse
@@ -432,16 +497,40 @@ class LocalEngine:
             wsum, tot = fn(updates, weights)
             return self._bounded(fusion.combine(wsum, tot), device_sem)
 
-    def _stream_step(self, fusion, chunk, P, dtype):
-        """One compiled accumulate step: (block, w, wsum, tot) -> updated
-        (wsum, tot)."""
-        key = self._step_key(fusion, chunk, P, dtype)
-        partial = self._partial_fn(fusion)
+    def _carve_fn(self, fusion):
+        """Strategy-specific carve kernel injected into the fusion's
+        fold (None = the fusion's jnp reference merge)."""
+        del fusion
+        if self.strategy != "pallas":
+            return None
+        interpret = self.interpret
+
+        def carve(u, valid, ssum, topk, botk):
+            return topk_carve_pallas(u, valid, ssum, topk, botk,
+                                     interpret=interpret)
+
+        return carve
+
+    def _fold_fn(self, fusion):
+        """The per-block fold: fusion-owned semantics with this engine's
+        strategy-specific kernels injected."""
+        if fusion.reducible:
+            partial = self._partial_fn(fusion)
+            return lambda st, u, w: tuple(
+                fusion.fold_block(st, u, w, partial=partial))
+        carve = self._carve_fn(fusion)
+        return lambda st, u, w: tuple(
+            fusion.fold_block(st, u, w, carve=carve))
+
+    def _stream_step(self, fusion, chunk, P, dtype, sig, state_avals):
+        """One compiled fold step: (block, w, *state) -> updated state
+        tuple (reducible: (wsum, tot); carve: (sum, count, topk, botk))."""
+        key = self._step_key(fusion, chunk, P, dtype, sig)
+        fold = self._fold_fn(fusion)
 
         def build():
-            def step(u, w, wsum, tot):
-                ws, t = partial(u, w)
-                return wsum + ws, tot + t
+            def step(u, w, *state):
+                return fold(tuple(state), u, w)
 
             return step
 
@@ -449,8 +538,7 @@ class LocalEngine:
             key, build,
             jax.ShapeDtypeStruct((chunk, P), np.dtype(dtype)),
             jax.ShapeDtypeStruct((chunk,), jnp.float32),
-            jax.ShapeDtypeStruct((P,), jnp.float32),
-            jax.ShapeDtypeStruct((), jnp.float32),
+            *state_avals,
         )
 
     def _partial_q_fn(self, fusion, dim, blk):
@@ -497,18 +585,32 @@ class LocalEngine:
 
         return partial_q
 
-    def _stream_step_q(self, fusion, chunk, P, Pq, blk):
+    def _stream_step_q(self, fusion, chunk, P, Pq, blk, sig, state_avals):
         """The compressed twin of ``_stream_step``: (codes, scales, w,
-        wsum, tot) -> updated (wsum, tot), same (P,) fp32 accumulator —
+        *state) -> updated state, the same carry as the dense step —
         which is what lets mixed dense/compressed rounds share one
-        carry."""
-        key = self._step_key_q(fusion, chunk, P, Pq, blk)
-        partial_q = self._partial_q_fn(fusion, P, blk)
+        accumulator. For carve fusions the (codes, scales) payload is
+        dequantized in-trace inside the fold (bit-identical to the host
+        dequant, so the order statistics match the dense path)."""
+        key = self._step_key_q(fusion, chunk, P, Pq, blk, sig)
+        if fusion.reducible:
+            partial_q = self._partial_q_fn(fusion, P, blk)
+
+            def fold(state, q, s, w):
+                partial = lambda payload, wv: partial_q(
+                    payload[0], payload[1], wv)
+                return tuple(fusion.fold_block(state, (q, s), w,
+                                               partial=partial))
+        else:
+            carve = self._carve_fn(fusion)
+
+            def fold(state, q, s, w):
+                return tuple(fusion.fold_block(state, (q, s), w,
+                                               carve=carve))
 
         def build():
-            def step(q, s, w, wsum, tot):
-                ws, t = partial_q(q, s, w)
-                return wsum + ws, tot + t
+            def step(q, s, w, *state):
+                return fold(tuple(state), q, s, w)
 
             return step
 
@@ -517,8 +619,7 @@ class LocalEngine:
             jax.ShapeDtypeStruct((chunk, Pq), np.int8),
             jax.ShapeDtypeStruct((chunk, Pq // blk), jnp.float32),
             jax.ShapeDtypeStruct((chunk,), jnp.float32),
-            jax.ShapeDtypeStruct((P,), jnp.float32),
-            jax.ShapeDtypeStruct((), jnp.float32),
+            *state_avals,
         )
 
     def _streamed(self, fusion, updates, weights, max_rows,

@@ -77,7 +77,7 @@ class Planner:
 
         # -- single chip ----------------------------------------------------
         hbm_cap = self.hw.hbm_bytes * HBM_HEADROOM
-        feasible_local = s <= hbm_cap or fusion.reducible  # streaming path
+        feasible_local = s <= hbm_cap or fusion.streamable  # streaming path
         mem_t = s / self.hw.hbm_bw
         passes = 1.0 if fusion.reducible else 2.0  # sort-based ops re-read
         local_compile = (
@@ -104,11 +104,11 @@ class Planner:
         if self.n_devices > 1:
             d = self.n_devices
             per_dev = s / d
-            # reducible fusions stream store partitions through each chip
+            # streamable fusions stream store partitions through each chip
             # (the Spark model: the dataset lives in the store, not HBM),
             # so feasibility only requires the WORKING SET to fit
             working_set = (
-                p_bytes / d if fusion.reducible else per_dev
+                p_bytes / d if fusion.streamable else per_dev
             )
             ici = self.hw.ici_bw_per_link * self.hw.ici_links
             if fusion.reducible:
@@ -200,8 +200,8 @@ class Planner:
     ) -> bool:
         """True when the overlapped round model beats the serialized one —
         i.e. when the monitor wait dominates the drain residue. Only
-        reducible fusions can fold while stragglers write."""
-        if not fusion.reducible:
+        streamable fusions can fold while stragglers write."""
+        if not fusion.streamable:
             return False
         plan = self.plan(load, fusion, warm_engines)
         serialized, overlapped = self.overlap_estimate(plan, expected_wait)

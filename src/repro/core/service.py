@@ -10,11 +10,15 @@ Round flow (mirrors Algorithm 1):
      updates land in memory exactly as IBMFL receives them over gRPC.
   3. large  -> clients were already redirected to the UpdateStore (the
      seamless-transition hook, §III-D3); monitor(T_h, timeout) gates the
-     round; reducible fusions then STREAM (chunk, P) blocks off the store
-     through one cached step executable — on the single-chip engine or
-     per-shard over the mesh — so the dense (n, P) matrix never
-     materializes on the host, while order-statistic fusions fall back to
-     the dense read / distributed engine.
+     round; STREAMABLE fusions then STREAM (chunk, P) blocks off the
+     store through one cached step executable — on the single-chip
+     engine or per-shard over the mesh — so the dense (n, P) matrix
+     never materializes on the host. Streamable = the reducible sum
+     family (O(P) carry) plus the order-statistic reducers
+     (TrimmedMean / CoordMedian) via the O(K*P) top-k carve, gated by
+     ``robust_state_budget``; over-budget carve rounds and
+     non-streamable fusions (Krum) fall back to the dense read /
+     distributed engine with a ``RoundReport.notes`` entry.
   4. The fused flat vector is unflattened back into the model pytree.
 
 ASYNC ROUNDS (``aggregate(from_store=True, async_round=True)``): instead
@@ -147,6 +151,9 @@ class RoundReport:
     # + fp32 scales on compressed rounds, the dense matrix bytes
     # otherwise — the paper's transport-cost metric
     bytes_ingested: int = 0
+    # operator-facing routing notes, e.g. why a robust round fell back
+    # from the streamed carve to the dense path (state budget exceeded)
+    notes: Tuple[str, ...] = ()
 
 
 class AggregationService:
@@ -168,6 +175,8 @@ class AggregationService:
         cost_bias: float = 0.5,
         compress: bool | int = False,
         device_concurrency: int = 1,
+        secure=None,
+        robust_state_budget: int = 64 << 20,
         clock=time.monotonic,
         sleep=time.sleep,
         poll_interval: float = 0.01,
@@ -221,6 +230,19 @@ class AggregationService:
             hardware serializes folds anyway, so concurrent tenants
             overlap only their monitor waits and host staging; raise it
             when the backend genuinely runs kernels in parallel.
+          secure: an optional ``repro.core.secure.SecureMasking``
+            instance declaring that clients write pairwise-masked
+            updates. Mask cancellation needs the plain SUM over the
+            close set, so this requires a sum-reducible fusion —
+            rejected at construction otherwise. (Composing secure
+            masking with ASYNC close sets is the ROADMAP follow-on:
+            the mask basis must be renegotiated per inclusion
+            decision.)
+          robust_state_budget: byte cap on an order-statistic fusion's
+            streamed carry state (the O(K*P) top-k carve buffers).
+            Rounds whose projected state exceeds it route to the dense
+            / distributed path with a ``RoundReport.notes`` entry
+            instead of streaming.
           clock / sleep / poll_interval: time sources for the monitor
             and arrival streams, injectable for deterministic tests.
         """
@@ -291,6 +313,30 @@ class AggregationService:
         else:
             self.compress_block = None
         self._compressors: Dict[str, ErrorFeedbackCompressor] = {}
+        # unsupported-combo fail-fasts: a clear ValueError here beats an
+        # opaque one deep in the round path
+        if self.compress_block is not None and not self.fusion.streamable:
+            raise ValueError(
+                "compress=True requires a streamable fusion (the dequant "
+                f"fold runs inside the streamed step); {self.fusion.name} "
+                "is not streamable"
+            )
+        if secure is not None and not self.fusion.reducible:
+            raise ValueError(
+                "SecureMasking requires a sum-reducible fusion — pairwise "
+                "masks only cancel under summation — and "
+                f"{self.fusion.name} is not reducible"
+            )
+        self.secure = secure
+        if staleness_discount is not None and not self.fusion.weighted:
+            raise ValueError(
+                "staleness_discount requires a weighted fusion; "
+                f"{self.fusion.name} folds order statistics that cannot "
+                "be discounted"
+            )
+        if int(robust_state_budget) < 1:
+            raise ValueError("robust_state_budget must be >= 1 byte")
+        self.robust_state_budget = int(robust_state_budget)
         # the adaptive layer: learns per-tenant arrival curves off the
         # store's timestamps and re-derives the gate every round
         self.controller: Optional[AdaptiveController] = (
@@ -347,31 +393,60 @@ class AggregationService:
         )
         return max(1, min(n, int(budget // max(row_bytes, 1))))
 
-    def _warm_engines(self, n: int, p: int, dtype, chunk_rows=None):
+    def _stream_mode(
+        self, fusion: FusionAlgorithm, p: int, n_hint: int,
+    ) -> Tuple[bool, Optional[str]]:
+        """THE stream-eligibility predicate (one place, not three):
+        can this round stream, and if not, why not (operator note).
+
+        Reducible fusions always stream (O(P) sum carry). Order-statistic
+        fusions stream through the top-k carve iff their projected carry
+        state — O(K*P) bytes, K from ``n_hint`` — fits the service's
+        ``robust_state_budget``; over-budget rounds route dense with a
+        ``RoundReport.notes`` entry rather than raising."""
+        if not fusion.streamable:
+            return False, None
+        if fusion.reducible:
+            return True, None
+        need = fusion.state_nbytes(p, max(int(n_hint), 1))
+        if need > self.robust_state_budget:
+            return False, (
+                f"robust stream fallback: {fusion.name} carve state needs "
+                f"{need / (1 << 20):.1f} MiB for n={int(n_hint)}, P={p} "
+                f"(budget {self.robust_state_budget / (1 << 20):.1f} MiB) "
+                "— routed to the dense path"
+            )
+        return True, None
+
+    def _warm_engines(self, n: int, p: int, dtype, chunk_rows=None,
+                      fusion: Optional[FusionAlgorithm] = None,
+                      n_hint: Optional[int] = None):
         """Engines holding a compiled executable for this round's shape —
         dense keys, or (with ``chunk_rows``) the streamed step keys."""
+        fusion = fusion if fusion is not None else self.fusion
         warm = set()
         if chunk_rows is not None:
             blk = self.compress_block or BLOCK
             if self.local.is_warm_stream(
-                    self.fusion, chunk_rows, p, dtype, block=blk):
+                    fusion, chunk_rows, p, dtype, block=blk,
+                    n_hint=n_hint):
                 warm.add("local")
             if self.distributed is not None and self.distributed \
-                    .is_warm_stream(self.fusion, chunk_rows, p, dtype,
-                                    block=blk):
+                    .is_warm_stream(fusion, chunk_rows, p, dtype,
+                                    block=blk, n_hint=n_hint):
                 warm.add("distributed")
             if self.hierarchical is not None and self.hierarchical \
-                    .is_warm_stream(self.fusion, chunk_rows, p, dtype,
-                                    block=blk):
+                    .is_warm_stream(fusion, chunk_rows, p, dtype,
+                                    block=blk, n_hint=n_hint):
                 warm.add("hierarchical")
             return warm
-        if self.local.is_warm(self.fusion, n, p, dtype):
+        if self.local.is_warm(fusion, n, p, dtype):
             warm.add("local")
         if self.distributed is not None and \
-                self.distributed.is_warm(self.fusion, n, p, dtype):
+                self.distributed.is_warm(fusion, n, p, dtype):
             warm.add("distributed")
         if self.hierarchical is not None and \
-                self.hierarchical.is_warm(self.fusion, n, p, dtype):
+                self.hierarchical.is_warm(fusion, n, p, dtype):
             warm.add("hierarchical")
         return warm
 
@@ -400,6 +475,7 @@ class AggregationService:
         from_store: bool = False,
         async_round: bool | str = False,
         tenant: str = DEFAULT_TENANT,
+        val_grad=None,
     ) -> Tuple[PyTree, RoundReport]:
         """One aggregation round. Returns ``(fused, RoundReport)``.
 
@@ -414,7 +490,7 @@ class AggregationService:
             monitor gates the round on ``expected_clients`` (falling
             back to the current store count).
 
-        ``async_round`` (store rounds, reducible fusions only) overlaps
+        ``async_round`` (store rounds, streamable fusions only) overlaps
         fusion with the straggler wait via arrival-driven streaming:
         ``True`` forces it, ``"auto"`` defers to the planner's overlap
         cost model (async wins once the expected monitor wait dominates
@@ -436,6 +512,12 @@ class AggregationService:
         cross-tenant prior while the tenant is cold (see
         ``report.close_policy``).
 
+        ``val_grad`` threads a per-round validation gradient to fusions
+        that score against one (Zeno): the round runs on a per-call
+        CLONE (``fusion.with_val_grad``), so two concurrent tenants
+        passing different validation gradients never race one shared
+        fusion's state.
+
         An empty round (timeout, nothing landed) returns
         ``(None, report)`` with ``report.empty`` set instead of
         raising. ``template`` (a model pytree) unflattens the fused
@@ -443,7 +525,7 @@ class AggregationService:
         with self._round_lock(tenant):
             return self._aggregate_impl(
                 updates, weights, template, expected_clients,
-                from_store, async_round, tenant,
+                from_store, async_round, tenant, val_grad,
             )
 
     def _aggregate_impl(
@@ -455,17 +537,30 @@ class AggregationService:
         from_store: bool,
         async_round: bool | str,
         tenant: str,
+        val_grad=None,
     ) -> Tuple[PyTree, RoundReport]:
         """``aggregate`` body; caller holds the tenant's round lock."""
+        fusion = self.fusion
+        if val_grad is not None:
+            if not hasattr(fusion, "with_val_grad"):
+                raise ValueError(
+                    f"{fusion.name} does not score against a validation "
+                    "gradient — val_grad only applies to Zeno-style "
+                    "fusions"
+                )
+            fusion = fusion.with_val_grad(val_grad)
         monitor_result = None
         phase: Dict[str, float] = {}
         streamed = False
         policy = arrivals = t_round = t_round_store = None
         expected = expected_clients
+        notes: Tuple[str, ...] = ()
 
         if from_store:
             expected = expected_clients or self.store.count(tenant)
-            use_async = self._resolve_async(async_round, expected, tenant)
+            use_async = self._resolve_async(
+                async_round, expected, tenant, fusion=fusion,
+            )
             threshold = max(int(expected * self.threshold_frac), 1)
             timeout = self.monitor_timeout
             if self.controller is not None and expected > 0:
@@ -497,7 +592,7 @@ class AggregationService:
             if use_async:
                 return self._aggregate_async(
                     monitor, expected, template, tenant, t_round, policy,
-                    t_round_store,
+                    t_round_store, fusion=fusion,
                 )
             monitor_result = monitor.wait()
             # arrival snapshot AT CLOSE — the controller's training
@@ -517,12 +612,16 @@ class AggregationService:
                 update_bytes=row_bytes, n_clients=n,
                 dtype_bytes=dtype.itemsize,
             )
-            can_stream = self.fusion.reducible
+            n_hint = max(n, expected or 0, 1)
+            can_stream, stream_note = self._stream_mode(fusion, p, n_hint)
+            notes = (stream_note,) if stream_note else ()
             plan = self.planner.plan(
-                load, self.fusion,
+                load, fusion,
                 warm_engines=self._warm_engines(
                     n, p, dtype,
                     chunk_rows=chunk_rows if can_stream else None,
+                    fusion=fusion,
+                    n_hint=n_hint if can_stream else None,
                 ),
             )
             if can_stream:
@@ -533,10 +632,11 @@ class AggregationService:
                 engine = self._stream_engine(plan.engine)
                 t0 = time.perf_counter()
                 fused, srep = engine.fuse_stream(
-                    self.fusion,
+                    fusion,
                     self.store.iter_chunks(chunk_rows, tenant=tenant),
                     chunk_rows=chunk_rows,
                     device_sem=self.device_sem,
+                    n_hint=n_hint,
                 )
                 dt = time.perf_counter() - t0
                 streamed = True
@@ -550,7 +650,8 @@ class AggregationService:
                     expected_clients, streamed, phase,
                     tenant=tenant, policy=policy, t_round=t_round_store,
                     expected=expected, arrivals=arrivals,
-                    ingest_bytes=srep.ingest_bytes,
+                    ingest_bytes=srep.ingest_bytes, fusion=fusion,
+                    notes=notes,
                 )
             t0 = time.perf_counter()
             stacked, w = self.store.read_stacked(tenant)
@@ -581,8 +682,10 @@ class AggregationService:
             dtype_bytes=stacked.dtype.itemsize,
         )
         plan = self.planner.plan(
-            load, self.fusion,
-            warm_engines=self._warm_engines(n, p, stacked.dtype),
+            load, fusion,
+            warm_engines=self._warm_engines(
+                n, p, stacked.dtype, fusion=fusion,
+            ),
         )
 
         t0 = time.perf_counter()
@@ -591,7 +694,7 @@ class AggregationService:
             # executable invocation only, so a cold compile (outside it,
             # single-flight) never stalls other tenants' folds
             fused = self.local.fuse(
-                self.fusion, stacked, w, device_sem=self.device_sem,
+                fusion, stacked, w, device_sem=self.device_sem,
             )
             phase["compile"] = self.local.last_compile_seconds
             fused = jax.block_until_ready(fused)
@@ -603,7 +706,7 @@ class AggregationService:
             with self.device_sem:
                 if plan.engine == "hierarchical" \
                         and self.hierarchical is not None:
-                    fused = self.hierarchical.fuse(self.fusion, stacked, w)
+                    fused = self.hierarchical.fuse(fusion, stacked, w)
                     phase["compile"] = \
                         self.hierarchical.last_compile_seconds
                 else:
@@ -611,7 +714,7 @@ class AggregationService:
                         "planner chose the distributed engine but no "
                         "mesh was given"
                     )
-                    fused = self.distributed.fuse(self.fusion, stacked, w)
+                    fused = self.distributed.fuse(fusion, stacked, w)
                     phase["compile"] = \
                         self.distributed.last_compile_seconds
                 fused = jax.block_until_ready(fused)
@@ -622,22 +725,36 @@ class AggregationService:
             expected_clients, streamed, phase,
             tenant=tenant, policy=policy, t_round=t_round_store,
             expected=expected, arrivals=arrivals,
-            ingest_bytes=int(stacked.nbytes),
+            ingest_bytes=int(stacked.nbytes), fusion=fusion,
+            notes=notes,
         )
 
     # -- async (monitor-overlapped) rounds ------------------------------------
     def _resolve_async(
         self, async_round: bool | str, expected: int,
         tenant: str = DEFAULT_TENANT,
+        fusion: Optional[FusionAlgorithm] = None,
     ) -> bool:
         """Decide whether this store round overlaps fusion with the wait.
-        Only reducible fusions can fold partial sums incrementally; "auto"
+        Only streamable fusions can fold arrivals incrementally; "auto"
         asks the planner whether the expected monitor wait (the TENANT's
         last observed wait, else the timeout) dominates the drain
         residue. Projections are sized off ``tenant``'s store
         partition."""
-        if not async_round or not self.fusion.reducible:
+        fusion = fusion if fusion is not None else self.fusion
+        if not async_round or not fusion.streamable:
             return False
+        if not fusion.reducible:
+            # order-statistic streams must size + budget the carve state
+            # up front: no known P yet, or over the state budget -> the
+            # round runs synchronously (dense fallback with a note)
+            try:
+                _n_now, p, _dtype = self.store.meta(tenant)
+            except LookupError:
+                return False
+            ok, _note = self._stream_mode(fusion, p, max(expected, 1))
+            if not ok:
+                return False
         if async_round != "auto":
             return True
         # the tenant's own history only: another tenant's wait says
@@ -664,9 +781,10 @@ class AggregationService:
         warm = self._warm_engines(
             n_proj, p, dtype,
             chunk_rows=self._chunk_rows(n_proj, row_bytes),
+            fusion=fusion, n_hint=n_proj,
         )
         return self.planner.prefer_async(
-            load, self.fusion, expected_wait, warm_engines=warm,
+            load, fusion, expected_wait, warm_engines=warm,
         )
 
     def _aggregate_async(
@@ -674,6 +792,7 @@ class AggregationService:
         tenant: str = DEFAULT_TENANT, t_round: Optional[float] = None,
         policy: Optional[ClosePolicy] = None,
         t_round_store: Optional[float] = None,
+        fusion: Optional[FusionAlgorithm] = None,
     ) -> Tuple[PyTree, RoundReport]:
         """Arrival-driven round: fuse while stragglers write (Algorithm 1
         with the monitor folded INTO the ingest stream). The gate —
@@ -682,6 +801,7 @@ class AggregationService:
         tenant's store partition (other tenants' concurrent arrivals
         are invisible); stragglers missing the close age into the next
         round (per tenant)."""
+        fusion = fusion if fusion is not None else self.fusion
         if t_round is None:
             t_round = monitor.clock()
         if t_round_store is None:
@@ -709,9 +829,10 @@ class AggregationService:
             dtype_bytes=dtype.itemsize,
         )
         plan = self.planner.plan(
-            load, self.fusion,
+            load, fusion,
             warm_engines=self._warm_engines(
-                n_proj, p, dtype, chunk_rows=chunk_rows
+                n_proj, p, dtype, chunk_rows=chunk_rows,
+                fusion=fusion, n_hint=n_proj,
             ),
         )
         engine = self._stream_engine(plan.engine)
@@ -755,11 +876,11 @@ class AggregationService:
         init = None
         carry = self._carry.get(tenant)
         if gamma is not None and carry is not None:
-            init = (gamma * carry[0], gamma * carry[1])
+            init = fusion.discount_state(carry, gamma)
         t0 = time.perf_counter()
         fused, srep = engine.fuse_stream(
-            self.fusion, blocks(), init=init, chunk_rows=chunk_rows,
-            device_sem=self.device_sem,
+            fusion, blocks(), init=init, chunk_rows=chunk_rows,
+            device_sem=self.device_sem, n_hint=n_proj,
         )
         dt = time.perf_counter() - t0
 
@@ -772,7 +893,7 @@ class AggregationService:
         # one round staler
         self.store.remove(folded, versions=folded_versions, tenant=tenant)
         if gamma is not None:
-            self._carry[tenant] = (srep.acc_wsum, srep.acc_tot)
+            self._carry[tenant] = srep.acc_state
         self._stale_ages[tenant] = {
             cid: ages.get(cid, 0) + 1
             for cid in self.store.client_ids(tenant)
@@ -798,7 +919,7 @@ class AggregationService:
             overlap_seconds=overlap, async_round=True,
             tenant=tenant, policy=policy, t_round=t_round_store,
             expected=expected, arrivals=arrivals,
-            ingest_bytes=srep.ingest_bytes,
+            ingest_bytes=srep.ingest_bytes, fusion=fusion,
         )
 
     def _empty_round(
@@ -839,7 +960,10 @@ class AggregationService:
         t_round: Optional[float] = None, expected: Optional[int] = None,
         arrivals: Optional[Dict[str, float]] = None,
         ingest_bytes: int = 0,
+        fusion: Optional[FusionAlgorithm] = None,
+        notes: Tuple[str, ...] = (),
     ):
+        fusion = fusion if fusion is not None else self.fusion
         # §III-D3 seamless transition: if next round's projected load would
         # overflow a single chip (even the streamed local path then needs
         # the store as its backing set), tell clients to write to the store.
@@ -849,7 +973,7 @@ class AggregationService:
         )
         route_next = (
             classify(next_load, self.hw) is WorkloadClass.DISTRIBUTED
-            or self.planner.plan(next_load, self.fusion).engine != "local"
+            or self.planner.plan(next_load, fusion).engine != "local"
         )
 
         # feed the round's observed arrival offsets back into the
@@ -876,6 +1000,7 @@ class AggregationService:
             close_policy=policy,
             store_stats=self.store.stats_for(tenant),
             bytes_ingested=ingest_bytes,
+            notes=notes,
         )
         with self._state_lock:
             self.history.append(report)

@@ -59,6 +59,73 @@ def coordmedian_pallas(updates: jnp.ndarray, *, param_tile: int = PARAM_TILE,
     return out[0, :P]
 
 
+def _carve_kernel(v_ref, u_ref, s_ref, t_ref, b_ref,
+                  so_ref, to_ref, bo_ref):
+    """Merge one (c, TP) block strip into the carried running sum and
+    per-coordinate top-K / bottom-K buffers. ``v_ref`` is the (1, c)
+    validity row — 0 marks ragged-tail padding rows, which are masked to
+    -/+inf so the sort carries them straight out of the kept slices.
+    One sort per buffer per strip; one HBM pass over the block."""
+    u = u_ref[...].astype(jnp.float32)                     # (c, TP)
+    vm = v_ref[...].reshape(-1, 1) > 0                     # (c, 1)
+    so_ref[...] = s_ref[...] + jnp.sum(
+        jnp.where(vm, u, 0.0), axis=0, keepdims=True)
+    k_cap = t_ref.shape[0]
+    m = k_cap + u.shape[0]
+    hi = jnp.sort(jnp.concatenate(
+        [t_ref[...], jnp.where(vm, u, -jnp.inf)], axis=0), axis=0)
+    to_ref[...] = jax.lax.slice_in_dim(hi, m - k_cap, m, axis=0)
+    lo = jnp.sort(jnp.concatenate(
+        [b_ref[...], jnp.where(vm, u, jnp.inf)], axis=0), axis=0)
+    bo_ref[...] = jax.lax.slice_in_dim(lo, 0, k_cap, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("param_tile", "interpret"))
+def topk_carve_pallas(block: jnp.ndarray, valid: jnp.ndarray,
+                      ssum: jnp.ndarray, topk: jnp.ndarray,
+                      botk: jnp.ndarray, *, param_tile: int = PARAM_TILE,
+                      interpret: bool = True):
+    """Streaming fold for exact trimmed mean / median: merge a (c, P)
+    block into carry (ssum (P,), topk (K, P), botk (K, P)). ``valid``
+    (c,) is 0/1 (0 = padded row). Returns the updated carry triple."""
+    c, P = block.shape
+    k_cap = topk.shape[0]
+    tp = min(param_tile, P)
+    p_pad = (-P) % tp
+    if p_pad:
+        # zero-pad the param axis; padded columns produce garbage carry
+        # values that the [:P] slices below discard
+        block = jnp.pad(block, ((0, 0), (0, p_pad)))
+        ssum = jnp.pad(ssum, (0, p_pad))
+        topk = jnp.pad(topk, ((0, 0), (0, p_pad)))
+        botk = jnp.pad(botk, ((0, 0), (0, p_pad)))
+    PP = P + p_pad
+    so, to, bo = pl.pallas_call(
+        _carve_kernel,
+        grid=(PP // tp,),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((c, tp), lambda i: (0, i)),
+            pl.BlockSpec((1, tp), lambda i: (0, i)),
+            pl.BlockSpec((k_cap, tp), lambda i: (0, i)),
+            pl.BlockSpec((k_cap, tp), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tp), lambda i: (0, i)),
+            pl.BlockSpec((k_cap, tp), lambda i: (0, i)),
+            pl.BlockSpec((k_cap, tp), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, PP), jnp.float32),
+            jax.ShapeDtypeStruct((k_cap, PP), jnp.float32),
+            jax.ShapeDtypeStruct((k_cap, PP), jnp.float32),
+        ],
+        interpret=interpret,
+    )(valid.astype(jnp.float32).reshape(1, c), block,
+      ssum.reshape(1, PP), topk, botk)
+    return so[0, :P], to[:, :P], bo[:, :P]
+
+
 @functools.partial(
     jax.jit, static_argnames=("trim", "param_tile", "interpret")
 )

@@ -17,3 +17,18 @@ def trimmedmean_ref(updates: jnp.ndarray, trim: int) -> jnp.ndarray:
     if trim > 0:
         s = s[trim: n - trim]
     return jnp.mean(s, axis=0)
+
+
+def topk_carve_ref(block, valid, ssum, topk, botk):
+    """Oracle for the streaming carve fold: merge a (c, P) block into
+    carry (ssum (P,), topk (K, P) ascending, botk (K, P) ascending).
+    Rows with valid == 0 are masked to -/+inf and never survive."""
+    u = block.astype(jnp.float32)
+    k_cap = topk.shape[0]
+    vm = (valid > 0)[:, None]
+    ssum = ssum + jnp.sum(jnp.where(vm, u, 0.0), axis=0)
+    hi = jnp.where(vm, u, -jnp.inf)
+    topk = jnp.sort(jnp.concatenate([topk, hi], axis=0), axis=0)[-k_cap:]
+    lo = jnp.where(vm, u, jnp.inf)
+    botk = jnp.sort(jnp.concatenate([botk, lo], axis=0), axis=0)[:k_cap]
+    return ssum, topk, botk

@@ -67,9 +67,12 @@ def _report_line(report, gate: str) -> str:
     st = report.store_stats
     stats = (f" writes={st.writes} wbytes={st.bytes_written}"
              f" evictions={st.evictions}") if st is not None else ""
+    for note in report.notes:
+        stats += f" note={note!r}"
     return (f"[aggregate] tenant={report.tenant} "
             f"engine={report.plan.engine} "
             f"class={report.plan.workload_class.value} "
+            f"streamed={report.streamed} "
             f"monitor_ready={report.monitor.ready} "
             f"gate={gate} "
             f"ingest={bytes_to_human(report.bytes_ingested)} "

@@ -218,19 +218,38 @@ def test_staleness_discount_validation():
         AggregationService(fusion="fedavg", staleness_discount=1.5)
 
 
-def test_async_falls_back_to_sync_for_order_statistics():
-    """Non-reducible fusions cannot fold incrementally: async_round is
-    ignored and the dense path runs."""
+def test_async_falls_back_to_sync_for_non_streamable():
+    """Fusions with no reducer decomposition (Krum) cannot fold
+    incrementally: async_round is ignored and the dense path runs."""
+    n, p = 6, 32
+    u, _ = _mk(n, p)
+    store = UpdateStore()
+    for i in range(n):
+        store.write(f"c{i}", u[i])
+    svc = AggregationService(fusion="krum", local_strategy="jnp",
+                             store=store, monitor_timeout=0.5)
+    fused, rep = svc.aggregate(from_store=True, expected_clients=n,
+                               async_round=True)
+    assert not rep.async_round and not rep.streamed
+    ref = np.asarray(get_fusion("krum").fuse(u, np.ones(n, np.float32)))
+    np.testing.assert_allclose(np.asarray(fused), ref, rtol=1e-5, atol=1e-6)
+
+
+def test_async_falls_back_to_sync_over_carve_budget():
+    """An order-statistic round whose carve state exceeds the budget
+    runs synchronously (dense) even with async_round=True."""
     n, p = 6, 32
     u, _ = _mk(n, p)
     store = UpdateStore()
     for i in range(n):
         store.write(f"c{i}", u[i])
     svc = AggregationService(fusion="coordmedian", local_strategy="jnp",
-                             store=store, monitor_timeout=0.5)
+                             store=store, monitor_timeout=0.5,
+                             robust_state_budget=64)
     fused, rep = svc.aggregate(from_store=True, expected_clients=n,
                                async_round=True)
     assert not rep.async_round and not rep.streamed
+    assert rep.notes and "budget" in rep.notes[0]
     np.testing.assert_allclose(
         np.asarray(fused), np.median(u, axis=0), rtol=1e-5, atol=1e-6
     )
@@ -346,7 +365,7 @@ def test_planner_prefers_async_when_wait_dominates():
     load = Workload(update_bytes=4 << 20, n_clients=64)
     assert planner.prefer_async(load, f, expected_wait=5.0)
     assert not planner.prefer_async(load, f, expected_wait=0.0)
-    assert not planner.prefer_async(load, get_fusion("coordmedian"), 5.0)
+    assert not planner.prefer_async(load, get_fusion("krum"), 5.0)
     plan = planner.plan(load, f)
     ser, ovl = planner.overlap_estimate(plan, expected_wait=5.0)
     assert ser == pytest.approx(5.0 + plan.est_seconds)

@@ -67,7 +67,17 @@ def test_memory_cap_rejects_nonstreamable(data):
     u, w = data
     capped = LocalEngine(strategy="jnp", memory_cap_bytes=u.shape[1] * 4 * 2)
     with pytest.raises(MemoryError):
-        capped.fuse(CoordMedian(), u, w)
+        capped.fuse(Krum(), u, w)
+
+
+def test_memory_cap_streams_order_statistics(data):
+    """CoordMedian under a memory cap streams through the carve fold
+    (PR 7) instead of raising MemoryError."""
+    u, w = data
+    capped = LocalEngine(strategy="jnp", memory_cap_bytes=u.shape[1] * 4 * 2)
+    out = np.asarray(capped.fuse(CoordMedian(), u, w))
+    np.testing.assert_allclose(out, np.median(u, axis=0),
+                               rtol=1e-5, atol=1e-5)
 
 
 _SUBPROC = textwrap.dedent("""

@@ -56,7 +56,7 @@ def test_planner_routes_small_local_large_distributed():
 
 def test_planner_infeasible_raises():
     p = Planner(n_devices=1)
-    f = get_fusion("coordmedian")  # not streamable
+    f = get_fusion("krum")  # not streamable
     with pytest.raises(MemoryError):
         p.plan(Workload(update_bytes=1 << 30, n_clients=10_000), f)
 

@@ -55,10 +55,19 @@ def test_stream_matches_dense_ragged(name, strategy, n, p, chunk):
     assert rep.n_blocks == -(-n // chunk)
 
 
-def test_stream_rejects_non_reducible():
+def test_stream_rejects_non_streamable():
     u = RNG.normal(size=(6, 16)).astype(np.float32)
     w = np.ones(6, np.float32)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="not streamable"):
+        LocalEngine().fuse_stream(get_fusion("krum"), _blocks(u, w, 2))
+
+
+def test_carve_stream_needs_n_hint():
+    """Order-statistic streams size their top-k carve buffers from the
+    expected client count — without it the stream must refuse."""
+    u = RNG.normal(size=(6, 16)).astype(np.float32)
+    w = np.ones(6, np.float32)
+    with pytest.raises(ValueError, match="n_hint"):
         LocalEngine().fuse_stream(get_fusion("coordmedian"), _blocks(u, w, 2))
 
 
@@ -327,8 +336,9 @@ def test_service_store_round_streams_without_dense_read():
     assert jitcache.trace_count() == before, "warm round re-traced"
 
 
-def test_service_dense_fallback_for_order_statistics():
-    """Non-reducible fusions still take the dense path off the store."""
+def test_service_streams_order_statistics_off_the_store():
+    """Order-statistic fusions now stream off the store through the
+    top-k carve (PR 7) — bit-matching the dense median."""
     n, p = 10, 64
     store = UpdateStore()
     updates = RNG.normal(size=(n, p)).astype(np.float32)
@@ -337,7 +347,26 @@ def test_service_dense_fallback_for_order_statistics():
     svc = AggregationService(fusion="coordmedian", local_strategy="jnp",
                              store=store, monitor_timeout=0.5)
     fused, rep = svc.aggregate(from_store=True, expected_clients=n)
+    assert rep.streamed and not rep.notes
+    np.testing.assert_allclose(
+        np.asarray(fused), np.median(updates, axis=0), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_service_dense_fallback_over_state_budget():
+    """A carve whose O(K*P) state exceeds robust_state_budget routes to
+    the dense path with an operator note instead of raising."""
+    n, p = 10, 64
+    store = UpdateStore()
+    updates = RNG.normal(size=(n, p)).astype(np.float32)
+    for i in range(n):
+        store.write(f"c{i}", updates[i])
+    svc = AggregationService(fusion="coordmedian", local_strategy="jnp",
+                             store=store, monitor_timeout=0.5,
+                             robust_state_budget=128)
+    fused, rep = svc.aggregate(from_store=True, expected_clients=n)
     assert not rep.streamed
+    assert rep.notes and "budget" in rep.notes[0]
     np.testing.assert_allclose(
         np.asarray(fused), np.median(updates, axis=0), rtol=1e-5, atol=1e-6
     )
