@@ -1,20 +1,22 @@
 """Adaptive (learned-gate) rounds vs the static threshold/timeout gate.
 
-Three arrival scenarios, each run through BOTH gates on identical
+Three arrival scenarios — expressed as ``repro.workload`` arrival
+processes and compiled to a trace, so both gates replay IDENTICAL
 arrival schedules (async/overlapped rounds throughout):
 
   uniform    — every client arrives, spread evenly over the straggler
-               window: the learned gate must MATCH the static gate
-               (both close on the last arrival; there is nothing to
-               save).
+               window (``UniformArrivals``): the learned gate must
+               MATCH the static gate (both close on the last arrival;
+               there is nothing to save).
   bursty     — 90% of the fleet lands in an early burst, the rest DROP
-               (never arrive): the static full-threshold gate burns its
-               whole timeout every round; the learned gate thresholds
-               at the attainable fraction and closes on the burst.
+               (``BurstyArrivals``): the static full-threshold gate
+               burns its whole timeout every round; the learned gate
+               thresholds at the attainable fraction and closes on the
+               burst.
   heavy_tail — lognormal arrival offsets with the extreme tail past
-               the timeout (effectively dropped): the static gate times
-               out; the learned gate closes just past the attainable
-               tail.
+               the timeout (``LognormalArrivals``, effectively
+               dropped): the static gate times out; the learned gate
+               closes just past the attainable tail.
 
 Per mode we report mean round wall-clock and mean inclusion (clients
 folded / clients expected). The acceptance bar (ISSUE 3): adaptive
@@ -33,58 +35,51 @@ from __future__ import annotations
 
 import argparse
 import json
-import threading
 import time
 
 import numpy as np
 
 from repro.core import AggregationService, UpdateStore
+from repro.workload import (
+    BurstyArrivals,
+    FixedSize,
+    LognormalArrivals,
+    RegimeSchedule,
+    UniformArrivals,
+    WorkloadSpec,
+    start_writer,
+)
 
 
-def scenario_offsets(name: str, n: int, spread: float, seed: int = 0):
-    """(offsets list for ARRIVING clients, expected fleet size n). A
-    client with no offset never arrives (drop-out)."""
-    rng = np.random.default_rng(seed)
+def scenario_process(name: str, spread: float):
+    """The scenario's arrival process (drop-out is the process's
+    business: clients it never emits simply don't arrive)."""
     if name == "uniform":
-        return list(np.linspace(spread / n, spread, n)), n
+        return UniformArrivals(spread=spread)
     if name == "bursty":
-        arriving = max(int(n * 0.9), 1)
-        burst = rng.uniform(0.05 * spread, 0.15 * spread, size=arriving)
-        return list(np.sort(burst)), n
+        return BurstyArrivals(spread=spread, arrive_frac=0.9,
+                              window=(0.05, 0.15))
     if name == "heavy_tail":
-        body = rng.lognormal(mean=np.log(0.2 * spread), sigma=0.6,
-                             size=n - 2)
-        # the extreme tail sits past any sane deadline: dropped
-        return list(np.sort(np.clip(body, 0.0, spread))), n
+        return LognormalArrivals(spread=spread, sigma=0.6,
+                                 median_frac=0.2, drop_clients=2)
     raise ValueError(name)
 
 
-def make_clients(n: int, p: int, seed: int = 1):
-    rng = np.random.default_rng(seed)
-    u = rng.normal(size=(n, p)).astype(np.float32)
-    w = rng.uniform(1, 7, size=(n,)).astype(np.float32)
-    return u, w
+def scenario_round(name: str, n: int, p: int, spread: float,
+                   seed: int = 0):
+    """One traced tenant-round for the scenario — replayed identically
+    by every gate and every measured round."""
+    spec = WorkloadSpec(
+        tenants=("default",), n_clients=n, rounds=1,
+        regimes=RegimeSchedule.single(scenario_process(name, spread),
+                                      name=name),
+        sizes=FixedSize(p),
+    )
+    return spec.build(seed).rounds[0].tenant("default")
 
 
-def spread_writer(store, u, w, offsets):
-    """Write client i at its scenario offset (absolute, from thread
-    start)."""
-
-    def run():
-        t0 = time.perf_counter()
-        for i, off in enumerate(offsets):
-            lag = off - (time.perf_counter() - t0)
-            if lag > 0:
-                time.sleep(lag)
-            store.write(f"c{i:04d}", u[i], weight=float(w[i]))
-
-    t = threading.Thread(target=run, daemon=True)
-    t.start()
-    return t
-
-
-def run_rounds(adaptive, offsets, expected, u, w, p, timeout, rounds,
-               warmup, cost_bias):
+def run_rounds(adaptive, tenant_round, seed, expected, p, timeout,
+               rounds, warmup, cost_bias):
     store = UpdateStore()
     svc = AggregationService(
         fusion="fedavg", local_strategy="jnp", store=store,
@@ -94,7 +89,7 @@ def run_rounds(adaptive, offsets, expected, u, w, p, timeout, rounds,
     )
     walls, inclusions, learn_walls = [], [], []
     for r in range(warmup + rounds):
-        writer = spread_writer(store, u, w, offsets)
+        writer = start_writer(store, tenant_round, seed)
         t0 = time.perf_counter()
         fused, rep = svc.aggregate(
             from_store=True, expected_clients=expected, async_round=True,
@@ -121,16 +116,16 @@ def run_rounds(adaptive, offsets, expected, u, w, p, timeout, rounds,
     }
 
 
-def bench(n, p, spread, timeout, rounds, warmup, cost_bias):
+def bench(n, p, spread, timeout, rounds, warmup, cost_bias, seed):
     results, wins = {}, 0
     for name in ("uniform", "bursty", "heavy_tail"):
-        offsets, expected = scenario_offsets(name, n, spread)
-        u, w = make_clients(expected, p)
+        tenant_round = scenario_round(name, n, p, spread, seed)
+        expected = tenant_round.expected
         per = {}
         for mode, adaptive in (("static", False), ("adaptive", True)):
             per[mode] = run_rounds(
-                adaptive, offsets, expected, u, w, p, timeout, rounds,
-                warmup, cost_bias,
+                adaptive, tenant_round, seed, expected, p, timeout,
+                rounds, warmup, cost_bias,
             )
             print(f"{name:>10} {mode:>8}: wall "
                   f"{per[mode]['mean_wall_seconds']:.3f}s inclusion "
@@ -165,6 +160,8 @@ def main():
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--warmup", type=int, default=2)
     ap.add_argument("--cost-bias", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace seed (arrival offsets, weights, payloads)")
     ap.add_argument("--out", default="BENCH_adaptive.json")
     args = ap.parse_args()
     if args.quick:
@@ -173,7 +170,7 @@ def main():
         args.rounds, args.warmup = 2, 2
     results, wins = bench(
         args.n, args.p, args.spread, args.timeout, args.rounds,
-        args.warmup, args.cost_bias,
+        args.warmup, args.cost_bias, args.seed,
     )
     print(f"adaptive matches-or-beats static in {wins}/3 scenarios")
     payload = {
@@ -183,7 +180,7 @@ def main():
             "spread_seconds": args.spread,
             "timeout_seconds": args.timeout, "rounds": args.rounds,
             "warmup_rounds": args.warmup, "cost_bias": args.cost_bias,
-            "quick": args.quick,
+            "seed": args.seed, "quick": args.quick,
         },
         "results": results,
         "wins": wins,

@@ -1,7 +1,8 @@
 """Monitor-overlapped async rounds vs the serialized PR-1 pipeline.
 
 One aggregator round where client arrivals are SPREAD over a straggler
-window (a writer thread sleeps between store writes), measured two ways:
+window (a ``repro.workload`` trace of ``UniformArrivals``, replayed by
+a writer thread), measured two ways:
 
   serialized — ``Monitor.wait()`` idles for the whole window, THEN the
                streamed pipeline ingests and fuses (the PR-1 round loop):
@@ -29,42 +30,50 @@ from __future__ import annotations
 
 import argparse
 import json
-import threading
 import time
 
 import numpy as np
 
 from repro.core import AggregationService, UpdateStore
+from repro.workload import (
+    FixedSize,
+    RegimeSchedule,
+    UniformArrivals,
+    WorkloadSpec,
+    start_writer,
+    trace_payload,
+)
 
 
-def make_clients(n: int, p: int, seed: int = 0):
-    rng = np.random.default_rng(seed)
-    u = rng.normal(size=(n, p)).astype(np.float32)
-    w = rng.uniform(1, 7, size=(n,)).astype(np.float32)
-    return u, w
+def make_round(n: int, p: int, spread: float, seed: int = 0):
+    """One traced tenant-round: client i arrives at ~i/n of the
+    straggler window (paper Fig. 12's staggered client arrivals)."""
+    spec = WorkloadSpec(
+        tenants=("default",), n_clients=n, rounds=1,
+        regimes=RegimeSchedule.single(UniformArrivals(spread=spread)),
+        sizes=FixedSize(p),
+    )
+    return spec.build(seed).rounds[0].tenant("default")
 
 
-def spread_writer(store: UpdateStore, u, w, spread: float):
-    """Write client i at ~i/n of the straggler window (paper Fig. 12's
-    staggered client arrivals)."""
-    n = u.shape[0]
-    pause = spread / n
-
-    def run():
-        for i in range(n):
-            time.sleep(pause)
-            store.write(f"c{i:04d}", u[i], weight=float(w[i]))
-
-    t = threading.Thread(target=run, daemon=True)
-    t.start()
-    return t
+def dense_ref(tenant_round, seed):
+    """The trace's deterministic payloads as the dense FedAvg formula
+    reference."""
+    u = np.stack([
+        trace_payload(seed, tenant_round.tenant, ev.client_id,
+                      tenant_round.dim)
+        for ev in tenant_round.events
+    ])
+    w = np.asarray([ev.weight for ev in tenant_round.events], np.float32)
+    return np.einsum("np,n->p", u, w) / (w.sum() + 1e-6)
 
 
-def run_round(svc: AggregationService, store, u, w, spread, async_round):
-    writer = spread_writer(store, u, w, spread)
+def run_round(svc: AggregationService, store, tenant_round, seed,
+              async_round):
+    writer = start_writer(store, tenant_round, seed)
     t0 = time.perf_counter()
     fused, rep = svc.aggregate(
-        from_store=True, expected_clients=u.shape[0],
+        from_store=True, expected_clients=tenant_round.expected,
         async_round=async_round,
     )
     wall = time.perf_counter() - t0
@@ -74,9 +83,10 @@ def run_round(svc: AggregationService, store, u, w, spread, async_round):
     return np.asarray(fused), rep, wall
 
 
-def bench(n, p, spread, rounds, timeout):
-    u, w = make_clients(n, p)
-    ref = np.einsum("np,n->p", u, w) / (w.sum() + 1e-6)
+def bench(n, p, spread, rounds, timeout, seed):
+    spread_round = make_round(n, p, spread, seed)
+    warm_round = make_round(n, p, 0.0, seed)   # all arrivals at once
+    ref = dense_ref(spread_round, seed)
     results = {}
     for mode, async_round in (("serialized", False), ("overlapped", True)):
         store = UpdateStore()
@@ -86,11 +96,11 @@ def bench(n, p, spread, rounds, timeout):
             stream_chunk_bytes=max(p * 4 * max(n // 8, 1), 1 << 20),
         )
         # warm round: compile the step executable outside the measurement
-        run_round(svc, store, u, w, spread=0.0, async_round=async_round)
+        run_round(svc, store, warm_round, seed, async_round=async_round)
         walls, overlaps = [], []
         for _ in range(rounds):
             fused, rep, wall = run_round(
-                svc, store, u, w, spread, async_round
+                svc, store, spread_round, seed, async_round
             )
             np.testing.assert_allclose(fused, ref, rtol=1e-4, atol=1e-4)
             assert rep.monitor is not None and rep.monitor.ready, (
@@ -123,19 +133,21 @@ def main():
     ap.add_argument("--spread", type=float, default=1.2)
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--timeout", type=float, default=30.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace seed (arrival offsets, weights, payloads)")
     ap.add_argument("--out", default="BENCH_async.json")
     args = ap.parse_args()
     if args.quick:
         args.n, args.p = 24, 20_000
         args.spread, args.rounds = 0.6, 2
     results, speedup = bench(
-        args.n, args.p, args.spread, args.rounds, args.timeout
+        args.n, args.p, args.spread, args.rounds, args.timeout, args.seed
     )
     payload = {
         "benchmark": "async_rounds",
         "config": {
             "n_clients": args.n, "p": args.p, "spread_seconds": args.spread,
-            "rounds": args.rounds, "quick": args.quick,
+            "rounds": args.rounds, "seed": args.seed, "quick": args.quick,
         },
         "results": results,
         "speedup": speedup,

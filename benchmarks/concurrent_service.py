@@ -9,9 +9,10 @@ semaphore (default 1) serializes only what the hardware requires, and
 the engines' single-flight compile cache lets K racing tenants pay ONE
 cold compile.
 
-Three deployments over identical per-tenant workloads (every tenant's
-writer spreads its n arrivals over the straggler window; rounds are
-async with a full-inclusion threshold):
+Three deployments over identical per-tenant workloads — ONE
+``repro.workload`` trace (``UniformArrivals`` over the straggler
+window, distinct deterministic payloads per tenant) replayed by every
+mode; rounds are async with a full-inclusion threshold:
 
   * serialized  — ONE service, rounds one at a time (the pre-scheduler
                   behavior): each tenant's round runs after the
@@ -52,38 +53,43 @@ import tracemalloc
 import numpy as np
 
 from repro.core import AggregationService, RoundScheduler, UpdateStore
+from repro.workload import (
+    FixedSize,
+    RegimeSchedule,
+    UniformArrivals,
+    WorkloadSpec,
+    start_writer,
+    trace_payload,
+)
 
 
-def make_tenant_clients(k: int, n: int, p: int, seed: int = 1):
-    """Distinct per-tenant updates/weights, so a cross-tenant steal or
-    a crossed accumulator cannot cancel out numerically."""
-    rng = np.random.default_rng(seed)
-    u = rng.normal(size=(k, n, p)).astype(np.float32)
-    w = rng.uniform(1, 7, size=(k, n)).astype(np.float32)
+def make_trace(tenants, n, p, spread, seed):
+    """ONE shared trace: per-tenant rounds with distinct deterministic
+    payload streams (``trace_payload`` keys on the tenant), so a
+    cross-tenant steal or a crossed accumulator cannot cancel out
+    numerically — and every mode replays the identical schedule."""
+    spec = WorkloadSpec(
+        tenants=tuple(tenants), n_clients=n, rounds=1,
+        regimes=RegimeSchedule.single(UniformArrivals(spread=spread)),
+        sizes=FixedSize(p),
+    )
+    return spec.build(seed).rounds[0]
+
+
+def dense_tenant(tenant_round, seed):
+    """The traced tenant-round as a dense (u, w) pair — the formula
+    reference every fused vector is checked against."""
+    u = np.stack([
+        trace_payload(seed, tenant_round.tenant, ev.client_id,
+                      tenant_round.dim)
+        for ev in tenant_round.events
+    ])
+    w = np.asarray([ev.weight for ev in tenant_round.events], np.float32)
     return u, w
 
 
 def fedavg_formula(u, w):
     return np.einsum("np,n->p", u, w) / (w.sum() + 1e-6)
-
-
-def spread_writer(store, tenant, u, w, spread):
-    """Write the tenant's n clients spread evenly over ``spread``
-    seconds (one daemon thread; the round is open while they land)."""
-    n = u.shape[0]
-
-    def run():
-        t0 = time.perf_counter()
-        for i in range(n):
-            lag = (i + 1) * spread / n - (time.perf_counter() - t0)
-            if lag > 0:
-                time.sleep(lag)
-            store.write(f"c{i:04d}", u[i], weight=float(w[i]),
-                        tenant=tenant)
-
-    t = threading.Thread(target=run, daemon=True)
-    t.start()
-    return t
 
 
 def _mk_service(store, n, p, timeout):
@@ -103,24 +109,24 @@ def _check_round(rep, fused, u_k, w_k, n, state):
         state["equivalent"] = False   # a steal or a lost update
 
 
-def run_serialized(tenants, u, w, p, spread, timeout, rounds):
+def run_serialized(tenants, trace_round, refs, seed, p, timeout, rounds):
     """ONE service, one round at a time — each tenant's writer starts
     with its OWN round, so the K straggler windows are paid end to end
     (the pre-scheduler deployment's cost)."""
-    n = u.shape[1]
+    n = trace_round.tenants[0].expected
     store = UpdateStore()
     svc = _mk_service(store, n, p, timeout)
     state = {"inclusions": [], "equivalent": True, "fused": {}}
     t0 = time.perf_counter()
     for _ in range(rounds):
-        for k, t in enumerate(tenants):
-            wt = spread_writer(store, t, u[k], w[k], spread)
+        for t in tenants:
+            wt = start_writer(store, trace_round.tenant(t), seed)
             fused, rep = svc.aggregate(
                 from_store=True, expected_clients=n, async_round=True,
                 tenant=t,
             )
             wt.join()
-            _check_round(rep, fused, u[k], w[k], n, state)
+            _check_round(rep, fused, *refs[t], n, state)
             state["fused"][t] = np.asarray(fused)
             store.clear(tenant=t)
     state["wall_seconds"] = time.perf_counter() - t0
@@ -128,11 +134,11 @@ def run_serialized(tenants, u, w, p, spread, timeout, rounds):
     return state
 
 
-def run_concurrent(tenants, u, w, p, spread, timeout, rounds):
+def run_concurrent(tenants, trace_round, refs, seed, p, timeout, rounds):
     """ONE service + RoundScheduler: every tenant's round executes NOW;
     straggler windows overlap, device folds share the semaphore, and
     racing tenants share one single-flight compile."""
-    n = u.shape[1]
+    n = trace_round.tenants[0].expected
     store = UpdateStore()
     svc = _mk_service(store, n, p, timeout)
     state = {"inclusions": [], "equivalent": True, "fused": {}}
@@ -140,8 +146,8 @@ def run_concurrent(tenants, u, w, p, spread, timeout, rounds):
     with RoundScheduler(svc) as sched:
         for _ in range(rounds):
             writers = [
-                spread_writer(store, t, u[k], w[k], spread)
-                for k, t in enumerate(tenants)
+                start_writer(store, trace_round.tenant(t), seed)
+                for t in tenants
             ]
             results = sched.run_round(
                 tenants, from_store=True, expected_clients=n,
@@ -149,9 +155,9 @@ def run_concurrent(tenants, u, w, p, spread, timeout, rounds):
             )
             for wt in writers:
                 wt.join()
-            for k, t in enumerate(tenants):
+            for t in tenants:
                 fused, rep = results[t]
-                _check_round(rep, fused, u[k], w[k], n, state)
+                _check_round(rep, fused, *refs[t], n, state)
                 state["fused"][t] = np.asarray(fused)
                 store.clear(tenant=t)
     state["wall_seconds"] = time.perf_counter() - t0
@@ -159,32 +165,32 @@ def run_concurrent(tenants, u, w, p, spread, timeout, rounds):
     return state
 
 
-def run_separate(tenants, u, w, p, spread, timeout, rounds):
+def run_separate(tenants, trace_round, refs, seed, p, timeout, rounds):
     """K isolated services (one per tenant — the PR-4 workaround for
     concurrent execution), rounds in K threads."""
-    n = u.shape[1]
+    n = trace_round.tenants[0].expected
     stores = {t: UpdateStore() for t in tenants}
     services = {t: _mk_service(stores[t], n, p, timeout) for t in tenants}
     state = {"inclusions": [], "equivalent": True, "fused": {}}
     lock = threading.Lock()
 
-    def one_tenant(k, t):
+    def one_tenant(t):
         for _ in range(rounds):
-            wt = spread_writer(stores[t], t, u[k], w[k], spread)
+            wt = start_writer(stores[t], trace_round.tenant(t), seed)
             fused, rep = services[t].aggregate(
                 from_store=True, expected_clients=n, async_round=True,
                 tenant=t,
             )
             wt.join()
             with lock:
-                _check_round(rep, fused, u[k], w[k], n, state)
+                _check_round(rep, fused, *refs[t], n, state)
                 state["fused"][t] = np.asarray(fused)
             stores[t].clear(tenant=t)
 
     t0 = time.perf_counter()
     threads = [
-        threading.Thread(target=one_tenant, args=(k, t), daemon=True)
-        for k, t in enumerate(tenants)
+        threading.Thread(target=one_tenant, args=(t,), daemon=True)
+        for t in tenants
     ]
     for th in threads:
         th.start()
@@ -199,7 +205,8 @@ def run_separate(tenants, u, w, p, spread, timeout, rounds):
 
 def bench(k, n, p, spread, timeout, rounds, seed):
     tenants = [f"app{i}" for i in range(k)]
-    u, w = make_tenant_clients(k, n, p, seed)
+    trace_round = make_trace(tenants, n, p, spread, seed)
+    refs = {t: dense_tenant(trace_round.tenant(t), seed) for t in tenants}
     # one shape bucket per distinct (n, p) pair — here all tenants share
     # one, which is exactly what the <= buckets acceptance pins down
     buckets = len({(n, p)})
@@ -212,7 +219,7 @@ def bench(k, n, p, spread, timeout, rounds, seed):
     tracemalloc.start()
     for mode, fn in runners.items():
         tracemalloc.reset_peak()
-        st = fn(tenants, u, w, p, spread, timeout, rounds)
+        st = fn(tenants, trace_round, refs, seed, p, timeout, rounds)
         _, peak = tracemalloc.get_traced_memory()
         results[mode] = {
             "total_wall_seconds": st["wall_seconds"],

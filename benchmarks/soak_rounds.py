@@ -1,0 +1,306 @@
+"""Long-horizon soak: hundreds of multi-tenant rounds on ONE service.
+
+The trace-driven counterpart of the single-scenario benches: a
+``repro.workload`` spec compiles (seeded, hash-stable) to a full
+horizon of per-tenant arrival schedules with REGIME SHIFTS mid-run
+(uniform -> bursty-dropout -> heavy-tail) and a cold-start tenant
+joining mid-soak, then the SAME trace is replayed through both gates
+on one ``RoundScheduler`` service:
+
+  static   — threshold_frac=1.0 / timeout every round, the whole run.
+  adaptive — the learned controller; mid-soak the service is KILLED
+             (scheduler shutdown, service dropped) and a fresh one
+             resumes from ``save_controller``/``load_controller`` —
+             post-resume rounds must close on the learned gate, not
+             re-warm from static.
+
+Measured over the whole horizon, per round and per regime segment:
+wall-clock (the cost trajectory), inclusion, gate source, drift /
+rewarm behavior at the regime boundaries, and the cold-start tenant's
+first gate (cross-tenant prior borrowing). Acceptance: post-resume
+continuity (source != static/cold), the churn tenant's first gate is
+the prior, and the adaptive gate's cumulative cost beats static at
+equal-or-better inclusion under the shifted schedule.
+
+Emits BENCH_soak.json (+ the replayable trace via --trace-out).
+
+Usage:
+  python benchmarks/soak_rounds.py --quick     # CI smoke (~30 s)
+  python benchmarks/soak_rounds.py             # full, 200 rounds (~4 min)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import AggregationService, RoundScheduler, UpdateStore
+from repro.workload import (
+    BurstyArrivals,
+    FixedSize,
+    LognormalArrivals,
+    Regime,
+    RegimeSchedule,
+    TenantChurn,
+    UniformArrivals,
+    WorkloadSpec,
+    start_writer,
+)
+
+
+def build_spec(args) -> WorkloadSpec:
+    """The soak's regime-shifted, churning workload. Boundaries at
+    1/3 and 2/3 of the horizon; the cold-start tenant joins between
+    the first shift and the restart."""
+    third = args.rounds // 3
+    return WorkloadSpec(
+        tenants=tuple(f"app{i}" for i in range(args.tenants)),
+        n_clients=args.n,
+        rounds=args.rounds,
+        regimes=RegimeSchedule([
+            Regime("uniform",
+                   UniformArrivals(spread=args.spread), 0),
+            Regime("bursty_dropout",
+                   BurstyArrivals(spread=args.spread, arrive_frac=0.75,
+                                  window=(0.05, 0.3)), third),
+            Regime("heavy_tail",
+                   LognormalArrivals(spread=2 * args.spread, sigma=0.6,
+                                     median_frac=0.2, drop_clients=2),
+                   2 * third),
+        ]),
+        sizes=FixedSize(args.p),
+        churn=TenantChurn(scheduled_joins=((args.churn_round, None),)),
+    )
+
+
+def _mk_service(store, args, adaptive):
+    return AggregationService(
+        fusion="fedavg", local_strategy="jnp", store=store,
+        threshold_frac=1.0, monitor_timeout=args.timeout,
+        adaptive=adaptive, cost_bias=args.cost_bias,
+        stream_chunk_bytes=max(args.p * 4 * max(args.n // 4, 1), 1 << 20),
+    )
+
+
+def run_soak(trace, args, adaptive: bool, ckpt_path: str):
+    """Replay the whole trace through one gate. Returns per-round
+    trajectory rows plus the restart-continuity record."""
+    store = UpdateStore()
+    svc = _mk_service(store, args, adaptive)
+    sched = RoundScheduler(svc)
+    rows = []
+    restart = {"round": args.restart_round, "post_resume_sources": {}}
+    seed = trace.seed
+    t_start = time.perf_counter()
+    try:
+        for rt in trace.rounds:
+            if rt.index == args.restart_round:
+                # the mid-soak kill: drop the scheduler AND the
+                # service; a fresh service resumes the learned gates
+                # from the controller checkpoint (static mode restarts
+                # too, so the two cost trajectories stay comparable)
+                sched.shutdown()
+                if adaptive:
+                    svc.save_controller(ckpt_path)
+                svc = _mk_service(store, args, adaptive)
+                if adaptive:
+                    svc.load_controller(ckpt_path)
+                sched = RoundScheduler(svc)
+            active = [tr.tenant for tr in rt.tenants]
+            writers = [start_writer(store, tr, seed) for tr in rt.tenants]
+            t0 = time.perf_counter()
+            results = sched.run_round(
+                active, from_store=True, expected_clients=args.n,
+                async_round=True,
+            )
+            wall = time.perf_counter() - t0
+            for w in writers:
+                w.join()
+            for tr in rt.tenants:
+                fused, rep = results[tr.tenant]
+                pol = rep.close_policy
+                source = pol.source if pol else "static"
+                snap = (svc.controller.snapshot(tr.tenant)
+                        if svc.controller is not None else {})
+                rows.append({
+                    "round": rt.index,
+                    "tenant": tr.tenant,
+                    "regime": tr.regime,
+                    "wall_seconds": wall,
+                    "inclusion": rep.n_clients / tr.expected,
+                    "source": source,
+                    "drift": snap.get("drift"),
+                    "rewarmed": source == "rewarm",
+                })
+                if rt.index == args.restart_round and adaptive:
+                    restart["post_resume_sources"][tr.tenant] = source
+                # stragglers that raced past the close age out here so
+                # every round's inclusion is measured against ITS trace
+                store.clear(tenant=tr.tenant)
+    finally:
+        sched.shutdown()
+    restart["continuity"] = bool(
+        restart["post_resume_sources"]
+        and all(s not in ("static", "cold")
+                for s in restart["post_resume_sources"].values())
+    ) if adaptive else None
+    return {
+        "rows": rows,
+        "restart": restart,
+        "total_wall_seconds": time.perf_counter() - t_start,
+    }
+
+
+def summarize(run, trace, args):
+    """Cost/inclusion trajectory -> per-regime and whole-horizon
+    aggregates. Round walls count ONCE per round (K tenants run
+    concurrently; the wall is the round's, not the tenant's)."""
+    rows = run["rows"]
+    round_walls = {}
+    for row in rows:
+        round_walls[row["round"]] = row["wall_seconds"]
+    segments = {}
+    for row in rows:
+        seg = segments.setdefault(row["regime"], {
+            "inclusions": [], "rounds": set(), "rewarm_rounds": 0,
+        })
+        seg["inclusions"].append(row["inclusion"])
+        seg["rounds"].add(row["round"])
+        seg["rewarm_rounds"] += int(row["rewarmed"])
+    out = {}
+    for name, seg in segments.items():
+        out[name] = {
+            "rounds": len(seg["rounds"]),
+            "cum_wall_seconds": float(sum(
+                round_walls[r] for r in seg["rounds"])),
+            "mean_inclusion": float(np.mean(seg["inclusions"])),
+            "rewarm_rounds": seg["rewarm_rounds"],
+        }
+    return {
+        "cum_wall_seconds": float(sum(round_walls.values())),
+        "mean_inclusion": float(np.mean(
+            [row["inclusion"] for row in rows])),
+        "rewarm_rounds": int(sum(row["rewarmed"] for row in rows)),
+        "segments": out,
+    }
+
+
+def prior_borrowing(run, args):
+    """The cold-start tenant's FIRST gate: with other tenants' curves
+    pooled, it should borrow the cross-tenant prior, not re-pay the
+    static warmup."""
+    first = next((row for row in run["rows"]
+                  if row["tenant"].startswith("churn")), None)
+    if first is None:
+        return {"borrowed": False, "reason": "no churn tenant in trace"}
+    return {
+        "tenant": first["tenant"],
+        "join_round": first["round"],
+        "first_source": first["source"],
+        "borrowed": first["source"] == "prior",
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--tenants", type=int, default=3)
+    ap.add_argument("--n", type=int, default=8)
+    ap.add_argument("--p", type=int, default=20_000)
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--spread", type=float, default=0.15)
+    ap.add_argument("--timeout", type=float, default=0.8)
+    ap.add_argument("--cost-bias", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--restart-round", type=int, default=None,
+                    help="kill/resume the service before this round "
+                         "(default: mid-horizon)")
+    ap.add_argument("--churn-round", type=int, default=None,
+                    help="cold-start tenant join round (default: "
+                         "~40%% of the horizon)")
+    ap.add_argument("--trace-out", default=None,
+                    help="also write the replayable trace JSON here")
+    ap.add_argument("--out", default="BENCH_soak.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.tenants, args.n, args.p = 2, 6, 4_000
+        args.rounds, args.spread, args.timeout = 24, 0.12, 0.6
+    if args.restart_round is None:
+        args.restart_round = args.rounds // 2
+    if args.churn_round is None:
+        args.churn_round = max(int(args.rounds * 0.4), 1)
+
+    spec = build_spec(args)
+    trace = spec.build(args.seed)
+    print(f"[soak] trace: {trace.n_rounds} rounds x "
+          f"{args.tenants}(+churn) tenants, n={args.n} p={args.p} "
+          f"hash={trace.trace_hash()[:16]}")
+    if args.trace_out:
+        trace.to_json(args.trace_out)
+        print(f"[soak] wrote trace {args.trace_out}")
+
+    with tempfile.TemporaryDirectory() as td:
+        ckpt = os.path.join(td, "soak_ckpt")
+        runs, summaries = {}, {}
+        for mode, adaptive in (("static", False), ("adaptive", True)):
+            run = run_soak(trace, args, adaptive, ckpt)
+            runs[mode] = run
+            summaries[mode] = summarize(run, trace, args)
+            s = summaries[mode]
+            print(f"[soak] {mode:>8}: cum wall {s['cum_wall_seconds']:.2f}s "
+                  f"mean inclusion {s['mean_inclusion']:.3f} "
+                  f"rewarm rounds {s['rewarm_rounds']}")
+            for name, seg in s["segments"].items():
+                print(f"[soak]   {name:>15}: {seg['rounds']} rounds, "
+                      f"wall {seg['cum_wall_seconds']:.2f}s, inclusion "
+                      f"{seg['mean_inclusion']:.3f}, rewarms "
+                      f"{seg['rewarm_rounds']}")
+
+    restart = runs["adaptive"]["restart"]
+    borrow = prior_borrowing(runs["adaptive"], args)
+    adaptive_wins = (
+        summaries["adaptive"]["cum_wall_seconds"]
+        < summaries["static"]["cum_wall_seconds"]
+        and summaries["adaptive"]["mean_inclusion"]
+        >= summaries["static"]["mean_inclusion"] - 1.0 / args.n - 1e-9
+    )
+    acceptance = bool(
+        restart["continuity"] and borrow.get("borrowed") and adaptive_wins
+    )
+    print(f"[soak] restart@{restart['round']}: post-resume sources "
+          f"{restart['post_resume_sources']} "
+          f"continuity={restart['continuity']}")
+    print(f"[soak] prior borrowing: {borrow}")
+    print(f"[soak] adaptive beats static at equal-or-better inclusion: "
+          f"{adaptive_wins}; acceptance={acceptance}")
+
+    payload = {
+        "benchmark": "soak_rounds",
+        "config": {
+            "tenants": args.tenants, "n_clients": args.n, "p": args.p,
+            "rounds": args.rounds, "spread_seconds": args.spread,
+            "timeout_seconds": args.timeout, "cost_bias": args.cost_bias,
+            "seed": args.seed, "restart_round": args.restart_round,
+            "churn_round": args.churn_round, "quick": args.quick,
+        },
+        "trace_hash": trace.trace_hash(),
+        "summaries": summaries,
+        "restart": restart,
+        "prior_borrowing": borrow,
+        "adaptive_beats_static": bool(adaptive_wins),
+        "acceptance": acceptance,
+        "trajectory": {
+            mode: runs[mode]["rows"] for mode in runs
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -529,3 +529,23 @@ class AdaptiveController:
         """Tenants with at least one observed round."""
         with self._lock:
             return sorted(self._models)
+
+    def snapshot(self, tenant: str) -> Dict:
+        """One consistent trajectory row (soak benches, monitoring):
+        the tenant's curve state under a single lock hold — reading
+        ``model(t).drift`` / rewarm flags piecemeal can interleave
+        with a concurrent ``observe_round``."""
+        with self._lock:
+            m = self._models.get(tenant)
+            return {
+                "tenant": tenant,
+                "rounds": 0 if m is None else m.rounds,
+                "drift": None if m is None else m.drift,
+                "attainable": None if m is None else m.attainable,
+                "tail_wait": None if m is None else m.tail_wait,
+                "est_seconds": self._est_seconds.get(tenant),
+                "drift_saturated": self._drift_sat.get(tenant, 0),
+                "rewarm_pending": tenant in self._rewarm_pending,
+                "rewarmed": tenant in self._rewarmed,
+                "prior_rounds": self._prior.rounds,
+            }

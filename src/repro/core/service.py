@@ -610,7 +610,7 @@ class AggregationService:
             chunk_rows = self._chunk_rows(n, row_bytes)
             load = Workload(
                 update_bytes=row_bytes, n_clients=n,
-                dtype_bytes=dtype.itemsize,
+                dtype_bytes=dtype.itemsize, params=p,
             )
             n_hint = max(n, expected or 0, 1)
             can_stream, stream_note = self._stream_mode(fusion, p, n_hint)
@@ -774,7 +774,7 @@ class AggregationService:
         row_bytes = self._row_bytes(p, dtype)
         load = Workload(
             update_bytes=row_bytes, n_clients=n_proj,
-            dtype_bytes=dtype.itemsize,
+            dtype_bytes=dtype.itemsize, params=p,
         )
         # cost against the same warmth the round itself will plan with —
         # a cached stream step must not be billed the cold compile term
@@ -826,7 +826,7 @@ class AggregationService:
         chunk_rows = self._chunk_rows(n_proj, row_bytes)
         load = Workload(
             update_bytes=row_bytes, n_clients=n_proj,
-            dtype_bytes=dtype.itemsize,
+            dtype_bytes=dtype.itemsize, params=p,
         )
         plan = self.planner.plan(
             load, fusion,
@@ -967,9 +967,12 @@ class AggregationService:
         # §III-D3 seamless transition: if next round's projected load would
         # overflow a single chip (even the streamed local path then needs
         # the store as its backing set), tell clients to write to the store.
-        next_load = Workload(
-            update_bytes=load.update_bytes,
-            n_clients=max(n, expected_clients or n),
+        # replace(), not a fresh Workload: the projected load must keep
+        # the round's REAL payload dtype/size — rebuilding with the
+        # default dtype_bytes=4 made int8 rounds project 4x the params
+        # they actually carry
+        next_load = dataclasses.replace(
+            load, n_clients=max(n, expected_clients or n),
         )
         route_next = (
             classify(next_load, self.hw) is WorkloadClass.DISTRIBUTED

@@ -191,6 +191,7 @@ class UpdateStore:
         datanode_bw: float = 117e6,  # ~1 GbE in bytes/s, paper's testbed
         clock: Callable[[], float] = time.monotonic,
         sidecar_grace_seconds: float = 0.5,
+        wall_clock: Callable[[], float] = time.monotonic,
     ):
         assert backend in ("memory", "disk")
         self.backend = backend
@@ -202,6 +203,10 @@ class UpdateStore:
         self.replication = replication
         self.datanode_bw = datanode_bw
         self.clock = clock   # arrival timestamping; injectable for tests
+        # sidecar grace windows measure REAL elapsed time, not the
+        # arrival timebase — separately injectable so grace-expiry
+        # tests run on a scripted clock instead of sleeping it out
+        self.wall_clock = wall_clock
         # all index maps are keyed (tenant, client_id) — the partition key
         self._mem: Dict[_Key, Tuple[np.ndarray, float]] = {}
         self._weights: Dict[_Key, float] = {}
@@ -1145,7 +1150,7 @@ class UpdateStore:
             with open(path + ".w") as f:
                 weight = float(f.read())
         except (FileNotFoundError, ValueError):
-            now = time.monotonic()   # real elapsed, not self.clock
+            now = self.wall_clock()   # real elapsed, not self.clock
             first = self._ext_seen.setdefault(key, now)
             if now - first < self.sidecar_grace_seconds:
                 return None   # sidecar may still be in flight
@@ -1212,7 +1217,7 @@ class UpdateStore:
         concurrent pass) also re-tries next tick."""
         src_base = os.path.join(src_dir, f"{cid}.npy")
         if not os.path.exists(src_base + ".w"):
-            now = time.monotonic()
+            now = self.wall_clock()
             first = self._ext_seen.setdefault((tenant, cid), now)
             if now - first < self.sidecar_grace_seconds:
                 return False   # defer until .w lands (or grace expires)

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+from typing import Optional
 
 from repro.utils.mem import TPU_V5E, HardwareSpec
 
@@ -32,9 +33,12 @@ class WorkloadClass(enum.Enum):
 class Workload:
     """One aggregation round's load descriptor (the paper's (w_s, n))."""
 
-    update_bytes: int          # w_s
+    update_bytes: int          # w_s — REAL on-wire bytes per update
     n_clients: int             # n
     dtype_bytes: int = 4
+    # explicit param count for payloads where update_bytes is not
+    # params * dtype_bytes (int8 codes carry fp32 per-block scales)
+    params: Optional[int] = None
 
     @property
     def total_bytes(self) -> int:  # S = w_s * n
@@ -42,7 +46,31 @@ class Workload:
 
     @property
     def num_params(self) -> int:
+        if self.params is not None:
+            return self.params
         return self.update_bytes // self.dtype_bytes
+
+    @classmethod
+    def for_params(cls, num_params: int, n_clients: int,
+                   compressed: bool = False,
+                   block: Optional[int] = None) -> "Workload":
+        """Build a load descriptor from a parameter count using the
+        REAL transport payload size. With ``compressed=True`` the
+        per-update bytes are the int8 codes + fp32 per-block scales
+        (``repro.core.compress.compressed_bytes``), ~4x smaller than
+        fp32 — classifying compressed rounds at fp32 size overstates S
+        by the same factor and can push HBM_LOCAL work to the
+        DISTRIBUTED path for no reason."""
+        if compressed:
+            # local import: compress pulls in jax; keep the classifier
+            # importable without it
+            from repro.core.compress import BLOCK, compressed_bytes
+            return cls(
+                update_bytes=compressed_bytes(num_params, block or BLOCK),
+                n_clients=n_clients, dtype_bytes=1, params=num_params,
+            )
+        return cls(update_bytes=num_params * 4, n_clients=n_clients,
+                   dtype_bytes=4, params=num_params)
 
 
 # fraction of HBM usable for update storage (rest: program, output, fp32

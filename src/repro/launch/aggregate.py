@@ -180,8 +180,12 @@ def main():
     )
     overlapped = args.async_rounds or args.adaptive \
         or args.concurrent_tenants > 0
-    load = Workload(update_bytes=spec.bytes_fp32, n_clients=args.clients)
-    print(f"[aggregate] model={args.model} w_s={bytes_to_human(spec.bytes_fp32)} "
+    # classify on the REAL wire size: --compress rounds move int8
+    # codes + scales, ~4x smaller than fp32 — at fp32 bytes the banner
+    # could report DISTRIBUTED for work that fits one chip's HBM
+    load = Workload.for_params(n_params, args.clients,
+                               compressed=args.compress)
+    print(f"[aggregate] model={args.model} w_s={bytes_to_human(load.update_bytes)} "
           f"n={args.clients} S={bytes_to_human(load.total_bytes)} "
           f"class={classify(load).value}"
           + (f" adaptive(cost_bias={args.cost_bias})" if args.adaptive

@@ -413,16 +413,19 @@ def test_spool_tailer_ingests_external_writes(tmp_path):
     arrival timestamp stamped, visible to count()/reads."""
     store = UpdateStore(backend="disk", spool_dir=str(tmp_path))
     with SpoolTailer(store, poll_interval=0.05) as tailer:
+        # the writer runs AFTER the tailer's start()-time catch-up
+        # ingest, so registration exercises tailing proper
         def foreign_writer():
-            time.sleep(0.1)
             np.save(tmp_path / "ext0.npy", np.full(8, 3.0, np.float32))
             with open(tmp_path / "ext0.npy.w", "w") as f:
                 f.write("2.5")
         th = threading.Thread(target=foreign_writer)
         th.start()
+        # event-driven wait: woken by the tailer's registration, no
+        # fixed sleep-and-poll
         deadline = time.time() + 5.0
         while store.count() < 1 and time.time() < deadline:
-            time.sleep(0.02)
+            store.wait_for_arrival(timeout=0.2)
         th.join()
         assert store.count() == 1, "tailer never saw the external blob"
         upd, weight = store.read("ext0")
@@ -430,21 +433,25 @@ def test_spool_tailer_ingests_external_writes(tmp_path):
         np.testing.assert_array_equal(np.asarray(upd),
                                       np.full(8, 3.0, np.float32))
         assert "ext0" in store.arrival_times()
-    # stopped: a later foreign write is NOT auto-registered
+    # stopped: the context exit JOINED the tailer thread, so a later
+    # foreign write cannot be auto-registered (no settle sleep needed)
     np.save(tmp_path / "ext1.npy", np.ones(8, np.float32))
-    time.sleep(0.15)
     assert store.count() == 1
 
 
 def test_ingest_external_skips_partial_blobs(tmp_path):
+    # grace windows run on the injected WALL clock: expiry is scripted,
+    # not slept out
+    wall = ScriptedClock()
     store = UpdateStore(backend="disk", spool_dir=str(tmp_path),
-                        sidecar_grace_seconds=0.05)
+                        sidecar_grace_seconds=0.05,
+                        wall_clock=wall.clock)
     (tmp_path / "broken.npy").write_bytes(b"\x93NUMPY garbage")
     np.save(tmp_path / "good.npy", np.ones(4, np.float32))
     # a blob with no sidecar defers for the grace window (the sidecar
     # may still be in flight behind the blob)
     assert store.ingest_external() == []
-    time.sleep(0.1)
+    wall.sleep(0.1)
     assert store.ingest_external() == ["good"]
     assert store.client_ids() == ["good"]
     _, weight = store.read("good")
@@ -457,7 +464,9 @@ def test_ingest_external_waits_for_inflight_sidecar(tmp_path):
     """The review race: blob lands and MULTIPLE ingest passes run
     before the sidecar is written — the update must register with the
     sidecar's weight, not freeze at the 1.0 default."""
-    store = UpdateStore(backend="disk", spool_dir=str(tmp_path))
+    wall = ScriptedClock()
+    store = UpdateStore(backend="disk", spool_dir=str(tmp_path),
+                        wall_clock=wall.clock)
     np.save(tmp_path / "c7.npy", np.ones(4, np.float32))
     assert store.ingest_external() == []          # within grace
     assert store.ingest_external() == []          # event-storm re-pass
@@ -484,8 +493,9 @@ def test_tailed_arrivals_feed_async_round(tmp_path):
     )
 
     def foreign_writer():
+        # no pacing sleeps: the tailer's own poll cadence already
+        # staggers discovery relative to the open round
         for i in range(5):
-            time.sleep(0.05)
             np.save(tmp_path / f"e{i}.npy", u[i])
             with open(tmp_path / f"e{i}.npy.w", "w") as f:
                 f.write(repr(float(w[i])))

@@ -180,10 +180,14 @@ def test_compiled_cache_single_flight_under_race():
 
     cache = CompiledCache("race")
     built = []
+    all_started = threading.Event()
 
     def builder():
         built.append(1)
-        time.sleep(0.05)   # hold the build slot so racers pile up
+        # hold the build slot until every racer thread is running, so
+        # they genuinely pile up on the in-flight build (event-gated,
+        # not a timing-guessed sleep)
+        all_started.wait(timeout=10.0)
         return lambda x: x + 1
 
     results = []
@@ -197,6 +201,7 @@ def test_compiled_cache_single_flight_under_race():
     threads = [threading.Thread(target=hit) for _ in range(8)]
     for t in threads:
         t.start()
+    all_started.set()
     for t in threads:
         t.join()
     assert len(built) == 1          # one build, shared by all racers

@@ -121,8 +121,15 @@ def test_operator_docs_cover_their_subjects():
                  "RoundReport", "drift", "device_concurrency",
                  "set_quota", "rewarm", "store_stats", "RoundScheduler",
                  "compress=True", "--compress", "compress_update",
-                 "bytes_ingested", "stream_chunk_bytes"):
+                 "bytes_ingested", "stream_chunk_bytes",
+                 "Reading soak trajectories", "BENCH_soak.json",
+                 "save_controller", "rewarm_patience", "drift_gain"):
         assert term in tuning, f"TUNING.md lost {term!r}"
+    bench_readme = _read("benchmarks/README.md")
+    for term in ("BENCH_soak.json", "soak_rounds.py", "trace_hash",
+                 "repro.workload", "post_resume_sources",
+                 "prior_borrowing", "--trace-out", "--seed"):
+        assert term in bench_readme, f"benchmarks/README.md lost {term!r}"
     arch = _read("docs/ARCHITECTURE.md")
     for term in ("compress_update", "weighted_sum_dequant_pallas",
                  "CompressedBlock", "error feedback", ".scale",

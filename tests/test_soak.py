@@ -1,0 +1,100 @@
+"""Tier-1 wiring for the long-horizon soak bench (benchmarks/soak_rounds.py).
+
+The --quick soak is the trace-harness end-to-end regression gate: a
+regime-shifted multi-tenant trace replayed through both gates on one
+RoundScheduler service, with a mid-soak service kill/resume through
+save_controller/load_controller. The smoke asserts the full acceptance
+bundle — post-resume learned-gate continuity, cross-tenant prior
+borrowing for the cold-start tenant, adaptive beating static at
+equal-or-better inclusion — plus trace reproducibility (same seed,
+same hash) against the bench's own spec builder.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+
+import soak_rounds  # noqa: E402
+
+
+def _quick_args(**over):
+    ns = argparse.Namespace(
+        quick=True, tenants=2, n=6, p=4_000, rounds=24, spread=0.12,
+        timeout=0.6, cost_bias=0.5, seed=0, restart_round=12,
+        churn_round=9, trace_out=None, out=None,
+    )
+    for k, v in over.items():
+        setattr(ns, k, v)
+    return ns
+
+
+def test_soak_spec_reproducible_by_seed(tmp_path):
+    """Identical --seed => identical trace FILE (hash-compared), and a
+    different seed diverges — the replayability contract the soak's
+    BENCH numbers rest on."""
+    args = _quick_args()
+    spec = soak_rounds.build_spec(args)
+    a, b = spec.build(args.seed), spec.build(args.seed)
+    assert a.trace_hash() == b.trace_hash()
+    p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+    a.to_json(str(p1))
+    b.to_json(str(p2))
+    assert p1.read_bytes() == p2.read_bytes()
+    assert spec.build(args.seed + 1).trace_hash() != a.trace_hash()
+
+
+def test_soak_spec_shape():
+    """The soak's trace really exercises the harness: three regime
+    segments with exact boundaries and a cold-start tenant joining
+    mid-horizon."""
+    args = _quick_args()
+    trace = soak_rounds.build_spec(args).build(args.seed)
+    regimes = [rt.tenants[0].regime for rt in trace.rounds]
+    assert regimes[0] == "uniform"
+    assert regimes[args.rounds // 3 - 1] == "uniform"
+    assert regimes[args.rounds // 3] == "bursty_dropout"
+    assert regimes[2 * (args.rounds // 3)] == "heavy_tail"
+    names = {tr.tenant for rt in trace.rounds for tr in rt.tenants}
+    assert names == {"app0", "app1", "churn0"}
+    first_churn = min(rt.index for rt in trace.rounds
+                      if any(tr.tenant == "churn0" for tr in rt.tenants))
+    assert first_churn == args.churn_round
+
+
+def test_soak_benchmark_quick_smoke(tmp_path):
+    """The --quick soak is a tier-1 gate (mirrors the concurrent
+    benchmark's): the kill/resume continuity assertion, prior
+    borrowing, and adaptive-beats-static must hold end to end."""
+    out = tmp_path / "BENCH_soak.json"
+    trace_out = tmp_path / "soak_trace.json"
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join(REPO, "benchmarks", "soak_rounds.py"),
+         "--quick", "--out", str(out), "--trace-out", str(trace_out)],
+        capture_output=True, text=True, timeout=280,
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(REPO, "src")},
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    payload = json.loads(out.read_text())
+    assert payload["acceptance"] is True, payload
+    # mid-soak kill/resume: every post-resume round closed on a
+    # carried-over gate, not static re-warmup
+    restart = payload["restart"]
+    assert restart["continuity"] is True
+    assert restart["post_resume_sources"]
+    assert all(s not in ("static", "cold")
+               for s in restart["post_resume_sources"].values())
+    assert payload["prior_borrowing"]["borrowed"] is True
+    assert payload["adaptive_beats_static"] is True
+    # the bench's emitted trace file matches an in-process rebuild
+    from repro.workload import WorkloadTrace
+    emitted = WorkloadTrace.from_json(str(trace_out))
+    args = _quick_args(seed=payload["config"]["seed"])
+    rebuilt = soak_rounds.build_spec(args).build(args.seed)
+    assert emitted.trace_hash() == rebuilt.trace_hash()
+    assert emitted.trace_hash() == payload["trace_hash"]

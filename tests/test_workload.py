@@ -1,0 +1,376 @@
+"""Trace-driven workload generator (repro/workload/):
+
+  * arrival processes — seeded determinism, serialization round-trip,
+    inter-arrival statistics within tolerance (Poisson / bursty /
+    lognormal / diurnal / uniform);
+  * regime schedules — exact shift boundaries;
+  * tenant churn — scheduled joins land exactly, random joins are
+    seed-deterministic;
+  * size distributions — per-tenant stability, model-config lookup;
+  * trace compilation — same seed => identical trace file (hash
+    compared), JSON round-trip equality, spec round-trip rebuilds the
+    identical trace;
+  * replay — scripted-clock arrivals land at the traced offsets,
+    payloads are deterministic;
+  * the compressed-transport classify fix (Workload.for_params).
+"""
+import bisect
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import UpdateStore
+from repro.core.compress import BLOCK, compressed_bytes
+from repro.workload import (
+    BurstyArrivals,
+    DiurnalArrivals,
+    FixedSize,
+    LognormalArrivals,
+    LognormalSize,
+    ModelConfigSize,
+    PoissonArrivals,
+    Regime,
+    RegimeSchedule,
+    TenantChurn,
+    UniformArrivals,
+    Workload,
+    WorkloadClass,
+    WorkloadSpec,
+    WorkloadTrace,
+    arrival_from_dict,
+    classify,
+    replay_round,
+    size_from_dict,
+    trace_payload,
+)
+
+
+class ScriptedClock:
+    def __init__(self):
+        self.t = 0.0
+        self._events = []
+
+    def at(self, t, fn):
+        bisect.insort(self._events, (t, id(fn), fn))
+
+    def clock(self):
+        return self.t
+
+    def sleep(self, seconds):
+        self.t += seconds
+        while self._events and self._events[0][0] <= self.t:
+            _, _, fn = self._events.pop(0)
+            fn()
+
+
+def _spec(rounds=10, tenants=("app0", "app1"), n=8, **kw):
+    defaults = dict(
+        regimes=RegimeSchedule([
+            Regime("uniform", UniformArrivals(spread=0.4), 0),
+            Regime("bursty", BurstyArrivals(spread=0.4, arrive_frac=0.75),
+                   max(rounds // 2, 1)),
+        ]),
+        sizes=LognormalSize(median_dim=2000, sigma=0.4),
+        churn=TenantChurn(scheduled_joins=((rounds // 2, None),)),
+    )
+    defaults.update(kw)
+    return WorkloadSpec(tenants=tuple(tenants), n_clients=n,
+                        rounds=rounds, **defaults)
+
+
+# -- seeded determinism --------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_same_seed_identical_trace(seed):
+    spec = _spec()
+    a, b = spec.build(seed), spec.build(seed)
+    assert a == b
+    assert a.trace_hash() == b.trace_hash()
+    assert a.trace_hash() != spec.build(seed + 1).trace_hash()
+
+
+def test_same_seed_identical_trace_file(tmp_path):
+    """The acceptance bar is byte-level: two builds under one seed
+    write IDENTICAL trace files."""
+    spec = _spec()
+    p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+    spec.build(7).to_json(str(p1))
+    spec.build(7).to_json(str(p2))
+    assert p1.read_bytes() == p2.read_bytes()
+
+
+def test_trace_insensitive_to_build_order():
+    """Per-(round, tenant) seed streams: a tenant's round draws do not
+    depend on how many tenants came before it in the loop."""
+    wide = _spec(tenants=("app0", "app1", "app2"), churn=None)
+    narrow = _spec(tenants=("app2",), churn=None)
+    t_wide = wide.build(3)
+    t_narrow = narrow.build(3)
+    for r in range(t_wide.n_rounds):
+        assert t_wide.rounds[r].tenant("app2").events == \
+            t_narrow.rounds[r].tenant("app2").events
+
+
+# -- serialization -------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_trace_json_roundtrip_equality(seed, tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("trace")
+    trace = _spec().build(seed)
+    path = str(tmp / f"t{seed}.json")
+    trace.to_json(path)
+    back = WorkloadTrace.from_json(path)
+    assert back == trace
+    assert back.trace_hash() == trace.trace_hash()
+
+
+def test_spec_roundtrip_rebuilds_identical_trace():
+    """spec -> dict -> spec survives the trip well enough to rebuild
+    the exact same trace (the replayability contract)."""
+    spec = _spec()
+    trace = spec.build(11)
+    spec2 = WorkloadSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert spec2.build(11).trace_hash() == trace.trace_hash()
+
+
+def test_arrival_dict_roundtrip_every_kind():
+    procs = [
+        UniformArrivals(spread=0.7, arrive_frac=0.9),
+        PoissonArrivals(rate=12.5),
+        BurstyArrivals(spread=0.5, arrive_frac=0.8, window=(0.1, 0.4)),
+        LognormalArrivals(spread=1.1, sigma=0.3, drop_clients=1),
+        DiurnalArrivals(period=2.0, base_rate=1.0, peak_rate=9.0),
+    ]
+    for p in procs:
+        back = arrival_from_dict(json.loads(json.dumps(p.to_dict())))
+        assert back == p
+    with pytest.raises(ValueError):
+        arrival_from_dict({"kind": "nope"})
+    with pytest.raises(ValueError):
+        arrival_from_dict({"kind": "uniform", "bogus_field": 1})
+
+
+def test_size_dict_roundtrip_every_kind():
+    for s in (FixedSize(dim=123), LognormalSize(median_dim=500),
+              ModelConfigSize(models=("CNN4.6",), scale=500)):
+        assert size_from_dict(json.loads(json.dumps(s.to_dict()))) == s
+    with pytest.raises(ValueError):
+        size_from_dict({"kind": "nope"})
+    with pytest.raises(ValueError):
+        ModelConfigSize(models=("NOT_A_MODEL",))
+
+
+def test_trace_version_guard(tmp_path):
+    trace = _spec(rounds=2).build(0)
+    d = trace.to_dict()
+    d["version"] = 999
+    with pytest.raises(ValueError):
+        WorkloadTrace.from_dict(d)
+
+
+# -- arrival statistics --------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(rate=st.floats(2.0, 25.0), seed=st.integers(0, 1000))
+def test_poisson_interarrival_mean(rate, seed):
+    rng = np.random.default_rng(seed)
+    offs = PoissonArrivals(rate=rate).sample(rng, 4000)
+    gaps = np.diff(np.concatenate([[0.0], offs]))
+    assert len(offs) == 4000
+    assert np.all(np.diff(offs) >= 0)
+    assert np.mean(gaps) == pytest.approx(1.0 / rate, rel=0.15)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 200), frac=st.floats(0.3, 1.0),
+       seed=st.integers(0, 1000))
+def test_bursty_window_and_dropout(n, frac, seed):
+    rng = np.random.default_rng(seed)
+    proc = BurstyArrivals(spread=2.0, arrive_frac=frac,
+                          window=(0.05, 0.15))
+    offs = proc.sample(rng, n)
+    assert len(offs) == max(int(n * frac), 1)
+    assert np.all(offs >= 0.05 * 2.0) and np.all(offs <= 0.15 * 2.0)
+    assert np.all(np.diff(offs) >= 0)
+
+
+def test_uniform_matches_classic_schedule():
+    """The exact (i+1) * spread / n offsets the benchmarks scripted
+    inline before the generator existed."""
+    rng = np.random.default_rng(0)
+    offs = UniformArrivals(spread=1.0).sample(rng, 10)
+    np.testing.assert_allclose(offs, [(i + 1) * 0.1 for i in range(10)])
+
+
+def test_lognormal_drops_and_clips():
+    rng = np.random.default_rng(3)
+    offs = LognormalArrivals(spread=0.5, drop_clients=2).sample(rng, 12)
+    assert len(offs) == 10
+    assert np.all(offs >= 0.0) and np.all(offs <= 0.5)
+
+
+def test_diurnal_bounded_and_rate_sensitive():
+    slow = DiurnalArrivals(period=4.0, base_rate=0.5, peak_rate=2.0)
+    fast = DiurnalArrivals(period=4.0, base_rate=8.0, peak_rate=64.0)
+    n_slow = [len(slow.sample(np.random.default_rng(s), 64))
+              for s in range(8)]
+    n_fast = [len(fast.sample(np.random.default_rng(s), 64))
+              for s in range(8)]
+    for offs in (slow.sample(np.random.default_rng(0), 64),):
+        assert np.all(offs >= 0.0) and np.all(offs < 4.0)
+    assert np.mean(n_fast) > np.mean(n_slow)
+
+
+def test_diurnal_phase_advances_with_round_index():
+    """round_advance sweeps the window across the diurnal cycle, so
+    identical rng seeds draw different arrival patterns per round."""
+    proc = DiurnalArrivals(period=4.0, base_rate=0.5, peak_rate=32.0,
+                           round_advance=0.5)
+    a = proc.sample(np.random.default_rng(1), 64, round_index=0)
+    b = proc.sample(np.random.default_rng(1), 64, round_index=1)
+    assert len(a) != len(b) or not np.allclose(a, b)
+
+
+# -- regime schedule -----------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(boundary=st.integers(1, 99))
+def test_regime_shift_boundary_exact(boundary):
+    sched = RegimeSchedule([
+        Regime("before", UniformArrivals(spread=1.0), 0),
+        Regime("after", BurstyArrivals(spread=1.0), boundary),
+    ])
+    assert sched.at(boundary - 1).name == "before"
+    assert sched.at(boundary).name == "after"
+    assert sched.at(boundary + 1).name == "after"
+    assert sched.at(0).name == "before"
+
+
+def test_regime_schedule_validation():
+    with pytest.raises(ValueError):
+        RegimeSchedule([])
+    with pytest.raises(ValueError):
+        RegimeSchedule([Regime("late", UniformArrivals(), 5)])
+    with pytest.raises(ValueError):
+        RegimeSchedule([Regime("a", UniformArrivals(), 0),
+                        Regime("b", BurstyArrivals(), 0)])
+    with pytest.raises(ValueError):
+        RegimeSchedule.single(UniformArrivals()).at(-1)
+
+
+def test_trace_rounds_carry_regime_labels():
+    trace = _spec(rounds=6, churn=None).build(0)
+    assert [rt.tenants[0].regime for rt in trace.rounds] == \
+        ["uniform"] * 3 + ["bursty"] * 3
+
+
+# -- churn ---------------------------------------------------------------------
+
+
+def test_scheduled_churn_joins_exactly():
+    churn = TenantChurn(scheduled_joins=((3, 2), (5, None)))
+    active = churn.schedule(np.random.default_rng(0), 8)
+    assert active[2] == []
+    assert active[3] == ["churn0"]
+    assert active[4] == ["churn0"]
+    assert active[5] == ["churn1"]          # churn0's lifetime expired
+    assert active[7] == ["churn1"]
+    with pytest.raises(ValueError):
+        TenantChurn(scheduled_joins=((9, None),)).schedule(
+            np.random.default_rng(0), 8)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_random_churn_deterministic_per_seed(seed):
+    churn = TenantChurn(join_rate=0.4, lifetime_rounds=5)
+    a = churn.schedule(np.random.default_rng(seed), 30)
+    b = churn.schedule(np.random.default_rng(seed), 30)
+    assert a == b
+
+
+# -- sizes ---------------------------------------------------------------------
+
+
+def test_tenant_dim_stable_across_rounds():
+    """A tenant's clients train ONE model: its dim is sampled once and
+    held for the whole horizon."""
+    trace = _spec(rounds=6).build(5)
+    dims = {}
+    for rt in trace.rounds:
+        for tr in rt.tenants:
+            dims.setdefault(tr.tenant, set()).add(tr.dim)
+    assert all(len(ds) == 1 for ds in dims.values())
+
+
+def test_size_distributions_sample_sanely():
+    rng = np.random.default_rng(0)
+    assert FixedSize(dim=777).sample(rng) == 777
+    assert all(LognormalSize(median_dim=100, min_dim=64).sample(rng) >= 64
+               for _ in range(50))
+    from repro.configs import CNN_SUITE
+    dim = ModelConfigSize(models=("CNN4.6",), scale=1000).sample(rng)
+    assert dim == CNN_SUITE["CNN4.6"].num_params // 1000
+
+
+# -- replay --------------------------------------------------------------------
+
+
+def test_replay_lands_arrivals_at_traced_offsets():
+    """On a scripted clock the store's arrival timestamps equal the
+    trace offsets exactly — the deterministic substrate the adaptive
+    tests stand on."""
+    trace = _spec(rounds=1, churn=None).build(9)
+    tr = trace.rounds[0].tenant("app0")
+    clk = ScriptedClock()
+    store = UpdateStore(clock=clk.clock)
+    wrote = replay_round(store, tr, seed=9, clock=clk.clock,
+                         sleep=clk.sleep)
+    arrivals = store.arrival_times("app0")
+    assert wrote == len(tr.events)
+    for ev in tr.events:
+        assert arrivals[ev.client_id] == pytest.approx(ev.offset,
+                                                       abs=1e-12)
+        u, w = store.read(ev.client_id, tenant="app0")
+        assert w == pytest.approx(ev.weight)
+        assert np.array_equal(
+            u, trace_payload(9, "app0", ev.client_id, tr.dim))
+
+
+def test_trace_payload_deterministic_and_distinct():
+    a = trace_payload(1, "app0", "client00000", 128)
+    b = trace_payload(1, "app0", "client00000", 128)
+    assert np.array_equal(a, b)
+    assert a.dtype == np.float32 and a.shape == (128,)
+    assert not np.array_equal(a, trace_payload(1, "app1", "client00000",
+                                               128))
+    assert not np.array_equal(a, trace_payload(2, "app0", "client00000",
+                                               128))
+
+
+# -- compressed-transport classify fix ----------------------------------------
+
+
+def test_classify_uses_real_compressed_bytes():
+    """PR-6 int8 rounds move ~4x fewer bytes than fp32; classifying at
+    fp32 size pushed HBM_LOCAL work onto the DISTRIBUTED path. A fleet
+    whose fp32 S overflows one chip but whose compressed S fits must
+    classify HBM_LOCAL."""
+    num_params, n = 1_000_000, 3_500        # fp32 S = 14 GB > 12 GB cap
+    dense = Workload.for_params(num_params, n)
+    packed = Workload.for_params(num_params, n, compressed=True)
+    assert classify(dense) is WorkloadClass.DISTRIBUTED
+    assert classify(packed) is WorkloadClass.HBM_LOCAL
+    # the descriptor carries the REAL wire size and the REAL param count
+    assert packed.update_bytes == compressed_bytes(num_params, BLOCK)
+    assert packed.num_params == num_params
+    assert dense.num_params == num_params
+    assert packed.total_bytes < dense.total_bytes / 3.5
