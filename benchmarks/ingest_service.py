@@ -1,0 +1,295 @@
+"""Ingest front-end benchmark: sustained HTTP uploads/s and client-
+observed ingest latency for K tenants x N simulated clients, with
+mid-run disconnect injection — then fair-scheduled rounds checked
+formula-exact against the trace (zero lost, zero duplicated updates).
+
+  PYTHONPATH=src python benchmarks/ingest_service.py            # full
+  PYTHONPATH=src python benchmarks/ingest_service.py --quick    # tier-1
+
+The full run is the acceptance shape: K=4 tenants x 256 clients each
+(P=4000 fp32 -> ~16 KiB frames), an uploader worker pool (clients
+outnumber threads ~16:1, like real keep-alive front-ends), and for a
+deterministic subset of clients a PARTIAL upload first — the frame's
+header plus half its body, then a hard socket close mid-request. The
+front-end must land nothing for those, the client retries, and every
+(tenant, client) registers EXACTLY once: the store count, per-tenant
+round inclusion, and the fused-vs-formula check together pin down
+"zero lost / zero duplicated".
+
+Emits BENCH_ingest.json (schema in benchmarks/README.md)."""
+from __future__ import annotations
+
+import argparse
+import json
+import queue
+import socket
+import threading
+import time
+
+import numpy as np
+
+from repro.core import AggregationService, FairRoundScheduler, UpdateStore
+from repro.serving import HttpStoreClient, encode_update
+from repro.workload import (
+    FixedSize,
+    RegimeSchedule,
+    UniformArrivals,
+    WorkloadSpec,
+    trace_payload,
+)
+
+
+def make_trace(k, n, p, seed):
+    spec = WorkloadSpec(
+        tenants=tuple(f"app{i}" for i in range(k)),
+        n_clients=n, rounds=1,
+        regimes=RegimeSchedule.single(UniformArrivals(spread=0.0)),
+        sizes=FixedSize(dim=p),
+    )
+    return spec.build(seed)
+
+
+def dense_tenant(tenant_round, seed):
+    u = np.stack([
+        trace_payload(seed, tenant_round.tenant, ev.client_id,
+                      tenant_round.dim)
+        for ev in tenant_round.events
+    ])
+    w = np.asarray([ev.weight for ev in tenant_round.events], np.float32)
+    return u, w
+
+
+def fedavg_formula(u, w):
+    return np.einsum("np,n->p", u, w) / (w.sum() + 1e-6)
+
+
+def partial_upload(port, token, body, fraction=0.5):
+    """A mid-upload disconnect: send the full request head declaring
+    the real Content-Length, then only ``fraction`` of the body, then
+    a hard close. The server must land NOTHING for it."""
+    cut = max(1, int(len(body) * fraction))
+    head = (
+        f"POST /v1/upload HTTP/1.1\r\n"
+        f"Host: 127.0.0.1\r\n"
+        f"Authorization: Bearer {token}\r\n"
+        f"Content-Type: application/octet-stream\r\n"
+        f"Content-Length: {len(body)}\r\n\r\n"
+    ).encode()
+    s = socket.create_connection(("127.0.0.1", port), timeout=5.0)
+    try:
+        s.sendall(head + body[:cut])
+        # FIN after the partial body: the server reads the head plus
+        # half the payload, then hits EOF short of Content-Length —
+        # deterministic (an RST can destroy buffered-but-unread bytes
+        # and race the accept, making the server miss the request
+        # entirely)
+    finally:
+        s.close()
+
+
+def run_uploads(port, tokens, jobs, workers, disconnect_set, seed,
+                dim):
+    """Drain ``jobs`` ((tenant, client_id, weight)) through a worker
+    pool of keep-alive HTTP clients. Clients in ``disconnect_set``
+    suffer a mid-upload disconnect FIRST, then upload for real.
+    Returns (latencies_seconds, disconnects_injected)."""
+    q: "queue.Queue" = queue.Queue()
+    for job in jobs:
+        q.put(job)
+    lat_lists = [[] for _ in range(workers)]
+    injected = [0] * workers
+    errors = []
+
+    def worker(idx):
+        clients = {}
+        while True:
+            try:
+                tenant, cid, weight = q.get_nowait()
+            except queue.Empty:
+                return
+            try:
+                cli = clients.get(tenant)
+                if cli is None:
+                    cli = clients[tenant] = HttpStoreClient(
+                        "127.0.0.1", port, token=tokens[tenant],
+                        max_attempts=16,
+                    )
+                u = trace_payload(seed, tenant, cid, dim)
+                if (tenant, cid) in disconnect_set:
+                    partial_upload(
+                        port, tokens[tenant],
+                        encode_update(cid, u, weight=weight),
+                    )
+                    injected[idx] += 1
+                t0 = time.perf_counter()
+                cli.write(cid, u, weight=weight, tenant=tenant)
+                lat_lists[idx].append(time.perf_counter() - t0)
+            except BaseException as e:   # pragma: no cover - surfaced
+                errors.append(f"{tenant}/{cid}: {e!r}")
+                return
+
+    threads = [threading.Thread(target=worker, args=(i,), daemon=True)
+               for i in range(workers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise RuntimeError(f"{len(errors)} upload workers failed: "
+                           f"{errors[:5]}")
+    lats = sorted(x for lst in lat_lists for x in lst)
+    return lats, sum(injected), wall
+
+
+def bench(k, n, p, workers, disconnects, timeout, seed):
+    from repro.serving import IngestServer
+
+    trace = make_trace(k, n, p, seed)
+    tenants = [tr.tenant for tr in trace.rounds[0].tenants]
+    tokens = {t: f"tok-{t}" for t in tenants}
+    store = UpdateStore()
+    svc = AggregationService(
+        fusion="fedavg", local_strategy="jnp", store=store,
+        threshold_frac=1.0, monitor_timeout=timeout,
+        stream_chunk_bytes=max(p * 4 * max(n // 4, 1), 1 << 20),
+    )
+    jobs, refs, disconnect_set = [], {}, set()
+    for tr in trace.rounds[0].tenants:
+        refs[tr.tenant] = dense_tenant(tr, seed)
+        for i, ev in enumerate(tr.events):
+            jobs.append((tr.tenant, ev.client_id, float(ev.weight)))
+            if i < disconnects:
+                disconnect_set.add((tr.tenant, ev.client_id))
+    # deterministic job interleaving across tenants (not per-tenant
+    # runs of N): round-robin by client index
+    jobs.sort(key=lambda j: (j[1], j[0]))
+
+    with IngestServer(
+        store, {tok: t for t, tok in tokens.items()},
+        queue_size=max(4 * workers, 64), batch_max=32,
+        read_timeout=5.0,
+    ) as srv:
+        lats, injected, wall = run_uploads(
+            srv.port, tokens, jobs, workers, disconnect_set, seed, p,
+        )
+        counts = {t: store.count(tenant=t) for t in tenants}
+        # the torn connections' handler threads run concurrently with
+        # the uploaders — give their disconnect accounting a moment to
+        # settle before snapshotting
+        deadline = time.perf_counter() + 10.0
+        metrics = srv.metrics()
+        while (metrics.get("disconnect", 0) < injected
+               and time.perf_counter() < deadline):
+            time.sleep(0.05)
+            metrics = srv.metrics()
+
+        with FairRoundScheduler(svc, max_running=2) as sched:
+            results = sched.run_round(tenants, from_store=True,
+                                      expected_clients=n)
+        exact = {}
+        for t in tenants:
+            fused, rep = results[t]
+            u, w = refs[t]
+            ref = fedavg_formula(u, w)
+            exact[t] = bool(
+                rep.n_clients == n
+                and np.allclose(np.asarray(fused), ref,
+                                rtol=1e-5, atol=1e-5)
+            )
+
+    total = len(jobs)
+
+    def pct(q):
+        return float(lats[min(int(q * len(lats)), len(lats) - 1)])
+
+    payload = {
+        "bench": "ingest_service",
+        "config": {
+            "tenants": k, "clients_per_tenant": n, "dim": p,
+            "workers": workers, "disconnects_per_tenant": disconnects,
+            "seed": seed,
+        },
+        "uploads": {
+            "total": total,
+            "accepted": metrics.get("accepted", 0),
+            "disconnects_injected": injected,
+            "disconnects_seen": metrics.get("disconnect", 0),
+            "wall_seconds": wall,
+            "sustained_uploads_per_s": total / max(wall, 1e-9),
+            "p50_latency_s": pct(0.50),
+            "p99_latency_s": pct(0.99),
+            "batches": metrics.get("batches", 0),
+            "max_batch": metrics.get("max_batch", 0),
+        },
+        "store_counts": counts,
+        "rounds_exact": exact,
+        "trace_hash": trace.trace_hash(),
+    }
+    payload["acceptance"] = bool(
+        all(c == n for c in counts.values())        # zero lost / dup
+        and metrics.get("accepted", 0) == total     # every job landed
+        and injected == k * disconnects             # faults were real
+        and metrics.get("disconnect", 0) >= injected
+        and all(exact.values())                     # fused == formula
+    )
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="HTTP ingest throughput/latency under K tenants x "
+                    "N clients with mid-run disconnects."
+    )
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=256,
+                    help="clients per tenant")
+    ap.add_argument("--dim", type=int, default=4_000)
+    ap.add_argument("--workers", type=int, default=16,
+                    help="uploader pool size (keep-alive connections)")
+    ap.add_argument("--disconnects", type=int, default=8,
+                    help="clients per tenant that disconnect "
+                         "mid-upload before retrying")
+    ap.add_argument("--timeout", type=float, default=30.0,
+                    help="round gate deadline")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="tier-1 smoke: 4 tenants x 64 clients, "
+                         "P=2000")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default BENCH_ingest.json "
+                         "next to this script's repo root)")
+    args = ap.parse_args()
+    if args.quick:
+        args.clients = min(args.clients, 64)
+        args.dim = min(args.dim, 2_000)
+        args.workers = min(args.workers, 8)
+        args.disconnects = min(args.disconnects, 4)
+
+    payload = bench(args.tenants, args.clients, args.dim, args.workers,
+                    args.disconnects, args.timeout, args.seed)
+    payload["config"]["quick"] = bool(args.quick)
+    up = payload["uploads"]
+    print(f"[ingest] {payload['config']['tenants']}x"
+          f"{payload['config']['clients_per_tenant']} uploads="
+          f"{up['accepted']}/{up['total']} "
+          f"sustained={up['sustained_uploads_per_s']:.0f}/s "
+          f"p50={up['p50_latency_s'] * 1e3:.1f}ms "
+          f"p99={up['p99_latency_s'] * 1e3:.1f}ms "
+          f"disconnects={up['disconnects_injected']} "
+          f"acceptance={payload['acceptance']}")
+    out = args.out
+    if out is None:
+        import os
+        out = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_ingest.json",
+        )
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[ingest] wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,9 +15,42 @@ from repro.configs import get_config
 from repro.core import AggregationService
 from repro.data import FederatedLoader, SyntheticLM
 from repro.fl import Client, FederatedServer
-from repro.launch.serve import generate
 from repro.models import build_model
 from repro.optim import sgd
+
+
+def generate(model, params, prompt: jnp.ndarray, n_new: int,
+             cache_len: int, temperature: float = 0.0, seed: int = 0):
+    """Greedy/temperature decode. prompt: (B, T0) int32.
+
+    Lives with the example: ``repro.launch.serve`` is the aggregation
+    ingest service now, and this demo's batched decode loop is the only
+    consumer of a toy text-generation path."""
+    B, T0 = prompt.shape
+    cache = model.init_cache(B, cache_len)
+    step = jax.jit(
+        lambda p, c, t, pos: model.decode_step(p, c, t, pos)
+    )
+    rng = jax.random.PRNGKey(seed)
+    toks = [prompt]
+    logits = None
+    # teacher-forced prefill through the decode path (cache warmup)
+    for t in range(T0):
+        cache, logits = step(params, cache, prompt[:, t: t + 1],
+                             jnp.int32(t))
+    cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out = [cur]
+    for i in range(n_new - 1):
+        cache, logits = step(params, cache, cur, jnp.int32(T0 + i))
+        if temperature > 0:
+            rng, k = jax.random.split(rng)
+            cur = jax.random.categorical(
+                k, logits / temperature, axis=-1
+            )[:, None].astype(jnp.int32)
+        else:
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(cur)
+    return jnp.concatenate(toks + out, axis=1)
 
 
 def main():

@@ -17,6 +17,8 @@ Layers:
   secure.py      pairwise additive-mask secure aggregation
   service.py     AggregationService facade (seamless transition)
                  + RoundScheduler (concurrent per-tenant round workers)
+                 + FairRoundScheduler (weighted-fair, capacity-aware
+                 round admission for the serving layer)
 """
 from repro.core.adaptive import AdaptiveController, ArrivalModel, ClosePolicy
 from repro.core.distributed import DistributedEngine
@@ -27,6 +29,7 @@ from repro.core.planner import Plan, Planner
 from repro.core.secure import SecureMasking
 from repro.core.service import (
     AggregationService,
+    FairRoundScheduler,
     RoundReport,
     RoundScheduler,
 )
@@ -52,6 +55,7 @@ __all__ = [
     "ClosePolicy",
     "DEFAULT_TENANT",
     "DistributedEngine",
+    "FairRoundScheduler",
     "FusionAlgorithm",
     "LocalEngine",
     "Monitor",

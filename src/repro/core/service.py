@@ -1162,3 +1162,230 @@ class RoundScheduler:
 
     def __exit__(self, *exc) -> None:
         self.shutdown()
+
+
+class FairRoundScheduler:
+    """Waiting/running round admission for N tenants on ONE service —
+    the sarathi-serve shape: submitted rounds join a per-tenant WAITING
+    queue, a single admission loop moves them to RUNNING under a
+    concurrency cap, picking the next tenant by weighted-fair virtual
+    time with a capacity gate.
+
+    Versus :class:`RoundScheduler` (one always-on worker per tenant,
+    all submitted rounds run at once), this scheduler makes admission a
+    DECISION:
+
+      * ``max_running`` bounds rounds in flight — on an edge host the
+        real bound is host staging memory and device time, not thread
+        count;
+      * tenant selection is weighted fair queuing: each tenant carries
+        a virtual time advanced by ``1 / weight`` per admitted round,
+        and the admission loop picks the eligible tenant with the
+        smallest vtime (ties by name) — a tenant with weight 2 gets
+        twice the round admissions of a weight-1 tenant under
+        contention, and an idle tenant's first round is never starved
+        behind a busy tenant's backlog (its vtime is clamped forward to
+        the current minimum on arrival, the classic WFQ no-credit
+        rule);
+      * capacity awareness: a round whose projected host-staging
+        footprint (2x streamed chunk, from the store partition's live
+        ``meta`` — double-buffered blocks) does not fit
+        ``capacity_bytes`` alongside the running rounds' footprints
+        waits, EXCEPT when nothing is running (a too-big round must
+        run alone rather than deadlock);
+      * one round per tenant in flight: same-tenant submissions queue
+        FIFO (the service's per-tenant round lock would serialize them
+        anyway — keeping them waiting keeps their slot available for
+        OTHER tenants: no head-of-line blocking).
+
+    Use exactly like ``RoundScheduler``::
+
+        with FairRoundScheduler(svc, max_running=2,
+                                weights={"appA": 2.0}) as sched:
+            futs = [sched.submit(t, from_store=True,
+                                 expected_clients=48)
+                    for t in tenants]
+            results = [f.result() for f in futs]
+    """
+
+    def __init__(
+        self,
+        service: AggregationService,
+        max_running: int = 2,
+        weights: Optional[Dict[str, float]] = None,
+        capacity_bytes: Optional[int] = None,
+    ):
+        if max_running < 1:
+            raise ValueError("max_running must be >= 1")
+        self.service = service
+        self.max_running = int(max_running)
+        self.capacity_bytes = capacity_bytes
+        self._weights = dict(weights or {})
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._waiting: Dict[str, "queue.SimpleQueue"] = {}
+        self._waiting_count: Dict[str, int] = {}
+        self._running: Dict[str, int] = {}      # tenant -> footprint
+        self._vtime: Dict[str, float] = {}
+        self._closed = False
+        self._drained = False
+        self._admitted = 0
+        self._admission_order: List[str] = []
+        self._loop = threading.Thread(
+            target=self._admission_loop, name="fair-scheduler",
+            daemon=True,
+        )
+        self._loop.start()
+
+    # -- submission ----------------------------------------------------------
+    def submit(
+        self, tenant: str = DEFAULT_TENANT, **aggregate_kwargs
+    ) -> "Future":
+        """Queue one round; returns a Future resolving to
+        ``(fused, RoundReport)`` once the round is admitted AND run."""
+        fut: Future = Future()
+        with self._wake:
+            if self._closed:
+                raise RuntimeError("FairRoundScheduler is shut down")
+            q = self._waiting.get(tenant)
+            if q is None:
+                q = self._waiting[tenant] = queue.SimpleQueue()
+            q.put((fut, aggregate_kwargs))
+            self._waiting_count[tenant] = (
+                self._waiting_count.get(tenant, 0) + 1
+            )
+            self._wake.notify_all()
+        return fut
+
+    def run_round(
+        self, tenants: Sequence[str], **aggregate_kwargs
+    ) -> Dict[str, Tuple[PyTree, RoundReport]]:
+        """One fair fan-out: submit a round per tenant, wait for all."""
+        futs = {t: self.submit(t, **aggregate_kwargs) for t in tenants}
+        return {t: f.result() for t, f in futs.items()}
+
+    # -- admission -----------------------------------------------------------
+    def _footprint(self, tenant: str) -> int:
+        """Projected host-staging bytes for the tenant's next round:
+        two streamed chunks (double buffering), sized from the LIVE
+        store partition. An empty partition projects 0 — the round
+        will gate on its monitor, not on staging memory."""
+        store = getattr(self.service, "store", None)
+        if store is None:
+            return 0
+        try:
+            n, p, dtype = store.meta(tenant)
+        except LookupError:
+            return 0
+        row = self.service._row_bytes(p, dtype)
+        rows = self.service._chunk_rows(n, row)
+        return 2 * rows * row
+
+    def _eligible_locked(self) -> Optional[str]:
+        """The weighted-fair pick among tenants with waiting rounds,
+        honoring the running cap, one-in-flight-per-tenant, and the
+        capacity gate. Caller holds ``self._lock``."""
+        if len(self._running) >= self.max_running:
+            return None
+        used = sum(self._running.values())
+        best: Optional[Tuple[float, str]] = None
+        for tenant, count in self._waiting_count.items():
+            if count <= 0 or tenant in self._running:
+                continue
+            vt = self._vtime.get(tenant, 0.0)
+            if best is None or (vt, tenant) < best:
+                # capacity gate: the footprint probe touches the store
+                # index (cheap), so only probe the current best
+                fp = self._footprint(tenant)
+                if self.capacity_bytes is not None and self._running \
+                        and used + fp > self.capacity_bytes:
+                    continue
+                best = (vt, tenant)
+        return best[1] if best else None
+
+    def _admission_loop(self) -> None:
+        while True:
+            with self._wake:
+                tenant = self._eligible_locked()
+                while tenant is None:
+                    if self._closed and not any(
+                        c > 0 for c in self._waiting_count.values()
+                    ) and not self._running:
+                        self._drained = True
+                        self._wake.notify_all()
+                        return
+                    self._wake.wait(timeout=0.5)
+                    tenant = self._eligible_locked()
+                fut, kwargs = self._waiting[tenant].get_nowait()
+                self._waiting_count[tenant] -= 1
+                fp = self._footprint(tenant)
+                self._running[tenant] = fp
+                # WFQ no-credit rule: an idle tenant resumes at the
+                # current virtual time, not at zero — it gets its fair
+                # share from NOW, not a starvation-inducing backlog of
+                # credit
+                floor = min(
+                    (self._vtime[t] for t in self._running
+                     if t in self._vtime), default=0.0,
+                )
+                vt = max(self._vtime.get(tenant, 0.0), floor)
+                weight = max(self._weights.get(tenant, 1.0), 1e-9)
+                self._vtime[tenant] = vt + 1.0 / weight
+                self._admitted += 1
+                self._admission_order.append(tenant)
+            worker = threading.Thread(
+                target=self._run_one, args=(tenant, fut, kwargs),
+                name=f"fair-round:{tenant}", daemon=True,
+            )
+            worker.start()
+
+    def _run_one(self, tenant: str, fut: "Future", kwargs: dict) -> None:
+        if not fut.set_running_or_notify_cancel():
+            with self._wake:
+                self._running.pop(tenant, None)
+                self._wake.notify_all()
+            return
+        try:
+            fut.set_result(
+                self.service.aggregate(tenant=tenant, **kwargs)
+            )
+        except BaseException as exc:
+            fut.set_exception(exc)
+        finally:
+            with self._wake:
+                self._running.pop(tenant, None)
+                self._wake.notify_all()
+
+    # -- introspection / shutdown --------------------------------------------
+    def running(self) -> List[str]:
+        """Tenants with an admitted round in flight."""
+        with self._lock:
+            return sorted(self._running)
+
+    def waiting(self) -> Dict[str, int]:
+        """Waiting round count per tenant."""
+        with self._lock:
+            return {t: c for t, c in self._waiting_count.items() if c}
+
+    def admission_order(self) -> List[str]:
+        """Tenants in admission order (the fairness audit trail)."""
+        with self._lock:
+            return list(self._admission_order)
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop accepting submissions; drain waiting rounds, then stop
+        the admission loop. ``wait`` blocks until drained."""
+        with self._wake:
+            self._closed = True
+            self._wake.notify_all()
+        if wait:
+            with self._wake:
+                while not self._drained:
+                    self._wake.wait(timeout=0.5)
+            self._loop.join(timeout=10.0)
+
+    def __enter__(self) -> "FairRoundScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -87,7 +87,9 @@ import os
 import queue
 import threading
 import time
-from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
+from typing import (
+    Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple,
+)
 
 import numpy as np
 
@@ -386,22 +388,35 @@ class UpdateStore:
             self._unlink([key])
 
     def _quota_check_locked(
-        self, key: _Key, raw_bytes: int
+        self, key: _Key, raw_bytes: int,
+        pend_counts: Optional[Dict[str, int]] = None,
+        pend_bytes: Optional[Dict[str, int]] = None,
+        pend_raw: Optional[Dict[_Key, int]] = None,
     ) -> Tuple[str, Dict[_Key, Tuple[int, Optional[Tuple]]]]:
         """Decide what admitting ``key`` (``raw_bytes`` logical bytes)
         does to its tenant's quota. Returns ``(verdict, victims)``:
         verdict ``"ok"`` (victims already evicted from the index;
         caller passes the returned {key -> (eviction version, owned
         blob identity)} map to ``_unlink_evicted`` outside the lock)
-        or ``"reject"``. Caller holds ``self._lock``."""
+        or ``"reject"``. Caller holds ``self._lock``.
+
+        ``pend_*`` carry a ``write_batch``'s earlier items — admitted
+        and staged but not yet registered — so intra-batch admissions
+        can't over-fill the budget the registrations will consume."""
         tenant = key[0]
         q = self._quotas.get(tenant)
         if q is None:
             return "ok", {}
-        replacing = key in self._nbytes
-        new_count = self._counts.get(tenant, 0) + (0 if replacing else 1)
-        new_bytes = self._tenant_bytes.get(tenant, 0) + raw_bytes \
-            - (self._nbytes.get(key, 0) if replacing else 0)
+        p_counts = (pend_counts or {}).get(tenant, 0)
+        p_bytes = (pend_bytes or {}).get(tenant, 0)
+        p_raw = pend_raw or {}
+        replacing = key in self._nbytes or key in p_raw
+        prior_raw = (p_raw[key] if key in p_raw
+                     else self._nbytes.get(key, 0)) if replacing else 0
+        new_count = self._counts.get(tenant, 0) + p_counts \
+            + (0 if replacing else 1)
+        new_bytes = self._tenant_bytes.get(tenant, 0) + p_bytes \
+            + raw_bytes - prior_raw
         over_count = q.max_updates is not None and new_count > q.max_updates
         over_bytes = q.max_bytes is not None and new_bytes > q.max_bytes
         if not over_count and not over_bytes:
@@ -447,6 +462,23 @@ class UpdateStore:
         self._nbytes[key] = raw_bytes
 
     # -- client side --------------------------------------------------------
+    def _normalize_update(
+        self, update
+    ) -> Tuple[Optional[CompressedUpdate], Optional[np.ndarray], int]:
+        """``(cu, vec, raw_bytes)`` for one incoming update: exactly
+        one of ``cu``/``vec`` is set; ``raw`` is the logical stored
+        payload the quota/stats budget against."""
+        if isinstance(update, CompressedUpdate):
+            # quota/stats budget the REAL stored payload: codes + scales
+            return update, None, update.nbytes
+        vec = np.asarray(
+            update if getattr(update, "ndim", None) == 1
+            else tree_to_flat_vector(update)
+        )
+        if vec.dtype.kind in "biu":   # ints/bools promote; floats keep
+            vec = vec.astype(np.float32)
+        return None, vec, int(vec.nbytes)
+
     def write(
         self,
         client_id: str,
@@ -462,111 +494,191 @@ class UpdateStore:
         installed for ``tenant``, an over-budget write raises
         :class:`QuotaExceededError` (``reject``) or evicts the tenant's
         oldest resident updates to make room (``evict``)."""
-        if not _valid_tenant(tenant):
-            raise ValueError(
-                f"invalid tenant name {tenant!r}: must be a non-empty "
-                "single path component (it names a spool subdirectory)"
-            )
-        key = (tenant, client_id)
-        if isinstance(update, CompressedUpdate):
-            vec = None
-            cu: Optional[CompressedUpdate] = update
-            # quota/stats budget the REAL stored payload: codes + scales
-            raw = cu.nbytes
-        else:
-            cu = None
-            vec = np.asarray(
-                update if getattr(update, "ndim", None) == 1
-                else tree_to_flat_vector(update)
-            )
-            if vec.dtype.kind in "biu":   # ints/bools promote; floats keep
-                vec = vec.astype(np.float32)
-            raw = int(vec.nbytes)
-        nbytes = raw * self.replication
-        latency = nbytes / (self.datanode_bw * self.n_datanodes)
-        # quota enforcement BEFORE any blob lands on disk: a rejected
-        # write never leaves an orphan file, and evict-policy victims
-        # free their budget before the newcomer stages. The unlocked
-        # emptiness probe keeps the no-quota ingest hot path at ONE
-        # lock acquisition (a quota installed concurrently can miss at
-        # most the writes already in flight — the documented bound).
-        verdict, victims = "ok", {}
-        if self._quotas:
+        res = self.write_batch([(client_id, update, weight, tenant)])[0]
+        if isinstance(res, BaseException):
+            raise res
+        return res
+
+    def write_batch(
+        self, items: Sequence[Tuple[str, object, float, str]]
+    ) -> List[object]:
+        """Land several updates with ONE registration-lock acquisition
+        and ONE arrival notification — the ingest front-end's batched
+        commit path (``repro.serving.IngestQueue`` coalesces concurrent
+        uploads into these).
+
+        ``items`` is a sequence of ``(client_id, update, weight,
+        tenant)``. Returns one result per item, in order: the modeled
+        write latency (float) on success, or the exception instance
+        (``ValueError`` for an invalid tenant, ``QuotaExceededError``
+        on a reject-policy refusal) — per-item failures never abort the
+        rest of the batch, and a rejected item stages NO blob, exactly
+        like a rejected ``write``.
+
+        Semantics match N sequential ``write`` calls: per-item quota
+        decisions see earlier batch items (the in-flight bytes/counts
+        are carried into each check), duplicate keys are last-writer-
+        wins, and stats count every item."""
+        results: List[object] = [None] * len(items)
+        # per-tenant deltas from earlier batch items admitted but not
+        # yet registered — the quota check must see them or a batch
+        # could over-admit past the budget
+        pend_counts: Dict[str, int] = {}
+        pend_bytes: Dict[str, int] = {}
+        pend_raw: Dict[_Key, int] = {}
+        staged = []
+        for i, (client_id, update, weight, tenant) in enumerate(items):
+            if not _valid_tenant(tenant):
+                results[i] = ValueError(
+                    f"invalid tenant name {tenant!r}: must be a "
+                    "non-empty single path component (it names a "
+                    "spool subdirectory)"
+                )
+                continue
+            key = (tenant, client_id)
+            cu, vec, raw = self._normalize_update(update)
+            nbytes = raw * self.replication
+            latency = nbytes / (self.datanode_bw * self.n_datanodes)
+            # quota enforcement BEFORE any blob lands on disk: a
+            # rejected write never leaves an orphan file, and evict-
+            # policy victims free their budget before the newcomer
+            # stages. The unlocked emptiness probe keeps the no-quota
+            # ingest hot path at ONE lock acquisition per batch (a
+            # quota installed concurrently can miss at most the writes
+            # already in flight — the documented bound).
+            verdict, victims = "ok", {}
+            if self._quotas:
+                with self._lock:
+                    verdict, victims = self._quota_check_locked(
+                        key, raw,
+                        pend_counts=pend_counts, pend_bytes=pend_bytes,
+                        pend_raw=pend_raw,
+                    )
+            self._unlink_evicted(victims)
+            if verdict == "reject":
+                results[i] = QuotaExceededError(
+                    f"tenant {tenant!r}: update of {raw} B for "
+                    f"{client_id!r} exceeds the tenant quota "
+                    f"{self._quotas.get(tenant)}"
+                )
+                continue
+            mtime = self._stage_disk(client_id, tenant, cu, vec, weight)
+            if key in pend_raw:          # replaces an earlier batch item
+                pend_bytes[tenant] = (
+                    pend_bytes.get(tenant, 0) - pend_raw[key]
+                )
+            elif key in self._nbytes:    # replaces a registered update
+                pend_bytes[tenant] = (
+                    pend_bytes.get(tenant, 0) - self._nbytes[key]
+                )
+            else:                        # a genuinely new key
+                pend_counts[tenant] = pend_counts.get(tenant, 0) + 1
+            pend_bytes[tenant] = pend_bytes.get(tenant, 0) + raw
+            pend_raw[key] = raw
+            staged.append((i, key, cu, vec, weight, mtime, raw,
+                           nbytes, latency))
+        if staged:
             with self._lock:
-                verdict, victims = self._quota_check_locked(key, raw)
-        self._unlink_evicted(victims)
-        if verdict == "reject":
-            raise QuotaExceededError(
-                f"tenant {tenant!r}: update of {raw} B for {client_id!r} "
-                f"exceeds the tenant quota {self._quotas.get(tenant)}"
-            )
-        if self.backend == "disk":
-            # blob + sidecar land on the datanode OUTSIDE the lock.
-            # np.save can't round-trip ml_dtypes (bf16 reloads as raw V2),
-            # so extension floats spool as raw bytes + a dtype sidecar.
-            # Compressed updates spool their int8 codes as the blob plus
-            # a .scale sidecar (fp32 scale vector, npy format — written
-            # through an open file so np.save can't append '.npy') and a
-            # .dim sidecar (logical parameter count, text).
-            path = self._path(client_id, tenant)
-            if tenant != DEFAULT_TENANT and tenant not in self._made_dirs:
-                os.makedirs(os.path.dirname(path), exist_ok=True)
-                self._made_dirs.add(tenant)
-            dpath = path + ".dtype"
-            if cu is not None:
-                np.save(path, cu.codes)
-                with open(path + ".scale", "wb") as f:
-                    np.save(f, cu.scales)
-                with open(path + ".dim", "w") as f:
-                    f.write(str(int(cu.dim)))
+                for (i, key, cu, vec, weight, mtime, raw, nbytes,
+                     latency) in staged:
+                    self._register_locked(key, cu, vec, weight, mtime,
+                                          raw, nbytes, latency)
+                    results[i] = latency
+                self._arrival_cv.notify_all()
+        return results
+
+    def _stage_disk(
+        self,
+        client_id: str,
+        tenant: str,
+        cu: Optional[CompressedUpdate],
+        vec: Optional[np.ndarray],
+        weight: float,
+    ) -> Optional[Tuple[int, int, int]]:
+        """Stage one update's blob + sidecars on the datanode (no
+        lock). Returns the staged blob's identity triple (disk
+        backend) or None (memory backend)."""
+        if self.backend != "disk":
+            return None
+        # blob + sidecar land on the datanode OUTSIDE the lock.
+        # np.save can't round-trip ml_dtypes (bf16 reloads as raw V2),
+        # so extension floats spool as raw bytes + a dtype sidecar.
+        # Compressed updates spool their int8 codes as the blob plus
+        # a .scale sidecar (fp32 scale vector, npy format — written
+        # through an open file so np.save can't append '.npy') and a
+        # .dim sidecar (logical parameter count, text).
+        path = self._path(client_id, tenant)
+        if tenant != DEFAULT_TENANT and tenant not in self._made_dirs:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            self._made_dirs.add(tenant)
+        dpath = path + ".dtype"
+        if cu is not None:
+            np.save(path, cu.codes)
+            with open(path + ".scale", "wb") as f:
+                np.save(f, cu.scales)
+            with open(path + ".dim", "w") as f:
+                f.write(str(int(cu.dim)))
+            try:
+                os.remove(dpath)   # stale sidecar from a dense write
+            except FileNotFoundError:
+                pass
+        else:
+            if vec.dtype.kind == "V":
+                np.save(path, np.ascontiguousarray(vec).view(np.uint8))
+                with open(dpath, "w") as f:
+                    f.write(vec.dtype.name)
+            else:
+                np.save(path, vec)
                 try:
-                    os.remove(dpath)   # stale sidecar from a dense write
+                    os.remove(dpath)   # stale sidecar, prior dtype
                 except FileNotFoundError:
                     pass
-            else:
-                if vec.dtype.kind == "V":
-                    np.save(path, np.ascontiguousarray(vec).view(np.uint8))
-                    with open(dpath, "w") as f:
-                        f.write(vec.dtype.name)
-                else:
-                    np.save(path, vec)
-                    try:
-                        os.remove(dpath)   # stale sidecar, prior dtype
-                    except FileNotFoundError:
-                        pass
-                for suffix in (".scale", ".dim"):
-                    try:   # stale sidecars from a prior compressed write
-                        os.remove(path + suffix)
-                    except FileNotFoundError:
-                        pass
-            with open(path + ".w", "w") as f:
-                f.write(repr(float(weight)))
-            try:
-                mtime = _stat_identity(path)
-            except OSError:
-                mtime = None
-        with self._lock:
-            src = self._mem if self.backend == "memory" else self._weights
-            if key not in src:
-                self._counts[tenant] = self._counts.get(tenant, 0) + 1
-            if self.backend == "memory":
-                self._mem[key] = (cu if cu is not None else vec, weight)
-            else:
-                self._weights[key] = weight
-                if mtime is not None:
-                    self._blob_mtime[key] = mtime
-            self._versions[key] = self._versions.get(key, 0) + 1
-            self._arrivals[key] = self.clock()
-            self._account_write_locked(key, raw)
-            self.stats.writes += 1
-            self.stats.bytes_written += nbytes
-            self.stats.sim_write_seconds += latency
-            ts = self._tstats(tenant)
-            ts.writes += 1
-            ts.bytes_written += nbytes
-            ts.sim_write_seconds += latency
-            self._arrival_cv.notify_all()
-        return latency
+            for suffix in (".scale", ".dim"):
+                try:   # stale sidecars from a prior compressed write
+                    os.remove(path + suffix)
+                except FileNotFoundError:
+                    pass
+        with open(path + ".w", "w") as f:
+            f.write(repr(float(weight)))
+        try:
+            return _stat_identity(path)
+        except OSError:
+            return None
+
+    def _register_locked(
+        self,
+        key: _Key,
+        cu: Optional[CompressedUpdate],
+        vec: Optional[np.ndarray],
+        weight: float,
+        mtime: Optional[Tuple[int, int, int]],
+        raw: int,
+        nbytes: int,
+        latency: float,
+    ) -> None:
+        """Register one staged update in the index + stats. Caller
+        holds ``self._lock`` and notifies ``_arrival_cv`` after the
+        last registration it batches."""
+        tenant = key[0]
+        src = self._mem if self.backend == "memory" else self._weights
+        if key not in src:
+            self._counts[tenant] = self._counts.get(tenant, 0) + 1
+        if self.backend == "memory":
+            self._mem[key] = (cu if cu is not None else vec, weight)
+        else:
+            self._weights[key] = weight
+            if mtime is not None:
+                self._blob_mtime[key] = mtime
+        self._versions[key] = self._versions.get(key, 0) + 1
+        self._arrivals[key] = self.clock()
+        self._account_write_locked(key, raw)
+        self.stats.writes += 1
+        self.stats.bytes_written += nbytes
+        self.stats.sim_write_seconds += latency
+        ts = self._tstats(tenant)
+        ts.writes += 1
+        ts.bytes_written += nbytes
+        ts.sim_write_seconds += latency
 
     def _drop_index_entry(self, key: _Key) -> None:
         """Drop one key from every per-key index map and decrement its

@@ -1,5 +1,14 @@
 """Federated-learning runtime: clients, server rounds, orchestration."""
 from repro.fl.client import Client
-from repro.fl.server import FederatedServer, RoundResult
+from repro.fl.server import (
+    EdgeAggregatorServer,
+    FederatedServer,
+    RoundResult,
+)
 
-__all__ = ["Client", "FederatedServer", "RoundResult"]
+__all__ = [
+    "Client",
+    "EdgeAggregatorServer",
+    "FederatedServer",
+    "RoundResult",
+]

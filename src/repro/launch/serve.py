@@ -1,77 +1,160 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with
-per-layer KV/state caches (CPU-runnable on reduced configs).
+"""Serve the aggregator over HTTP: the Edge ingest front-end + fair
+round scheduling, driven end to end by a replayed workload trace.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --tokens 32
+  PYTHONPATH=src python -m repro.launch.serve --tenants 2 --clients 12 \
+      --dim 4000 --rounds 2 --spread 0.3
+
+Starts an ``EdgeAggregatorServer`` (token-authenticated uploads,
+per-tenant rate limits, quota pre-checks, batched IngestQueue commits
+— ``repro.serving``, docs/SERVING.md), then replays a seeded
+``WorkloadSpec`` trace where every client is a REAL HTTP uploader
+(``HttpStoreClient`` over a socket, one keep-alive connection per
+tenant writer), and runs each tenant's round through the weighted-fair
+scheduler while uploads are still landing.
+
+``--compress`` uploads int8 codes + fp32 scales frames instead of
+dense fp32; ``--rate``/``--burst`` turn on per-tenant token buckets
+(shed uploads retry on Retry-After and still land — watch the
+``shed_429`` counter); ``--quota-updates``/``--quota-bytes`` install
+store quotas that both the admission gate and the store enforce.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.models import build_model
+from repro.core import AggregationService, UpdateStore
+from repro.fl import EdgeAggregatorServer
+from repro.serving import HttpStoreClient
+from repro.utils.mem import bytes_to_human
+from repro.workload import (
+    FixedSize,
+    RegimeSchedule,
+    UniformArrivals,
+    WorkloadSpec,
+    start_writer,
+)
 
 
-def generate(model, params, prompt: jnp.ndarray, n_new: int,
-             cache_len: int, temperature: float = 0.0, seed: int = 0):
-    """Greedy/temperature decode. prompt: (B, T0) int32."""
-    B, T0 = prompt.shape
-    cache = model.init_cache(B, cache_len)
-    step = jax.jit(
-        lambda p, c, t, pos: model.decode_step(p, c, t, pos)
+def build_spec(args) -> WorkloadSpec:
+    return WorkloadSpec(
+        tenants=tuple(f"app{i}" for i in range(args.tenants)),
+        n_clients=args.clients,
+        rounds=args.rounds,
+        regimes=RegimeSchedule.single(
+            UniformArrivals(spread=args.spread)
+        ),
+        sizes=FixedSize(dim=args.dim),
     )
-    rng = jax.random.PRNGKey(seed)
-    toks = [prompt]
-    logits = None
-    # teacher-forced prefill through the decode path (cache warmup)
-    for t in range(T0):
-        cache, logits = step(params, cache, prompt[:, t: t + 1],
-                             jnp.int32(t))
-    cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    out = [cur]
-    for i in range(n_new - 1):
-        cache, logits = step(params, cache, cur, jnp.int32(T0 + i))
-        if temperature > 0:
-            rng, k = jax.random.split(rng)
-            cur = jax.random.categorical(
-                k, logits / temperature, axis=-1
-            )[:, None].astype(jnp.int32)
-        else:
-            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        out.append(cur)
-    return jnp.concatenate(toks + out, axis=1)
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma3-1b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap = argparse.ArgumentParser(
+        description="HTTP ingest front-end + fair round scheduling "
+                    "over one AggregationService (docs/SERVING.md)."
+    )
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="tenant count (tokens are tok-app0, tok-app1, "
+                         "...)")
+    ap.add_argument("--clients", type=int, default=12,
+                    help="HTTP uploaders per tenant per round")
+    ap.add_argument("--dim", type=int, default=4_000,
+                    help="update parameter count P")
+    ap.add_argument("--rounds", type=int, default=1)
+    ap.add_argument("--spread", type=float, default=0.3,
+                    help="seconds each round's uploads are spread over")
+    ap.add_argument("--compress", action="store_true",
+                    help="upload int8 codes + fp32 scales frames "
+                         "(client-side quantization, error feedback)")
+    ap.add_argument("--fusion", default="fedavg")
+    ap.add_argument("--threshold-frac", type=float, default=1.0,
+                    help="close the round at this fraction of clients")
+    ap.add_argument("--timeout", type=float, default=10.0,
+                    help="round gate deadline")
+    ap.add_argument("--max-running", type=int, default=2,
+                    help="rounds admitted concurrently by the fair "
+                         "scheduler")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="per-tenant upload token-bucket rate "
+                         "(uploads/s; None disables rate limiting)")
+    ap.add_argument("--burst", type=float, default=None,
+                    help="token-bucket burst (defaults to --rate)")
+    ap.add_argument("--quota-updates", type=int, default=None,
+                    help="per-tenant resident-update quota on the store")
+    ap.add_argument("--quota-bytes", type=int, default=None,
+                    help="per-tenant resident-byte quota on the store")
+    ap.add_argument("--queue-size", type=int, default=256,
+                    help="IngestQueue bound (backpressure horizon)")
+    ap.add_argument("--batch-max", type=int, default=32,
+                    help="max uploads per batched store commit")
+    ap.add_argument("--port", type=int, default=0,
+                    help="listen port (0: ephemeral)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    prompt = jnp.asarray(
-        rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len)),
-        jnp.int32,
+    store = UpdateStore()
+    svc = AggregationService(
+        fusion=args.fusion, store=store, local_strategy="jnp",
+        threshold_frac=args.threshold_frac,
+        monitor_timeout=args.timeout, compress=args.compress,
     )
-    t0 = time.time()
-    out = generate(model, params, prompt, args.tokens, args.cache_len,
-                   args.temperature)
-    dt = time.time() - t0
-    total_new = args.batch * args.tokens
-    print(f"[serve] arch={cfg.arch_id} batch={args.batch} "
-          f"new_tokens={args.tokens} -> {total_new/dt:.1f} tok/s (CPU)")
-    print("[serve] sample token ids:", np.asarray(out[0, :24]).tolist())
+    tenants = [f"app{i}" for i in range(args.tenants)]
+    tokens = {f"tok-{t}": t for t in tenants}
+    if args.quota_updates is not None or args.quota_bytes is not None:
+        for t in tenants:
+            store.set_quota(t, max_updates=args.quota_updates,
+                            max_bytes=args.quota_bytes,
+                            policy="reject")
+    trace = build_spec(args).build(args.seed)
+    with EdgeAggregatorServer(
+        svc, tokens, port=args.port, max_running=args.max_running,
+        rate=args.rate, burst=args.burst,
+        queue_size=args.queue_size, batch_max=args.batch_max,
+    ) as edge:
+        print(f"[serve] listening on {edge.url} tenants={tenants} "
+              f"dim={args.dim} "
+              f"frame={'int8+scales' if args.compress else 'fp32'}")
+        for rt in trace.rounds:
+            t0 = time.time()
+            writers = []
+            for tr in rt.tenants:
+                cli = HttpStoreClient(
+                    "127.0.0.1", edge.port, token=f"tok-{tr.tenant}",
+                )
+                transform = (
+                    (lambda cid, u, _t=tr.tenant:
+                     svc.compress_update(cid, u, tenant=_t))
+                    if args.compress else None
+                )
+                writers.append(start_writer(
+                    None, tr, args.seed, transform=transform,
+                    writer=cli.write,
+                ))
+            results = edge.run_rounds(
+                [tr.tenant for tr in rt.tenants],
+                expected_clients=args.clients,
+            )
+            for w in writers:
+                w.join()
+            for t, (fused, report) in sorted(results.items()):
+                print(f"[serve] round={rt.index} tenant={t} "
+                      f"engine={report.plan.engine} "
+                      f"included={report.n_clients}/{args.clients} "
+                      f"ingest={bytes_to_human(report.bytes_ingested)} "
+                      f"fuse={report.fuse_seconds:.3f}s "
+                      f"fused[:3]={np.asarray(fused[:3])}")
+            store.clear()   # synchronous rounds don't consume
+            print(f"[serve] round={rt.index} wall="
+                  f"{time.time() - t0:.2f}s")
+        m = edge.metrics()
+        uploads = m.get("accepted", 0)
+        print(f"[serve] uploads={uploads} batches={m.get('batches', 0)} "
+              f"max_batch={m.get('max_batch', 0)} "
+              f"shed_429={m.get('shed_429', 0)} "
+              f"backpressure={m.get('backpressure', 0)} "
+              f"admission_order={edge.scheduler.admission_order()}")
 
 
 if __name__ == "__main__":

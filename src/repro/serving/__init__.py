@@ -1,0 +1,52 @@
+"""Network ingest front-end for the aggregation service.
+
+The paper studies the aggregator in-process; at the Edge its updates
+arrive over the wire. This package is that serving layer, stdlib-only:
+
+  protocol.py   the upload wire frame (dense + int8-compressed),
+                fail-closed parser
+  admission.py  token auth, size cap, per-tenant token buckets,
+                quota headroom pre-check
+  ingest.py     bounded IngestQueue: concurrent uploads coalesce into
+                batched ``store.write_batch`` commits, explicit 503
+                backpressure
+  frontend.py   IngestServer — threaded HTTP endpoint tying the above
+                together
+  client.py     HttpStoreClient — ``store.write`` over HTTP, the drop-in
+                transport for trace replays and benchmarks
+"""
+from repro.serving.admission import (
+    AdmissionController,
+    Decision,
+    TokenBucket,
+)
+from repro.serving.client import HttpStoreClient, IngestError
+from repro.serving.frontend import IngestServer
+from repro.serving.ingest import BackpressureError, IngestQueue
+from repro.serving.protocol import (
+    KIND_COMPRESSED,
+    KIND_DENSE,
+    MAGIC,
+    ParsedUpdate,
+    WireError,
+    encode_update,
+    parse_update,
+)
+
+__all__ = [
+    "AdmissionController",
+    "BackpressureError",
+    "Decision",
+    "HttpStoreClient",
+    "IngestError",
+    "IngestQueue",
+    "IngestServer",
+    "KIND_COMPRESSED",
+    "KIND_DENSE",
+    "MAGIC",
+    "ParsedUpdate",
+    "TokenBucket",
+    "WireError",
+    "encode_update",
+    "parse_update",
+]

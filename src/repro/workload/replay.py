@@ -51,16 +51,26 @@ def replay_round(
     clock: Callable[[], float] = time.perf_counter,
     sleep: Callable[[float], None] = time.sleep,
     transform: Optional[Callable[[str, np.ndarray], object]] = None,
+    writer: Optional[Callable[..., float]] = None,
 ) -> int:
     """Write every traced event at its offset (measured on ``clock``,
     waited on ``sleep``). ``transform(client_id, update)`` hooks
     client-side processing — e.g. ``svc.compress_update`` for int8
     transport. Returns the number of writes.
 
+    ``writer`` swaps the transport: it defaults to ``store.write`` but
+    takes any callable with the same ``(client_id, update, weight=,
+    tenant=)`` signature — pass an
+    ``repro.serving.HttpStoreClient.write`` bound method to replay the
+    SAME trace over real sockets through the ingest front-end (then
+    ``store`` may be None).
+
     Payloads (and transforms) are materialized BEFORE the replay clock
     starts: the trace's offsets model network arrival times, and a
     client's update exists before it is sent — synthesis cost must not
     skew the arrival schedule or the measured round wall."""
+    if writer is None:
+        writer = store.write
     ready = []
     for ev in tenant_round.events:
         u = trace_payload(seed, tenant_round.tenant, ev.client_id,
@@ -73,8 +83,8 @@ def replay_round(
         lag = ev.offset - (clock() - t0)
         if lag > 0:
             sleep(lag)
-        store.write(ev.client_id, u, weight=ev.weight,
-                    tenant=tenant_round.tenant)
+        writer(ev.client_id, u, weight=ev.weight,
+               tenant=tenant_round.tenant)
     return len(tenant_round.events)
 
 
@@ -85,13 +95,15 @@ def start_writer(
     clock: Callable[[], float] = time.perf_counter,
     sleep: Callable[[float], None] = time.sleep,
     transform: Optional[Callable[[str, np.ndarray], object]] = None,
+    writer: Optional[Callable[..., float]] = None,
 ) -> threading.Thread:
     """``replay_round`` on a started daemon thread — arrivals land
     WHILE the round is open (the benchmarks' writer idiom)."""
     t = threading.Thread(
         target=replay_round,
         args=(store, tenant_round, seed),
-        kwargs={"clock": clock, "sleep": sleep, "transform": transform},
+        kwargs={"clock": clock, "sleep": sleep, "transform": transform,
+                "writer": writer},
         name=f"trace-writer-{tenant_round.tenant}",
         daemon=True,
     )

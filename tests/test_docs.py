@@ -24,6 +24,7 @@ DOCS = [
     "docs/ARCHITECTURE.md",
     "docs/MULTITENANCY.md",
     "docs/TUNING.md",
+    "docs/SERVING.md",
     "benchmarks/README.md",
 ]
 
@@ -128,8 +129,20 @@ def test_operator_docs_cover_their_subjects():
     bench_readme = _read("benchmarks/README.md")
     for term in ("BENCH_soak.json", "soak_rounds.py", "trace_hash",
                  "repro.workload", "post_resume_sources",
-                 "prior_borrowing", "--trace-out", "--seed"):
+                 "prior_borrowing", "--trace-out", "--seed",
+                 "BENCH_ingest.json", "ingest_service.py",
+                 "disconnects_injected", "p99_latency_s",
+                 "sustained_uploads_per_s"):
         assert term in bench_readme, f"benchmarks/README.md lost {term!r}"
+    serving = _read("docs/SERVING.md")
+    for term in ("FLU1", "IngestServer", "IngestQueue", "write_batch",
+                 "HttpStoreClient", "FairRoundScheduler",
+                 "EdgeAggregatorServer", "Retry-After", "TokenBucket",
+                 "read_timeout", "max_body_bytes", "WireError",
+                 "encode_update", "/v1/upload", "/v1/healthz",
+                 "Bearer", "BENCH_ingest.json", "--quick",
+                 "capacity_bytes", "max_running"):
+        assert term in serving, f"SERVING.md lost {term!r}"
     arch = _read("docs/ARCHITECTURE.md")
     for term in ("compress_update", "weighted_sum_dequant_pallas",
                  "CompressedBlock", "error feedback", ".scale",

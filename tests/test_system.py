@@ -100,16 +100,19 @@ def test_train_cli_runs():
 
 
 def test_serve_cli_runs():
+    """The ingest-service entrypoint end to end: real HTTP uploaders
+    replaying a trace, fair-scheduled rounds, full inclusion."""
     r = subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--arch", "xlstm-350m",
-         "--batch", "2", "--prompt-len", "4", "--tokens", "4",
-         "--cache-len", "32"],
+        [sys.executable, "-m", "repro.launch.serve", "--tenants", "2",
+         "--clients", "6", "--dim", "2000", "--rounds", "1",
+         "--spread", "0.1"],
         capture_output=True, text=True, timeout=600,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
              "JAX_PLATFORMS": "cpu"},
     )
     assert r.returncode == 0, r.stderr[-2000:]
-    assert "tok/s" in r.stdout
+    assert "included=6/6" in r.stdout
+    assert "uploads=12" in r.stdout
 
 
 def test_aggregate_cli_runs():
