@@ -1,0 +1,45 @@
+"""repro.analysis — static concurrency/trace lint + runtime lock witness.
+
+Two halves:
+
+* **Static** (``repro.analysis.lint``, also ``python -m
+  repro.analysis.lint``): an AST pass over the source tree enforcing
+  the locking and tracing invariants PRs 5-9 established by hand —
+  guarded attributes touched only under their lock, no blocking I/O
+  while a lock is held, no host-varying values in compile-cache keys
+  or traced closures, no device syncs inside ``device_sem`` regions,
+  every worker thread joined.  Rules are pluggable (`Rule`), findings
+  carry file/line, and deliberate exceptions are annotated in-source
+  with ``# lint: disable=<rule> -- <reason>``.
+
+* **Runtime** (``repro.analysis.witness``): an opt-in instrumented
+  lock wrapper that records the cross-thread lock acquisition graph
+  while the concurrency suites run, failing on cycles or on orderings
+  that contradict the declared partial order
+  (``state lock ≺ store lock ≺ per-tenant round lock``).
+
+See docs/ANALYSIS.md for the rule catalog and annotation conventions.
+"""
+from repro.analysis.core import (  # noqa: F401
+    Finding,
+    LintResult,
+    Rule,
+    Suppression,
+    lint_paths,
+)
+from repro.analysis.witness import (  # noqa: F401
+    LockOrderWitness,
+    LockOrderViolation,
+    instrument_service,
+)
+
+__all__ = [
+    "Finding",
+    "LintResult",
+    "Rule",
+    "Suppression",
+    "lint_paths",
+    "LockOrderWitness",
+    "LockOrderViolation",
+    "instrument_service",
+]

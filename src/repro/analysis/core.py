@@ -1,0 +1,246 @@
+"""Core lint infrastructure: findings, suppressions, rule registry.
+
+A `Rule` inspects one parsed file (`FileContext`) and yields
+`Finding`s.  The engine (`lint_paths`) then filters findings through
+inline suppression comments::
+
+    # lint: disable=<rule>[,<rule>...] -- <reason>
+
+A suppression applies to the physical line it sits on; placed on a
+``def`` line it applies to the whole function body.  A suppression
+without a reason (or naming an unknown rule) is itself a finding
+(rule ``suppression-format``) so every waived site stays enumerable
+and explained — ``python -m repro.analysis.lint --show-suppressed``
+prints the register.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*disable=([A-Za-z0-9_\-]+(?:\s*,\s*[A-Za-z0-9_\-]+)*)"
+    r"(?:\s*--\s*(\S.*?))?\s*$"
+)
+# Any comment that *mentions* the lint-disable marker, used to catch
+# malformed variants the strict regex above would silently skip.
+SUPPRESS_LOOSE_RE = re.compile(r"#\s*lint:\s*disable")
+GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+HOLDS_COMMENT_RE = re.compile(r"#\s*lint:\s*holds=([A-Za-z_][A-Za-z0-9_,]*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a file/line."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def fingerprint(self) -> Tuple[str, str, str]:
+        """Line-insensitive identity used by ``--baseline`` matching."""
+        return (self.rule, self.path, self.message)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:  # text reporter row
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """A parsed ``# lint: disable=`` comment."""
+
+    path: str
+    line: int
+    rules: Tuple[str, ...]
+    reason: Optional[str]
+
+
+class FileContext:
+    """One parsed source file plus its comment annotations."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        #: line -> raw comment text (from the tokenizer, so ``#`` inside
+        #: string literals never false-matches)
+        self.comments: Dict[int, str] = {}
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+        except tokenize.TokenError:  # pragma: no cover - ast.parse passed
+            pass
+        self.suppressions: List[Suppression] = []
+        self.malformed_suppressions: List[int] = []
+        for line, text in self.comments.items():
+            if not SUPPRESS_LOOSE_RE.search(text):
+                continue
+            m = SUPPRESS_RE.search(text)
+            if m is None:
+                self.malformed_suppressions.append(line)
+                continue
+            rules = tuple(r.strip() for r in m.group(1).split(","))
+            self.suppressions.append(
+                Suppression(path, line, rules, m.group(2))
+            )
+        #: (start, end, def_line) spans of every function, innermost last
+        self.func_spans: List[Tuple[int, int, int]] = []
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                end = getattr(node, "end_lineno", node.lineno)
+                self.func_spans.append((node.lineno, end, node.lineno))
+        self.func_spans.sort()
+
+    def comment_on(self, line: int) -> str:
+        return self.comments.get(line, "")
+
+    def suppressors_for(self, line: int) -> Iterable[Suppression]:
+        """Suppressions covering ``line``: same-line ones plus any on the
+        ``def`` line of an enclosing function."""
+        def_lines = {line}
+        for start, end, def_line in self.func_spans:
+            if start <= line <= end:
+                def_lines.add(def_line)
+        for sup in self.suppressions:
+            if sup.line in def_lines:
+                yield sup
+
+
+class Rule:
+    """Base class: subclasses set ``name``/``description`` and implement
+    ``check(ctx) -> list[Finding]``."""
+
+    name: str = ""
+    description: str = ""
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: FileContext, line: int, message: str) -> Finding:
+        return Finding(self.name, ctx.path, line, message)
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    suppressed: List[Tuple[Finding, Suppression]]
+    files: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def default_rules() -> List[Rule]:
+    """All shipped rules (import here to avoid a cycle at module load)."""
+    from repro.analysis.rules_locks import GuardedAccessRule, BlockingUnderLockRule
+    from repro.analysis.rules_trace import TraceHazardRule, SyncUnderSemRule
+    from repro.analysis.rules_threads import ThreadJoinRule, BareAcquireRule
+    from repro.analysis.unused import UnusedImportRule
+
+    return [
+        GuardedAccessRule(),
+        BlockingUnderLockRule(),
+        TraceHazardRule(),
+        SyncUnderSemRule(),
+        ThreadJoinRule(),
+        BareAcquireRule(),
+        UnusedImportRule(),
+    ]
+
+
+def iter_py_files(paths: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if d not in ("__pycache__", ".git", ".pytest_cache")
+                )
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        out.append(os.path.join(dirpath, fn))
+        elif p.endswith(".py"):
+            out.append(p)
+    return out
+
+
+def lint_file(
+    path: str, rules: Sequence[Rule], source: Optional[str] = None
+) -> Tuple[List[Finding], List[Tuple[Finding, Suppression]]]:
+    """Lint one file; returns (kept findings, suppressed findings)."""
+    if source is None:
+        with open(path, "r", encoding="utf-8") as fh:
+            source = fh.read()
+    try:
+        ctx = FileContext(path, source)
+    except SyntaxError as exc:
+        return (
+            [Finding("parse-error", path, exc.lineno or 1, str(exc.msg))],
+            [],
+        )
+    raw: List[Finding] = []
+    for rule in rules:
+        raw.extend(rule.check(ctx))
+    known = {r.name for r in rules}
+    kept: List[Finding] = []
+    suppressed: List[Tuple[Finding, Suppression]] = []
+    for f in raw:
+        sup = next(
+            (s for s in ctx.suppressors_for(f.line) if f.rule in s.rules),
+            None,
+        )
+        if sup is not None:
+            suppressed.append((f, sup))
+        else:
+            kept.append(f)
+    # Suppression hygiene: malformed comments, missing reasons, unknown
+    # rule names.  These are never themselves suppressible — the point
+    # is that every waiver stays legible.
+    for line in ctx.malformed_suppressions:
+        kept.append(Finding(
+            "suppression-format", path, line,
+            "malformed suppression; expected "
+            "'# lint: disable=<rule>[,<rule>] -- <reason>'",
+        ))
+    for sup in ctx.suppressions:
+        if not sup.reason:
+            kept.append(Finding(
+                "suppression-format", path, sup.line,
+                "suppression missing a reason ('-- <why>')",
+            ))
+        for r in sup.rules:
+            if r not in known:
+                kept.append(Finding(
+                    "suppression-format", path, sup.line,
+                    f"suppression names unknown rule {r!r}",
+                ))
+    return kept, suppressed
+
+
+def lint_paths(
+    paths: Sequence[str], rules: Optional[Sequence[Rule]] = None
+) -> LintResult:
+    """Run ``rules`` (default: all) over every ``.py`` under ``paths``."""
+    rules = list(rules) if rules is not None else default_rules()
+    findings: List[Finding] = []
+    suppressed: List[Tuple[Finding, Suppression]] = []
+    files = iter_py_files(paths)
+    for path in files:
+        kept, sups = lint_file(path, rules)
+        findings.extend(kept)
+        suppressed.extend(sups)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return LintResult(findings, suppressed, len(files))

@@ -1,0 +1,110 @@
+"""CLI for the static pass: ``python -m repro.analysis.lint [paths]``.
+
+Exit status is 0 when no findings (or, with ``--baseline``, no *new*
+findings vs the recorded baseline), 1 otherwise.
+
+    python -m repro.analysis.lint src/repro
+    python -m repro.analysis.lint src/repro --format=json
+    python -m repro.analysis.lint src/repro --write-baseline lint.json
+    python -m repro.analysis.lint src/repro --baseline lint.json
+    python -m repro.analysis.lint --list-rules
+    python -m repro.analysis.lint src/repro --show-suppressed
+
+Baselines match findings by (rule, path, message) — line-insensitive,
+so unrelated edits moving code around do not resurrect old findings.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional, Sequence
+
+from repro.analysis.core import Finding, default_rules, lint_paths
+
+
+def _load_baseline(path: str) -> set:
+    with open(path, "r", encoding="utf-8") as fh:
+        payload = json.load(fh)
+    return {
+        (f["rule"], f["path"], f["message"])
+        for f in payload.get("findings", [])
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repro static concurrency/trace lint",
+    )
+    parser.add_argument("paths", nargs="*", default=["src/repro"],
+                        help="files or directories (default: src/repro)")
+    parser.add_argument("--format", choices=("text", "json"), default="text")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated subset of rule names to run")
+    parser.add_argument("--baseline", default=None, metavar="FILE",
+                        help="fail only on findings not in this baseline")
+    parser.add_argument("--write-baseline", default=None, metavar="FILE",
+                        help="write current findings as a baseline and exit 0")
+    parser.add_argument("--list-rules", action="store_true")
+    parser.add_argument("--show-suppressed", action="store_true",
+                        help="also print the suppression register")
+    args = parser.parse_args(argv)
+
+    all_rules = default_rules()
+    if args.list_rules:
+        for r in all_rules:
+            print(f"{r.name:20s} {r.description}")
+        return 0
+    rules = all_rules
+    if args.rules:
+        wanted = {r.strip() for r in args.rules.split(",")}
+        unknown = wanted - {r.name for r in all_rules}
+        if unknown:
+            parser.error(f"unknown rule(s): {', '.join(sorted(unknown))}")
+        rules = [r for r in all_rules if r.name in wanted]
+
+    result = lint_paths(list(args.paths), rules)
+    findings: List[Finding] = result.findings
+    new = findings
+    if args.baseline:
+        base = _load_baseline(args.baseline)
+        new = [f for f in findings if f.fingerprint() not in base]
+
+    if args.write_baseline:
+        with open(args.write_baseline, "w", encoding="utf-8") as fh:
+            json.dump(
+                {"findings": [f.as_dict() for f in findings]}, fh, indent=2
+            )
+        print(f"baseline: {len(findings)} finding(s) -> "
+              f"{args.write_baseline}")
+        return 0
+
+    if args.format == "json":
+        payload = {
+            "files": result.files,
+            "findings": [f.as_dict() for f in new],
+            "suppressed": [
+                {**f.as_dict(), "reason": s.reason}
+                for f, s in result.suppressed
+            ],
+        }
+        if args.baseline:
+            payload["baselined"] = len(findings) - len(new)
+        print(json.dumps(payload, indent=2))
+    else:
+        for f in new:
+            print(f)
+        if args.show_suppressed:
+            print(f"-- suppressed ({len(result.suppressed)}):")
+            for f, s in result.suppressed:
+                print(f"  {f}  [reason: {s.reason}]")
+        tail = f"{result.files} file(s), {len(new)} finding(s)"
+        if args.baseline:
+            tail += f" ({len(findings) - len(new)} baselined)"
+        print(tail)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,283 @@
+"""Lock-discipline rules.
+
+Convention (see docs/ANALYSIS.md):
+
+* An attribute is declared *guarded* by putting ``# guarded-by: <lock>``
+  on the line that assigns it in the class body (normally ``__init__``)::
+
+      self._mem: dict = {}          # guarded-by: _lock
+
+* A lock is any ``self.X = threading.Lock()/RLock()/Condition(...)``
+  assignment.  ``threading.Condition(self.Y)`` aliases ``Y`` — entering
+  the condition *is* holding ``Y`` (the store's ``_arrival_cv`` idiom).
+
+* A method that is only ever called with a lock already held declares
+  so either with a ``# lint: holds=<lock>`` comment on its ``def`` line
+  or a docstring containing ``Caller holds ``self.<lock>```` (the
+  existing ``*_locked`` helper idiom).
+
+`GuardedAccessRule` then checks every ``self.<attr>`` touch of a
+guarded attribute happens inside ``with self.<lock>`` (or an alias, or
+a holds-declaring method).  `BlockingUnderLockRule` forbids blocking
+calls (``open``/``np.load``/``np.save``/``os.replace``/``socket.*``/
+``time.sleep``) while *any* declared lock is held —
+``Condition.wait`` is exempt because it releases the lock.
+
+``__init__`` bodies are exempt from the guarded check: the object is
+not yet shared.  Nested functions reset the held set — their bodies
+run later, on some other thread's schedule.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from repro.analysis.core import (
+    FileContext,
+    Finding,
+    GUARDED_RE,
+    HOLDS_COMMENT_RE,
+    Rule,
+)
+
+DOCSTRING_HOLDS_RE = re.compile(
+    r"[Cc]allers?\s+(?:must\s+)?holds?\s+"
+    r"`{0,2}self\.([A-Za-z_][A-Za-z0-9_]*)`{0,2}"
+)
+
+LOCK_FACTORIES = {"Lock", "RLock", "Condition"}
+
+#: Dotted-name prefixes considered blocking while a lock is held.
+BLOCKING_CALLS = (
+    "open",
+    "time.sleep",
+    "os.replace",
+    "np.load",
+    "np.save",
+    "numpy.load",
+    "numpy.save",
+    "socket.",
+    "shutil.",
+    "subprocess.",
+)
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains (``self`` kept), else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def self_attr(node: ast.AST) -> Optional[str]:
+    """``X`` when node is exactly ``self.X``."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+class ClassLockInfo:
+    """Lock inventory + guarded-attribute map for one class."""
+
+    def __init__(self, node: ast.ClassDef, ctx: FileContext):
+        self.node = node
+        #: lock attr -> canonical lock attr (Condition aliases resolve)
+        self.locks: Dict[str, str] = {}
+        #: guarded attr -> canonical lock attr
+        self.guarded: Dict[str, str] = {}
+        self.annotation_errors: List[Tuple[int, str]] = []
+        raw_cond_alias: Dict[str, str] = {}
+        for meth in node.body:
+            if not isinstance(meth, ast.FunctionDef):
+                continue
+            for sub in ast.walk(meth):
+                if not isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                    continue
+                targets = (
+                    sub.targets if isinstance(sub, ast.Assign) else [sub.target]
+                )
+                value = sub.value
+                if value is None or len(targets) != 1:
+                    continue
+                attr = self_attr(targets[0])
+                if attr is None or not isinstance(value, ast.Call):
+                    continue
+                fn = dotted_name(value.func) or ""
+                base = fn.rsplit(".", 1)[-1]
+                if fn.startswith("threading.") and base in LOCK_FACTORIES:
+                    if base == "Condition" and value.args:
+                        inner = self_attr(value.args[0])
+                        if inner is not None:
+                            raw_cond_alias[attr] = inner
+                            continue
+                    self.locks[attr] = attr
+        for cv, inner in raw_cond_alias.items():
+            self.locks[cv] = self.locks.get(inner, inner)
+        # guarded-by comments anywhere in the class span
+        end = getattr(node, "end_lineno", node.lineno)
+        for line in range(node.lineno, end + 1):
+            m = GUARDED_RE.search(ctx.comment_on(line))
+            if m is None:
+                continue
+            lock = m.group(1)
+            src = ctx.lines[line - 1] if line - 1 < len(ctx.lines) else ""
+            am = re.search(r"self\.([A-Za-z_][A-Za-z0-9_]*)\s*[:=]", src)
+            if am is None:
+                self.annotation_errors.append(
+                    (line, f"guarded-by comment with no 'self.<attr> =' "
+                           f"assignment on the line")
+                )
+                continue
+            if lock not in self.locks:
+                self.annotation_errors.append(
+                    (line, f"guarded-by names {lock!r} which is not a "
+                           f"threading.Lock/RLock/Condition attribute of "
+                           f"this class")
+                )
+                continue
+            self.guarded[am.group(1)] = self.locks[lock]
+
+    def assumed_held(self, meth: ast.FunctionDef, ctx: FileContext) -> Set[str]:
+        """Locks a method declares its caller already holds."""
+        held: Set[str] = set()
+        m = HOLDS_COMMENT_RE.search(ctx.comment_on(meth.lineno))
+        if m:
+            for name in m.group(1).split(","):
+                held.add(self.locks.get(name, name))
+        doc = ast.get_docstring(meth) or ""
+        for dm in DOCSTRING_HOLDS_RE.finditer(doc):
+            held.add(self.locks.get(dm.group(1), dm.group(1)))
+        return held
+
+
+def collect_classes(ctx: FileContext) -> List[Tuple[ast.ClassDef, ClassLockInfo]]:
+    out = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ClassDef):
+            info = ClassLockInfo(node, ctx)
+            if info.locks or info.guarded:
+                out.append((node, info))
+    return out
+
+
+class _HeldWalker:
+    """Walks a method body tracking which declared locks are held."""
+
+    def __init__(self, info: ClassLockInfo, on_node):
+        self.info = info
+        self.on_node = on_node  # callback(node, held_frozenset)
+
+    def walk(self, node: ast.AST, held: FrozenSet[str]) -> None:
+        if isinstance(node, ast.With):
+            acquired = set()
+            for item in node.items:
+                attr = self_attr(item.context_expr)
+                if attr is not None and attr in self.info.locks:
+                    acquired.add(self.info.locks[attr])
+                self.walk(item.context_expr, held)
+            inner = held | frozenset(acquired)
+            for stmt in node.body:
+                self.walk(stmt, inner)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            # A nested function's body executes later (worker threads,
+            # callbacks): it does not inherit the lexical held set.
+            body = node.body if not isinstance(node, ast.Lambda) else [node.body]
+            for stmt in body if isinstance(body, list) else [body]:
+                self.walk(stmt, frozenset())
+            return
+        self.on_node(node, held)
+        for child in ast.iter_child_nodes(node):
+            self.walk(child, held)
+
+
+class GuardedAccessRule(Rule):
+    name = "guarded-access"
+    description = (
+        "attributes declared '# guarded-by: <lock>' may only be touched "
+        "inside 'with self.<lock>' (or a method declaring the caller "
+        "holds it)"
+    )
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node, info in collect_classes(ctx):
+            for line, msg in info.annotation_errors:
+                findings.append(self.finding(ctx, line, msg))
+            if not info.guarded:
+                continue
+            for meth in node.body:
+                if not isinstance(meth, ast.FunctionDef):
+                    continue
+                if meth.name in ("__init__", "__del__"):
+                    continue
+                held0 = frozenset(info.assumed_held(meth, ctx))
+
+                def visit(sub: ast.AST, held: FrozenSet[str]) -> None:
+                    attr = self_attr(sub)
+                    if attr is None:
+                        return
+                    lock = info.guarded.get(attr)
+                    if lock is not None and lock not in held:
+                        findings.append(self.finding(
+                            ctx, sub.lineno,
+                            f"self.{attr} is guarded by self.{lock} but "
+                            f"accessed without holding it "
+                            f"(in {node.name}.{meth.name})",
+                        ))
+
+                walker = _HeldWalker(info, visit)
+                for stmt in meth.body:
+                    walker.walk(stmt, held0)
+        return findings
+
+
+class BlockingUnderLockRule(Rule):
+    name = "blocking-under-lock"
+    description = (
+        "blocking calls (open/np.load/np.save/os.replace/socket.*/"
+        "time.sleep/...) are forbidden while a declared lock is held"
+    )
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node, info in collect_classes(ctx):
+            for meth in node.body:
+                if not isinstance(meth, ast.FunctionDef):
+                    continue
+                held0 = frozenset(info.assumed_held(meth, ctx))
+
+                def visit(sub: ast.AST, held: FrozenSet[str]) -> None:
+                    if not held or not isinstance(sub, ast.Call):
+                        return
+                    fn = dotted_name(sub.func)
+                    if fn is None:
+                        return
+                    # Condition.wait releases the lock while blocking.
+                    if fn.endswith(".wait") or fn.endswith(".wait_for"):
+                        return
+                    for pat in BLOCKING_CALLS:
+                        if fn == pat or (pat.endswith(".") and
+                                         fn.startswith(pat)):
+                            findings.append(self.finding(
+                                ctx, sub.lineno,
+                                f"blocking call {fn}() while holding "
+                                f"{{{', '.join(sorted(held))}}} "
+                                f"(in {node.name}.{meth.name})",
+                            ))
+                            return
+
+                walker = _HeldWalker(info, visit)
+                for stmt in meth.body:
+                    walker.walk(stmt, held0)
+        return findings

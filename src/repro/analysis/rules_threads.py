@@ -1,0 +1,127 @@
+"""Thread-hygiene rules.
+
+`ThreadJoinRule`: every ``threading.Thread(...)`` creation must have a
+matching ``.join(`` on its binding somewhere in the same file —
+non-daemon threads because they block interpreter exit, daemon workers
+because an unjoined worker leaks into the next round/test (the repo
+convention is daemon **and** joined on the shutdown path).  Handles
+the three binding shapes the codebase uses: ``x = Thread(...)``,
+``self._t = Thread(...)``, and ``pool.append(Thread(...))`` (the last
+is satisfied by any ``.join(`` in the enclosing function).  A thread
+deliberately handed to the caller (e.g. ``start_writer`` returning the
+handle) carries a suppression.
+
+`BareAcquireRule`: direct ``<lock>.acquire()`` calls on anything that
+looks like a lock (name contains ``lock`` or ``mutex``).  ``with``
+blocks guarantee release on every exit path; a bare acquire must be
+annotated with why the try/finally shape is impossible.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional
+
+from repro.analysis.core import FileContext, Finding, Rule
+from repro.analysis.rules_locks import dotted_name
+
+LOCKISH_RE = re.compile(r"lock|mutex|cv|cond", re.IGNORECASE)
+
+
+def _is_thread_ctor(call: ast.Call) -> bool:
+    fn = dotted_name(call.func)
+    return fn in ("threading.Thread", "Thread")
+
+
+def _daemon_kwarg(call: ast.Call) -> Optional[bool]:
+    for kw in call.keywords:
+        if kw.arg == "daemon" and isinstance(kw.value, ast.Constant):
+            return bool(kw.value.value)
+    return None
+
+
+class ThreadJoinRule(Rule):
+    name = "thread-join"
+    description = (
+        "every threading.Thread created must be join()ed in the same "
+        "file (or carry a suppression explaining who joins it)"
+    )
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        findings: List[Finding] = []
+        src = ctx.source
+
+        def joined(binding: str) -> bool:
+            # `self._t` matches `._t.join(`; `t` matches `t.join(`
+            if binding.startswith("self."):
+                return f".{binding[5:]}.join(" in src
+            return bool(re.search(
+                rf"\b{re.escape(binding)}\.join\(", src
+            ))
+
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Module)):
+                continue
+            body_src = None
+            for stmt in ast.walk(node):
+                if not (isinstance(stmt, ast.Call) and _is_thread_ctor(stmt)):
+                    continue
+                # find the statement binding this ctor call
+                binding = self._binding_for(node, stmt)
+                daemon = _daemon_kwarg(stmt)
+                if binding == "__append__":
+                    if body_src is None:
+                        seg = ast.get_source_segment(src, node)
+                        body_src = seg if seg is not None else src
+                    if ".join(" in body_src:
+                        continue
+                elif binding is not None and joined(binding):
+                    continue
+                elif binding is None and isinstance(node, ast.Module):
+                    # ctor nested in some non-function context; be lenient
+                    continue
+                kind = "daemon" if daemon else "non-daemon"
+                findings.append(self.finding(
+                    ctx, stmt.lineno,
+                    f"{kind} thread created here is never join()ed in "
+                    f"this file",
+                ))
+            break  # only walk from Module once; inner defs seen via walk
+        return findings
+
+    def _binding_for(self, root: ast.AST, ctor: ast.Call) -> Optional[str]:
+        for stmt in ast.walk(root):
+            if isinstance(stmt, ast.Assign) and stmt.value is ctor and \
+                    len(stmt.targets) == 1:
+                return dotted_name(stmt.targets[0])
+            if isinstance(stmt, ast.Call) and ctor in stmt.args and \
+                    isinstance(stmt.func, ast.Attribute) and \
+                    stmt.func.attr == "append":
+                return "__append__"
+        return None
+
+
+class BareAcquireRule(Rule):
+    name = "bare-acquire"
+    description = (
+        "lock.acquire() outside a 'with' block risks a missed release "
+        "on an exception path; use 'with lock' or annotate why not"
+    )
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if not (isinstance(func, ast.Attribute) and
+                    func.attr == "acquire"):
+                continue
+            recv = dotted_name(func.value) or ""
+            if LOCKISH_RE.search(recv):
+                findings.append(self.finding(
+                    ctx, node.lineno,
+                    f"bare {recv}.acquire() — prefer 'with {recv}:'",
+                ))
+        return findings

@@ -1,0 +1,189 @@
+"""Trace/recompile-hazard rules.
+
+`TraceHazardRule` flags host-varying values where they would either
+defeat the compile cache or get baked into a trace as constants:
+
+* in the **key expression** of a ``CompiledCache``-style call —
+  ``<cache>.get(key, ...)`` / ``<cache>.get_jitted(key, ...)`` where
+  the receiver's name ends in ``cache`` — host-varying calls
+  (``time.time``/``random.*``/``uuid.*``/``id``) make every round a
+  cold compile, and unhashable literals (list/dict/set) raise at
+  runtime;
+* in the **body of a traced function** — one decorated with
+  ``jax.jit``/``partial(jax.jit, ...)`` or passed to ``jax.jit(f)`` /
+  ``pl.pallas_call(kernel, ...)`` — where a host-varying call is
+  evaluated once at trace time and frozen into the executable.
+
+`SyncUnderSemRule` flags ``block_until_ready``/``.item()`` host syncs
+lexically inside a ``with <device_sem>`` region: the semaphore is
+meant to bound *device* work, and a deliberate sync there must be
+annotated (the engines do this on purpose so the permit covers the
+execution, not just the dispatch — those sites carry suppressions).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.core import FileContext, Finding, Rule
+from repro.analysis.rules_locks import dotted_name
+
+HOST_VARYING_PREFIXES = (
+    "time.time",
+    "time.monotonic",
+    "time.perf_counter",
+    "time.time_ns",
+    "random.",
+    "np.random.",
+    "numpy.random.",
+    "jax.random.PRNGKey",  # key folded into a cache key defeats caching
+    "uuid.",
+    "secrets.",
+)
+HOST_VARYING_BARE = {"id"}
+
+JIT_NAMES = {"jax.jit", "jit", "api.jit"}
+PALLAS_NAMES = {"pl.pallas_call", "pallas_call", "jax.experimental.pallas.pallas_call"}
+SEM_NAMES = {"sem", "device_sem", "self.device_sem", "self._device_sem"}
+
+
+def _host_varying(call: ast.Call) -> Optional[str]:
+    fn = dotted_name(call.func)
+    if fn is None:
+        return None
+    if fn in HOST_VARYING_BARE:
+        return fn
+    for pat in HOST_VARYING_PREFIXES:
+        if fn == pat or (pat.endswith(".") and fn.startswith(pat)):
+            return fn
+    return None
+
+
+def _is_cache_recv(node: ast.AST) -> bool:
+    name = dotted_name(node)
+    if name is None:
+        return False
+    last = name.split(".")[-1].lower()
+    return last.endswith("cache")
+
+
+class TraceHazardRule(Rule):
+    name = "trace-hazard"
+    description = (
+        "host-varying values (time/random/uuid/id) must not flow into "
+        "compile-cache keys or be evaluated inside jit/pallas-traced "
+        "functions; cache keys must be hashable"
+    )
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        findings: List[Finding] = []
+        traced_names: Set[str] = set()
+        # -- pass 1: find traced functions ---------------------------------
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.FunctionDef):
+                for dec in node.decorator_list:
+                    dn = dotted_name(dec)
+                    if dn in JIT_NAMES:
+                        traced_names.add(node.name)
+                    elif isinstance(dec, ast.Call):
+                        dfn = dotted_name(dec.func)
+                        if dfn in JIT_NAMES:
+                            traced_names.add(node.name)
+                        elif dfn in ("functools.partial", "partial") and \
+                                dec.args and \
+                                dotted_name(dec.args[0]) in JIT_NAMES:
+                            traced_names.add(node.name)
+            elif isinstance(node, ast.Call):
+                fn = dotted_name(node.func)
+                if fn in JIT_NAMES | PALLAS_NAMES and node.args:
+                    target = node.args[0]
+                    if isinstance(target, ast.Name):
+                        traced_names.add(target.id)
+        # -- pass 2: scan traced function bodies ---------------------------
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.FunctionDef) and node.name in traced_names:
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Call):
+                        hv = _host_varying(sub)
+                        if hv is not None:
+                            findings.append(self.finding(
+                                ctx, sub.lineno,
+                                f"host-varying call {hv}() inside traced "
+                                f"function {node.name!r} — evaluated once "
+                                f"at trace time and baked into the "
+                                f"executable",
+                            ))
+        # -- pass 3: cache-key expressions ----------------------------------
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if not (isinstance(func, ast.Attribute)
+                    and func.attr in ("get", "get_jitted")
+                    and _is_cache_recv(func.value)
+                    and node.args):
+                continue
+            key = node.args[0]
+            for sub in ast.walk(key):
+                if isinstance(sub, ast.Call):
+                    hv = _host_varying(sub)
+                    if hv is not None:
+                        findings.append(self.finding(
+                            ctx, sub.lineno,
+                            f"host-varying call {hv}() in a compile-cache "
+                            f"key — every lookup misses and re-traces",
+                        ))
+                elif isinstance(sub, (ast.List, ast.Dict, ast.Set,
+                                      ast.ListComp, ast.DictComp,
+                                      ast.SetComp, ast.GeneratorExp)):
+                    kind = type(sub).__name__.lower()
+                    findings.append(self.finding(
+                        ctx, sub.lineno,
+                        f"unhashable {kind} literal in a compile-cache "
+                        f"key — raises TypeError at lookup",
+                    ))
+        return findings
+
+
+class SyncUnderSemRule(Rule):
+    name = "sync-under-sem"
+    description = (
+        "block_until_ready/.item() host syncs inside a 'with device_sem' "
+        "region hold a device permit across a host round-trip; deliberate "
+        "sites must be annotated"
+    )
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        findings: List[Finding] = []
+
+        def walk(node: ast.AST, in_sem: bool) -> None:
+            if isinstance(node, ast.With):
+                entered = in_sem
+                for item in node.items:
+                    name = dotted_name(item.context_expr)
+                    if name in SEM_NAMES:
+                        entered = True
+                for stmt in node.body:
+                    walk(stmt, entered)
+                return
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for stmt in node.body:
+                    walk(stmt, False)
+                return
+            if in_sem and isinstance(node, ast.Call):
+                # attribute lookup directly, so chains rooted in a call
+                # result — step(block).item() — are still seen
+                if isinstance(node.func, ast.Attribute):
+                    last = node.func.attr
+                else:
+                    last = (dotted_name(node.func) or "").split(".")[-1]
+                if last in ("block_until_ready", "item"):
+                    findings.append(self.finding(
+                        ctx, node.lineno,
+                        f"host sync {last}() inside a device_sem region",
+                    ))
+            for child in ast.iter_child_nodes(node):
+                walk(child, in_sem)
+
+        walk(ctx.tree, False)
+        return findings

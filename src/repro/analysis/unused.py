@@ -1,0 +1,70 @@
+"""Unused-symbol helper: flags imports never referenced in their module.
+
+Conservative by design — the goal is dead-code *sweeps*, not style
+enforcement:
+
+* ``__init__.py`` files are exempt (imports there are re-exports);
+* ``from __future__ import ...`` is exempt (used implicitly);
+* a name listed in a string inside ``__all__`` counts as used;
+* usage is any ``Name`` reference in the AST, which includes
+  annotations even under ``from __future__ import annotations``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.core import FileContext, Finding, Rule
+
+
+class UnusedImportRule(Rule):
+    name = "unused-import"
+    description = (
+        "imported name never referenced in the module (init files and "
+        "__future__ imports exempt)"
+    )
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        if os.path.basename(ctx.path) == "__init__.py":
+            return []
+        imported: Dict[str, Tuple[int, str]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    bound = (alias.asname or alias.name).split(".")[0]
+                    imported[bound] = (node.lineno, alias.name)
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "__future__":
+                    continue
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    bound = alias.asname or alias.name
+                    imported[bound] = (node.lineno, alias.name)
+        if not imported:
+            return []
+        used: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Name):
+                used.add(node.id)
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and t.id == "__all__":
+                        for sub in ast.walk(node.value):
+                            if isinstance(sub, ast.Constant) and \
+                                    isinstance(sub.value, str):
+                                used.add(sub.value)
+        findings: List[Finding] = []
+        for bound, (line, original) in sorted(
+            imported.items(), key=lambda kv: kv[1][0]
+        ):
+            if bound in used:
+                continue
+            # An `import a.b` statement also binds `a`; if any sibling
+            # import bound the same root and that root is used, skip.
+            findings.append(self.finding(
+                ctx, line,
+                f"imported name {bound!r} is never used",
+            ))
+        return findings

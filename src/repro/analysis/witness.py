@@ -1,0 +1,241 @@
+"""Runtime lock-order witness.
+
+The static rules prove lexical discipline; this module watches the
+*dynamic* order.  `LockOrderWitness.wrap` returns a drop-in lock
+wrapper that records, per thread, the stack of witnessed locks held
+and, globally, every acquisition edge ``A -> B`` ("B was acquired
+while A was held", with the owning thread names).  `check()` then
+fails on either:
+
+* a **cycle** in the union graph across threads (two threads acquiring
+  the same pair of locks in opposite orders — the classic deadlock
+  shape), or
+* a **rank violation** against the declared partial order.  The repo's
+  order is ``state ≺ store ≺ per-tenant round lock`` with ``≺``
+  meaning *inner-before-outer*: a lock may only be acquired while
+  every held ranked lock has a strictly greater rank.  The round lock
+  (rank 2) is the outermost; store (1) and state (0) may be taken
+  under it; nothing may be taken while holding state (0), and two
+  round locks never nest.
+
+Unranked locks participate in cycle detection only.
+
+`instrument_service` swaps an `AggregationService`'s three lock layers
+for witnessed wrappers — it must run before any concurrent use (in
+tests: right after construction, via the ``lock_witness`` fixture).
+
+The wrapper implements ``acquire``/``release``/``__enter__``/
+``__exit__``/``locked`` plus ``_is_owned`` so ``threading.Condition``
+composes with it without falling back to its acquire-probe ownership
+test.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Set, Tuple
+
+DECLARED_ORDER: Tuple[str, ...] = ("state", "store", "round")
+
+
+class LockOrderViolation(AssertionError):
+    """Raised by `LockOrderWitness.check` on cycles or rank breaks."""
+
+
+class _Held(threading.local):
+    def __init__(self):
+        self.stack: List["WitnessedLock"] = []
+
+
+class WitnessedLock:
+    """Drop-in wrapper recording acquisitions into a witness."""
+
+    def __init__(self, witness: "LockOrderWitness", inner, name: str,
+                 rank: Optional[int]):
+        self._witness = witness
+        self._inner = inner
+        self.name = name
+        self.rank = rank
+
+    # -- lock protocol -------------------------------------------------------
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._witness._on_acquire(self)
+        return got
+
+    def release(self) -> None:
+        self._witness._on_release(self)
+        self._inner.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def _is_owned(self) -> bool:
+        # For Condition: ownership == this thread has it on its stack.
+        return any(l is self for l in self._witness._held.stack)
+
+    def __repr__(self) -> str:
+        return f"<WitnessedLock {self.name!r} rank={self.rank}>"
+
+
+class LockOrderWitness:
+    """Collects the cross-thread acquisition graph; see module docs."""
+
+    def __init__(self, order: Tuple[str, ...] = DECLARED_ORDER):
+        self.order = tuple(order)
+        self._ranks = {name: i for i, name in enumerate(self.order)}
+        self._held = _Held()
+        self._mu = threading.Lock()  # guards the two dicts below
+        #: (outer name, inner name) -> example (thread, outer, inner)
+        self.edges: Dict[Tuple[str, str], Tuple[str, str, str]] = {}
+        self.violations: List[str] = []
+
+    # -- wrapping ------------------------------------------------------------
+    def wrap(self, lock, name: str, rank_class: Optional[str] = None
+             ) -> WitnessedLock:
+        """Wrap ``lock``; ``rank_class`` is a name from the declared
+        order (or None for cycle-detection-only participation)."""
+        rank = self._ranks.get(rank_class) if rank_class else None
+        if rank_class is not None and rank is None:
+            raise ValueError(
+                f"unknown rank class {rank_class!r}; declared order is "
+                f"{self.order}"
+            )
+        return WitnessedLock(self, lock, name, rank)
+
+    # -- recording -----------------------------------------------------------
+    def _on_acquire(self, lock: WitnessedLock) -> None:
+        stack = self._held.stack
+        tname = threading.current_thread().name
+        if stack:
+            with self._mu:
+                for held in stack:
+                    self.edges.setdefault(
+                        (held.name, lock.name), (tname, held.name, lock.name)
+                    )
+                for held in stack:
+                    if held.rank is None or lock.rank is None:
+                        continue
+                    if held.rank <= lock.rank:
+                        self.violations.append(
+                            f"thread {tname!r} acquired {lock.name!r} "
+                            f"(rank {self.order[lock.rank]!r}) while "
+                            f"holding {held.name!r} (rank "
+                            f"{self.order[held.rank]!r}); declared order "
+                            f"is inner-first: "
+                            f"{' ≺ '.join(self.order)}"
+                        )
+        stack.append(lock)
+
+    def _on_release(self, lock: WitnessedLock) -> None:
+        stack = self._held.stack
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] is lock:
+                del stack[i]
+                return
+
+    # -- verdicts ------------------------------------------------------------
+    def find_cycle(self) -> Optional[List[str]]:
+        """A lock-name cycle in the acquisition graph, if any."""
+        with self._mu:
+            adj: Dict[str, Set[str]] = {}
+            for (a, b) in self.edges:
+                adj.setdefault(a, set()).add(b)
+        WHITE, GRAY, BLACK = 0, 1, 2
+        color = {n: WHITE for n in adj}
+        path: List[str] = []
+
+        def dfs(n: str) -> Optional[List[str]]:
+            color[n] = GRAY
+            path.append(n)
+            for m in adj.get(n, ()):
+                c = color.get(m, WHITE)
+                if c == GRAY:
+                    return path[path.index(m):] + [m]
+                if c == WHITE:
+                    color.setdefault(m, WHITE)
+                    found = dfs(m)
+                    if found:
+                        return found
+            color[n] = BLACK
+            path.pop()
+            return None
+
+        for n in list(adj):
+            if color.get(n, WHITE) == WHITE:
+                found = dfs(n)
+                if found:
+                    return found
+        return None
+
+    def check(self) -> None:
+        """Raise `LockOrderViolation` on any recorded rank violation or
+        any cycle in the acquisition graph."""
+        with self._mu:
+            violations = list(self.violations)
+        cycle = self.find_cycle()
+        if cycle is not None:
+            violations.append(
+                "acquisition-order cycle (potential deadlock): "
+                + " -> ".join(cycle)
+            )
+        if violations:
+            raise LockOrderViolation(
+                "lock-order witness failed:\n  " + "\n  ".join(violations)
+            )
+
+
+class _WitnessedLockDict(dict):
+    """Dict subclass that wraps every lock stored into it — covers the
+    service's lazy per-tenant round-lock creation
+    (``self._tenant_locks[tenant] = threading.Lock()``)."""
+
+    def __init__(self, witness: LockOrderWitness, rank_class: str,
+                 name_fmt: str, initial: dict):
+        super().__init__()
+        self._witness = witness
+        self._rank_class = rank_class
+        self._name_fmt = name_fmt
+        for k, v in initial.items():
+            self[k] = v
+
+    def __setitem__(self, key, value):
+        if not isinstance(value, WitnessedLock):
+            value = self._witness.wrap(
+                value, self._name_fmt.format(key), self._rank_class
+            )
+        super().__setitem__(key, value)
+
+
+def instrument_service(service, witness: LockOrderWitness):
+    """Swap ``service``'s lock layers for witnessed wrappers.
+
+    Covers the three declared layers: the service state lock (rank
+    ``state``), the store lock + its ``_arrival_cv`` condition alias
+    (rank ``store``), and every per-tenant round lock, including ones
+    created lazily after instrumentation (rank ``round``).  Must run
+    before the service sees concurrent traffic.
+    """
+    service._state_lock = witness.wrap(
+        service._state_lock, "state", "state"
+    )
+    store = service.store
+    if not isinstance(store._lock, WitnessedLock):
+        # two services sharing one store: wrap the store layer once
+        wrapped = witness.wrap(store._lock, "store", "store")
+        store._lock = wrapped
+        # The condition must share the witnessed lock, or waiters would
+        # release the raw inner lock while the witness still thinks the
+        # wrapper is held.
+        store._arrival_cv = threading.Condition(wrapped)
+    service._tenant_locks = _WitnessedLockDict(
+        witness, "round", "round:{}", service._tenant_locks
+    )
+    return service

@@ -8,12 +8,10 @@ full configs are only touched through ShapeDtypeStructs in the dry-run.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 # ---------------------------------------------------------------------------
 # Input shapes (assigned)

@@ -294,18 +294,18 @@ class AdaptiveController:
         # round (source="rewarm") and resets the tenant's curve
         self.rewarm_drift = rewarm_drift
         self.rewarm_patience = max(int(rewarm_patience), 1)
-        self._models: Dict[str, ArrivalModel] = {}
-        self._est_seconds: Dict[str, float] = {}
-        self._drift_sat: Dict[str, int] = {}   # consecutive saturated rounds
-        self._rewarm_pending: set = set()
+        self._models: Dict[str, ArrivalModel] = {}  # guarded-by: _lock
+        self._est_seconds: Dict[str, float] = {}  # guarded-by: _lock
+        self._drift_sat: Dict[str, int] = {}  # guarded-by: _lock -- consecutive saturated rounds
+        self._rewarm_pending: set = set()  # guarded-by: _lock
         # tenants re-learning after a rewarm reset: they skip the prior
         # borrow (it may carry the stale regime they just abandoned)
         # until their fresh curve reaches warmup
-        self._rewarmed: set = set()
+        self._rewarmed: set = set()  # guarded-by: _lock
         # the cross-tenant prior: every tenant's rounds pool here, and
         # tenants without their own mass borrow it (cold-start transfer)
-        self._prior = ArrivalModel(n_quantiles=n_quantiles, ema=ema)
-        self._prior_est: Optional[float] = None
+        self._prior = ArrivalModel(n_quantiles=n_quantiles, ema=ema)  # guarded-by: _lock
+        self._prior_est: Optional[float] = None  # guarded-by: _lock
         # one controller serves every tenant's concurrent rounds: model
         # mutation (numpy EW blends) and policy derivation are not
         # atomic, so all public entry points serialize here. RLock —

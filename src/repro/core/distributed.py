@@ -45,7 +45,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.compress import BLOCK, CompressedBlock
 from repro.core.fusion.base import FusionAlgorithm
-from repro.core.fusion.robust import GeometricMedian, Krum, TrimmedMean, Zeno
+from repro.core.fusion.robust import GeometricMedian, Krum, Zeno
 from repro.core.local import StreamReport, _check_scale
 from repro.utils.compat import shard_map
 from repro.utils.jitcache import CompiledCache, bucket_rows, fusion_cache_key
@@ -592,7 +592,7 @@ class DistributedEngine:
                 state = step(u_dev, w_dev, *state)
                 if device_sem is not None:
                     # async dispatch must not escape the execution bound
-                    jax.block_until_ready(state)
+                    jax.block_until_ready(state)  # lint: disable=sync-under-sem -- deliberate: the permit must cover device EXECUTION, not just dispatch (PR 5's device_concurrency contract)
             rep.compute_seconds += time.perf_counter() - t0
             rep.n_rows += rows
             rep.n_blocks += 1
@@ -617,7 +617,7 @@ class DistributedEngine:
             rep.acc_wsum = sliced[0]
             rep.acc_tot = float(sliced[1])
         with sem:
-            fused = jax.block_until_ready(fusion.finalize(sliced))
+            fused = jax.block_until_ready(fusion.finalize(sliced))  # lint: disable=sync-under-sem -- deliberate: the permit must cover device EXECUTION, not just dispatch (PR 5's device_concurrency contract)
         rep.compute_seconds += time.perf_counter() - t0
         return fused, rep
 

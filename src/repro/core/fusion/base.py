@@ -52,10 +52,8 @@ streamed results stay bit-identical with the pre-protocol engines.
 from __future__ import annotations
 
 import abc
-import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 

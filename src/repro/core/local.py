@@ -363,7 +363,7 @@ class LocalEngine:
                     # dispatch is async: holding the semaphore only
                     # bounds execution if we wait for it (single-tenant
                     # rounds skip the sync and keep the pipeline deep)
-                    jax.block_until_ready(state)
+                    jax.block_until_ready(state)  # lint: disable=sync-under-sem -- deliberate: the permit must cover device EXECUTION, not just dispatch (PR 5's device_concurrency contract)
             rep.compute_seconds += time.perf_counter() - t0
             rep.n_rows += rows
             rep.n_blocks += 1
@@ -378,7 +378,7 @@ class LocalEngine:
             rep.acc_wsum = rep.acc_state[0]
             rep.acc_tot = float(rep.acc_state[1])
         with sem:
-            fused = jax.block_until_ready(fusion.finalize(state))
+            fused = jax.block_until_ready(fusion.finalize(state))  # lint: disable=sync-under-sem -- deliberate: the permit must cover device EXECUTION, not just dispatch (PR 5's device_concurrency contract)
         rep.compute_seconds += time.perf_counter() - t0
         return fused, rep
 

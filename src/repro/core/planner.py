@@ -27,9 +27,8 @@ user-managed knob).
 from __future__ import annotations
 
 import dataclasses
-from typing import Collection, Dict, List, Optional, Tuple
+from typing import Collection, Dict, List, Tuple
 
-import numpy as np
 
 from repro.core.fusion.base import FusionAlgorithm
 from repro.core.workload import HBM_HEADROOM, Workload, WorkloadClass, classify

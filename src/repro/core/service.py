@@ -269,11 +269,11 @@ class AggregationService:
         # per-TENANT round continuity (multi-tenant rounds interleave
         # through one service without cross-talk): tenant -> (wsum, tot)
         # pre-combine carry, and tenant -> {straggler id -> rounds late}
-        self._carry: Dict[str, tuple] = {}
-        self._stale_ages: Dict[str, Dict[str, int]] = {}
+        self._carry: Dict[str, tuple] = {}  # guarded-by: _state_lock
+        self._stale_ages: Dict[str, Dict[str, int]] = {}  # guarded-by: _state_lock
         # tenant -> last observed monitor wait (async_round="auto"'s
         # projection input; O(1) instead of scanning history per round)
-        self._last_wait: Dict[str, float] = {}
+        self._last_wait: Dict[str, float] = {}  # guarded-by: _state_lock
         # concurrency: rounds for the SAME tenant serialize on a
         # per-tenant lock (carry / ages / queue semantics assume one
         # open round per tenant); _state_lock guards the shared maps
@@ -284,7 +284,7 @@ class AggregationService:
         self.device_concurrency = device_concurrency
         self.device_sem = threading.BoundedSemaphore(device_concurrency)
         self._state_lock = threading.Lock()
-        self._tenant_locks: Dict[str, threading.Lock] = {}
+        self._tenant_locks: Dict[str, threading.Lock] = {}  # guarded-by: _state_lock
         self.local = LocalEngine(
             strategy=local_strategy, memory_cap_bytes=memory_cap_bytes
         )
@@ -312,7 +312,7 @@ class AggregationService:
             self.compress_block = int(compress)
         else:
             self.compress_block = None
-        self._compressors: Dict[str, ErrorFeedbackCompressor] = {}
+        self._compressors: Dict[str, ErrorFeedbackCompressor] = {}  # guarded-by: _state_lock
         # unsupported-combo fail-fasts: a clear ValueError here beats an
         # opaque one deep in the round path
         if self.compress_block is not None and not self.fusion.streamable:
@@ -347,7 +347,7 @@ class AggregationService:
                 planner=self.planner,
             ) if adaptive else None
         )
-        self.history: List[RoundReport] = []
+        self.history: List[RoundReport] = []  # guarded-by: _state_lock
 
     # -- quantized transport --------------------------------------------------
     def compress_update(
@@ -717,7 +717,7 @@ class AggregationService:
                     fused = self.distributed.fuse(fusion, stacked, w)
                     phase["compile"] = \
                         self.distributed.last_compile_seconds
-                fused = jax.block_until_ready(fused)
+                fused = jax.block_until_ready(fused)  # lint: disable=sync-under-sem -- deliberate: the permit must cover device EXECUTION, not just dispatch, or device_concurrency would not bound real device work (PR 5)
         dt = time.perf_counter() - t0
         phase["compute"] = dt - phase.get("compile", 0.0)
         return self._finish(
@@ -850,7 +850,13 @@ class AggregationService:
             return done
 
         gamma = self.staleness_discount
-        ages = self._stale_ages.get(tenant, {})
+        # carry/ages are per-tenant entries, but the MAPS are shared
+        # across tenant round threads — reads take the state lock (the
+        # tenant round lock serializes same-tenant rounds, so the
+        # snapshot stays valid for the whole round)
+        with self._state_lock:
+            ages = self._stale_ages.get(tenant, {})
+            carry = self._carry.get(tenant)
         folded: List[str] = []
         folded_versions: Dict[str, int] = {}
         io_stats: Dict[str, float] = {}
@@ -874,7 +880,6 @@ class AggregationService:
                     yield block, w
 
         init = None
-        carry = self._carry.get(tenant)
         if gamma is not None and carry is not None:
             init = fusion.discount_state(carry, gamma)
         t0 = time.perf_counter()
@@ -892,12 +897,17 @@ class AggregationService:
         # survives for the next round); what raced past the close stays,
         # one round staler
         self.store.remove(folded, versions=folded_versions, tenant=tenant)
-        if gamma is not None:
-            self._carry[tenant] = srep.acc_state
-        self._stale_ages[tenant] = {
+        # compute the next-age map BEFORE taking the state lock:
+        # client_ids() takes the STORE lock, and the declared order
+        # (state inner-most) forbids acquiring it under _state_lock
+        next_ages = {
             cid: ages.get(cid, 0) + 1
             for cid in self.store.client_ids(tenant)
         }
+        with self._state_lock:
+            if gamma is not None:
+                self._carry[tenant] = srep.acc_state
+            self._stale_ages[tenant] = next_ages
 
         overlap = closed_at.get("waited", 0.0)
         mr = monitor.result(
@@ -1231,6 +1241,7 @@ class FairRoundScheduler:
         self._drained = False
         self._admitted = 0
         self._admission_order: List[str] = []
+        self._workers: List[threading.Thread] = []
         self._loop = threading.Thread(
             target=self._admission_loop, name="fair-scheduler",
             daemon=True,
@@ -1337,6 +1348,14 @@ class FairRoundScheduler:
                 target=self._run_one, args=(tenant, fut, kwargs),
                 name=f"fair-round:{tenant}", daemon=True,
             )
+            # track round workers so shutdown() can join them — a
+            # drained queue only means each worker popped its tenant
+            # from _running, not that the thread has exited
+            with self._wake:
+                self._workers = [
+                    w for w in self._workers if w.is_alive()
+                ]
+                self._workers.append(worker)
             worker.start()
 
     def _run_one(self, tenant: str, fut: "Future", kwargs: dict) -> None:
@@ -1383,6 +1402,11 @@ class FairRoundScheduler:
                 while not self._drained:
                     self._wake.wait(timeout=0.5)
             self._loop.join(timeout=10.0)
+            with self._wake:
+                workers = list(self._workers)
+                self._workers = []
+            for worker in workers:
+                worker.join(timeout=10.0)
 
     def __enter__(self) -> "FairRoundScheduler":
         return self

@@ -210,20 +210,20 @@ class UpdateStore:
         # tests run on a scripted clock instead of sleeping it out
         self.wall_clock = wall_clock
         # all index maps are keyed (tenant, client_id) — the partition key
-        self._mem: Dict[_Key, Tuple[np.ndarray, float]] = {}
-        self._weights: Dict[_Key, float] = {}
+        self._mem: Dict[_Key, Tuple[np.ndarray, float]] = {}  # guarded-by: _lock
+        self._weights: Dict[_Key, float] = {}  # guarded-by: _lock
         # per-key write counter: lets a version-aware remove() keep an
         # update that was re-written after a round folded its predecessor
-        self._versions: Dict[_Key, int] = {}
+        self._versions: Dict[_Key, int] = {}  # guarded-by: _lock
         # per-key arrival timestamp (self.clock timebase) — the adaptive
         # controller's training signal (repro/core/adaptive.py)
-        self._arrivals: Dict[_Key, float] = {}
+        self._arrivals: Dict[_Key, float] = {}  # guarded-by: _lock
         # external blobs first sighted without a weight sidecar:
         # key -> wall time first seen. They register at the default
         # weight only after sidecar_grace_seconds, so a sidecar landing
         # just behind its blob (the documented writer order) wins.
         self.sidecar_grace_seconds = sidecar_grace_seconds
-        self._ext_seen: Dict[_Key, float] = {}
+        self._ext_seen: Dict[_Key, float] = {}  # guarded-by: _lock
         # ROOT-blob ownership (disk): a (st_mtime_ns, st_size,
         # st_ino) identity triple recorded at registration. The root
         # staging area is shared between default-tenant clients and
@@ -232,17 +232,17 @@ class UpdateStore:
         # live entry wins) from a genuine re-submission (bytes
         # replaced: evict + re-ingest); rename-based rewrites change
         # the inode even on filesystems with coarse mtime ticks.
-        self._blob_mtime: Dict[_Key, Tuple[int, int, int]] = {}
+        self._blob_mtime: Dict[_Key, Tuple[int, int, int]] = {}  # guarded-by: _lock
         # per-tenant entry count — the monitor's per-wake poll reads
         # this, so it must be O(1), not a scan of the whole index
-        self._counts: Dict[str, int] = {}
+        self._counts: Dict[str, int] = {}  # guarded-by: _lock
         # per-key logical stored bytes + per-tenant running total —
         # what TenantQuota.max_bytes budgets against
-        self._nbytes: Dict[_Key, int] = {}
-        self._tenant_bytes: Dict[str, int] = {}
-        self._quotas: Dict[str, TenantQuota] = {}
+        self._nbytes: Dict[_Key, int] = {}  # guarded-by: _lock
+        self._tenant_bytes: Dict[str, int] = {}  # guarded-by: _lock
+        self._quotas: Dict[str, TenantQuota] = {}  # guarded-by: _lock
         # per-tenant accounting next to the legacy spool-global stats
-        self._tenant_stats: Dict[str, StoreStats] = {}
+        self._tenant_stats: Dict[str, StoreStats] = {}  # guarded-by: _lock
         # tenant subdirectories already created (write() hot path must
         # not re-stat the directory on every update)
         self._made_dirs: set = set()
@@ -250,7 +250,7 @@ class UpdateStore:
         # notified on every registered arrival: arrival-driven readers
         # (iter_arrivals) block here instead of sleep-polling
         self._arrival_cv = threading.Condition(self._lock)
-        self.stats = StoreStats()
+        self.stats = StoreStats()  # guarded-by: _lock
         if backend == "disk":
             # fault tolerance (the HDFS property the paper leans on):
             # recover updates spooled by a previous aggregator incarnation
@@ -547,7 +547,7 @@ class UpdateStore:
             # quota installed concurrently can miss at most the writes
             # already in flight — the documented bound).
             verdict, victims = "ok", {}
-            if self._quotas:
+            if self._quotas:  # lint: disable=guarded-access -- unlocked emptiness probe; one lock per batch on the no-quota hot path, staleness bound documented above
                 with self._lock:
                     verdict, victims = self._quota_check_locked(
                         key, raw,
@@ -559,7 +559,7 @@ class UpdateStore:
                 results[i] = QuotaExceededError(
                     f"tenant {tenant!r}: update of {raw} B for "
                     f"{client_id!r} exceeds the tenant quota "
-                    f"{self._quotas.get(tenant)}"
+                    f"{self._quotas.get(tenant)}"  # lint: disable=guarded-access -- read-only repr for the error message; the verdict was computed under the lock
                 )
                 continue
             mtime = self._stage_disk(client_id, tenant, cu, vec, weight)
@@ -567,9 +567,10 @@ class UpdateStore:
                 pend_bytes[tenant] = (
                     pend_bytes.get(tenant, 0) - pend_raw[key]
                 )
-            elif key in self._nbytes:    # replaces a registered update
+            elif key in self._nbytes:    # lint: disable=guarded-access -- intra-batch pending accounting; staleness bounded by the one-lock-per-batch design documented above
                 pend_bytes[tenant] = (
-                    pend_bytes.get(tenant, 0) - self._nbytes[key]
+                    pend_bytes.get(tenant, 0)
+                    - self._nbytes[key]  # lint: disable=guarded-access -- same intra-batch pending-accounting bound as the elif above
                 )
             else:                        # a genuinely new key
                 pend_counts[tenant] = pend_counts.get(tenant, 0) + 1
@@ -1263,20 +1264,22 @@ class UpdateStore:
                 weight = float(f.read())
         except (FileNotFoundError, ValueError):
             now = self.wall_clock()   # real elapsed, not self.clock
-            first = self._ext_seen.setdefault(key, now)
+            with self._lock:
+                first = self._ext_seen.setdefault(key, now)
             if now - first < self.sidecar_grace_seconds:
                 return None   # sidecar may still be in flight
             weight = 1.0
-        self._ext_seen.pop(key, None)
-        if from_root:
-            # a sidecar-routed ROOT blob was grace-tracked under the
-            # DEFAULT key while its .tenant sidecar was in flight —
-            # drop that too, or a later root re-submission of this cid
-            # would read the stale first-seen time as an already-
-            # expired grace window. (Subdir registrations must NOT pop
-            # it: an unrelated root blob with the same cid may be
-            # mid-grace.)
-            self._ext_seen.pop((DEFAULT_TENANT, cid), None)
+        with self._lock:
+            self._ext_seen.pop(key, None)
+            if from_root:
+                # a sidecar-routed ROOT blob was grace-tracked under
+                # the DEFAULT key while its .tenant sidecar was in
+                # flight — drop that too, or a later root re-submission
+                # of this cid would read the stale first-seen time as
+                # an already-expired grace window. (Subdir
+                # registrations must NOT pop it: an unrelated root blob
+                # with the same cid may be mid-grace.)
+                self._ext_seen.pop((DEFAULT_TENANT, cid), None)
         victims: Dict[_Key, Tuple[int, Optional[Tuple]]] = {}
         try:
             with self._arrival_cv:
@@ -1330,7 +1333,8 @@ class UpdateStore:
         src_base = os.path.join(src_dir, f"{cid}.npy")
         if not os.path.exists(src_base + ".w"):
             now = self.wall_clock()
-            first = self._ext_seen.setdefault((tenant, cid), now)
+            with self._lock:
+                first = self._ext_seen.setdefault((tenant, cid), now)
             if now - first < self.sidecar_grace_seconds:
                 return False   # defer until .w lands (or grace expires)
         dest_dir = self._tenant_dir(tenant)
@@ -1433,7 +1437,8 @@ class UpdateStore:
                 # under the index; changed bytes are a NEW external
                 # submission — evict the stale entry (its payload is
                 # gone from disk) and re-ingest, honoring the sidecar.
-                recorded = self._blob_mtime.get(dkey)
+                with self._lock:
+                    recorded = self._blob_mtime.get(dkey)
                 try:
                     current = _stat_identity(full)
                 except OSError:

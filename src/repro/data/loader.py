@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List
+from typing import Dict, List
 
 import numpy as np
 

@@ -16,7 +16,7 @@ measures.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,6 @@ from repro.core.service import (
 from repro.data.loader import FederatedLoader
 from repro.fl.client import Client
 from repro.models.base import Model
-from repro.utils.pytree import flat_vector_to_tree
 
 PyTree = Any
 

@@ -28,7 +28,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import (
     ARCHITECTURES,

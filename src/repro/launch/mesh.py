@@ -9,7 +9,6 @@ the real single CPU device).
 """
 from __future__ import annotations
 
-import jax
 from jax.sharding import Mesh
 
 from repro.utils.compat import make_mesh

@@ -6,8 +6,7 @@ examples (trivial mesh) and the 512-chip dry-run.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

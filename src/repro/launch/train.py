@@ -10,11 +10,8 @@ synthetic non-IID data -> per-client local steps -> AggregationService
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
-import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.core import AggregationService

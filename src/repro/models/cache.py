@@ -9,7 +9,7 @@ and cache shapes may differ freely within one model.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

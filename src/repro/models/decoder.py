@@ -15,7 +15,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.base import (
     Model,
-    cross_entropy,
     next_token_loss,
     embed_tokens,
     init_embedding,
@@ -30,7 +29,6 @@ from repro.models.cache import (
 )
 from repro.models.layers.attention import (
     reshard_for_attention,
-    AttnParams,
     attention_output,
     blockwise_attention,
     decode_attention,
@@ -40,7 +38,6 @@ from repro.models.layers.attention import (
 from repro.models.layers.mlp import init_mlp, mlp
 from repro.models.layers.moe import init_moe, moe
 from repro.models.layers.norms import rms_norm
-from repro.models.layers.rope import apply_rope
 from repro.models.runtime_flags import maybe_scan
 from repro.models.sharding import shard
 

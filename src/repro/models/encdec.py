@@ -9,7 +9,7 @@ buffer + precomputed cross-attn K/V per layer.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.base import (
     Model,
-    cross_entropy,
     next_token_loss,
     embed_tokens,
     init_embedding,

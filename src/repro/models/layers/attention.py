@@ -9,7 +9,6 @@ Memory discipline: scores are never materialized beyond a
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax

@@ -27,7 +27,6 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from repro.utils.compat import shard_map
 from jax.sharding import PartitionSpec as P
 

@@ -10,7 +10,7 @@ long_500k applies.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, NamedTuple, Tuple, Union
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.base import (
     Model,
-    cross_entropy,
     next_token_loss,
     embed_tokens,
     init_embedding,
@@ -26,8 +25,6 @@ from repro.models.base import (
 )
 from repro.models.layers.norms import rms_norm
 from repro.models.layers.xlstm_layers import (
-    MLSTMState,
-    SLSTMState,
     init_mlstm,
     init_mlstm_state,
     init_slstm,

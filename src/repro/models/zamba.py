@@ -11,7 +11,7 @@ keeps a (windowed) ring KV cache.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Tuple, Union
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -19,15 +19,12 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.base import (
     Model,
-    cross_entropy,
     next_token_loss,
     embed_tokens,
     init_embedding,
     lm_logits,
 )
 from repro.models.cache import (
-    AttnCache,
-    attn_cache_spec,
     cache_valid_mask,
     init_attn_cache,
     update_attn_cache,
@@ -41,7 +38,6 @@ from repro.models.layers.attention import (
     project_qkv,
 )
 from repro.models.layers.mamba2 import (
-    Mamba2Cache,
     dims_from_config,
     init_mamba2,
     init_mamba2_cache,

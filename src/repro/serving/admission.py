@@ -40,8 +40,8 @@ class TokenBucket:
         self.rate = float(rate)
         self.burst = float(burst)
         self._clock = clock
-        self._tokens = float(burst)
-        self._last = clock()
+        self._tokens = float(burst)  # guarded-by: _lock
+        self._last = clock()  # guarded-by: _lock
         self._lock = threading.Lock()
 
     def try_acquire(self, n: float = 1.0) -> Tuple[bool, float]:
@@ -97,7 +97,7 @@ class AdmissionController:
         self._store = store
         self._clock = clock
         self.max_body_bytes = int(max_body_bytes)
-        self._buckets: Dict[str, TokenBucket] = {}
+        self._buckets: Dict[str, TokenBucket] = {}  # guarded-by: _lock
         self._lock = threading.Lock()
         self._default_rate: Optional[Tuple[float, float]] = None
         if rate is not None:

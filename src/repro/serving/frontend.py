@@ -258,7 +258,7 @@ class IngestServer:
         self.queue = ingest_queue or IngestQueue(
             store, maxsize=queue_size, batch_max=batch_max
         )
-        self._counters: Dict[str, int] = {}
+        self._counters: Dict[str, int] = {}  # guarded-by: _clock_lock
         self._clock_lock = threading.Lock()
         self._httpd = _Httpd((host, port), _Handler)
         self._httpd.ingest = self

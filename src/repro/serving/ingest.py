@@ -51,13 +51,13 @@ class IngestQueue:
         self.retry_after = float(retry_after)
         self._q: "queue.Queue" = queue.Queue(maxsize=maxsize)
         self._lock = threading.Lock()
-        self._closed = False
-        self._submitted = 0
-        self._committed = 0
-        self._rejected = 0
-        self._shed = 0
-        self._batches = 0
-        self._max_batch = 0
+        self._closed = False  # guarded-by: _lock
+        self._submitted = 0  # guarded-by: _lock
+        self._committed = 0  # guarded-by: _lock
+        self._rejected = 0  # guarded-by: _lock
+        self._shed = 0  # guarded-by: _lock
+        self._batches = 0  # guarded-by: _lock
+        self._max_batch = 0  # guarded-by: _lock
         self._thread = threading.Thread(
             target=self._run, name="ingest-committer", daemon=True
         )

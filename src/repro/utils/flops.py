@@ -22,7 +22,6 @@ The ratio MODEL/EXEC is §Roofline's "useful compute" metric.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
 
 from repro.configs.base import InputShape, ModelConfig
 

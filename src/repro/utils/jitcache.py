@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Any, Callable, Dict, Hashable, Tuple
+from typing import Callable, Dict, Hashable, Tuple
 
 import jax
 

@@ -99,7 +99,7 @@ def start_writer(
 ) -> threading.Thread:
     """``replay_round`` on a started daemon thread — arrivals land
     WHILE the round is open (the benchmarks' writer idiom)."""
-    t = threading.Thread(
+    t = threading.Thread(  # lint: disable=thread-join -- the handle is RETURNED; callers (benchmarks, soak harness) own the join
         target=replay_round,
         args=(store, tenant_round, seed),
         kwargs={"clock": clock, "sleep": sleep, "transform": transform,

@@ -18,3 +18,28 @@ except ImportError:
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def lock_witness(monkeypatch):
+    """Opt-in runtime lock-order witness (repro.analysis.witness).
+
+    Every AggregationService constructed while the fixture is active
+    gets its state/store/round lock layers wrapped, recording the
+    cross-thread acquisition graph; teardown fails the test on cycles
+    or on orderings contradicting the declared partial order
+    (state ≺ store ≺ round, inner-first).
+    """
+    from repro.analysis.witness import LockOrderWitness, instrument_service
+    from repro.core.service import AggregationService
+
+    witness = LockOrderWitness()
+    orig_init = AggregationService.__init__
+
+    def patched(self, *args, **kwargs):
+        orig_init(self, *args, **kwargs)
+        instrument_service(self, witness)
+
+    monkeypatch.setattr(AggregationService, "__init__", patched)
+    yield witness
+    witness.check()

@@ -1,0 +1,28 @@
+# Lint fixture: blocking-under-lock true positives. Never imported.
+import os
+import threading
+import time
+
+import numpy as np
+
+
+class Spool:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def load_under_lock(self, path):
+        with self._lock:
+            return np.load(path)             # BAD: I/O while holding lock
+
+    def sleep_under_lock(self):
+        with self._lock:
+            time.sleep(0.1)                  # BAD
+
+    def replace_under_lock(self, a, b):
+        with self._lock:
+            os.replace(a, b)                 # BAD
+
+    def open_under_lock(self, path):
+        with self._lock:
+            with open(path) as f:            # BAD
+                return f.read()

@@ -1,0 +1,25 @@
+# Lint fixture: blocking-under-lock true negatives. Never imported.
+import threading
+
+import numpy as np
+
+
+class Spool:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+
+    def load_outside_lock(self, path):
+        data = np.load(path)                 # ok: no lock held
+        with self._lock:
+            return data.sum()
+
+    def wait_on_condition(self):
+        with self._cv:
+            self._cv.wait(timeout=0.5)       # ok: wait RELEASES the lock
+
+    def io_in_deferred_worker(self, path):
+        with self._lock:
+            def worker():
+                return np.load(path)         # ok: runs after release
+            return worker

@@ -1,0 +1,24 @@
+# Lint fixture: guarded-access true positives. Never imported.
+import threading
+
+
+class Store:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._index = {}  # guarded-by: _lock
+        self._bytes = 0  # guarded-by: _lock
+
+    def read_unlocked(self, key):
+        return self._index.get(key)          # BAD: no lock held
+
+    def write_after_release(self, key, val):
+        with self._lock:
+            self._index[key] = val           # ok
+        self._bytes += 1                     # BAD: lock already released
+
+    def nested_worker(self):
+        with self._lock:
+            def worker():
+                return dict(self._index)     # BAD: runs on another thread
+            return worker

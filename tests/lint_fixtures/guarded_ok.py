@@ -1,0 +1,28 @@
+# Lint fixture: guarded-access true negatives. Never imported.
+import threading
+
+
+class Store:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._index = {}  # guarded-by: _lock
+        self._index["seed"] = 1              # ok: __init__ is unshared
+
+    def read(self, key):
+        with self._lock:
+            return self._index.get(key)      # ok: lock held
+
+    def read_via_condition(self, key):
+        with self._cv:
+            return self._index.get(key)      # ok: the condition IS the lock
+
+    def _drop_locked(self, key):
+        """Drop one entry. Caller holds ``self._lock``."""
+        self._index.pop(key, None)           # ok: declared caller-held
+
+    def _scan(self):  # lint: holds=_lock
+        return list(self._index)             # ok: def-line holds comment
+
+    def unguarded_attr(self):
+        return id(self)                      # ok: not a guarded attribute

@@ -1,0 +1,25 @@
+# Lint fixture: sync-under-sem true positive + negative. Never imported.
+import threading
+
+import jax
+
+
+class Engine:
+    def __init__(self):
+        self.device_sem = threading.BoundedSemaphore(1)
+
+    def fold_sync_inside(self, step, block):
+        with self.device_sem:
+            out = step(block)
+            jax.block_until_ready(out)       # BAD (unannotated sync)
+            return out
+
+    def scalar_inside(self, step, block):
+        with self.device_sem:
+            return step(block).item()        # BAD
+
+    def fold_sync_outside(self, step, block):
+        with self.device_sem:
+            out = step(block)
+        jax.block_until_ready(out)           # ok: permit already released
+        return out

@@ -1,0 +1,18 @@
+# Lint fixture: malformed suppressions are themselves findings.
+import threading
+
+
+class Store:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._index = {}  # guarded-by: _lock
+
+    def missing_reason(self):
+        return bool(self._index)  # lint: disable=guarded-access
+
+    def unknown_rule(self):
+        with self._lock:
+            return len(self._index)  # lint: disable=no-such-rule -- reason present but rule unknown
+
+    def not_parseable(self):
+        return 0  # lint: disable=

@@ -1,0 +1,23 @@
+# Lint fixture: thread-hygiene true positives. Never imported.
+import threading
+
+
+class Runner:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def spawn_and_forget(self):
+        t = threading.Thread(target=print)   # BAD: never joined
+        t.start()
+        return None
+
+    def forget_nondaemon(self):
+        self._t = threading.Thread(target=print, daemon=False)  # BAD
+        self._t.start()
+
+    def manual_acquire(self):
+        self._lock.acquire()                 # BAD: bare acquire
+        try:
+            return 1
+        finally:
+            self._lock.release()

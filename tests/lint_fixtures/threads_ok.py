@@ -1,0 +1,25 @@
+# Lint fixture: thread-hygiene true negatives. Never imported.
+import threading
+
+
+class Runner:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._t = threading.Thread(target=print, daemon=True)
+
+    def start(self):
+        self._t.start()
+
+    def stop(self):
+        self._t.join(timeout=5.0)            # ok: joined on shutdown
+
+    def pooled(self, n):
+        pool = []
+        for _ in range(n):
+            pool.append(threading.Thread(target=print, daemon=True))
+        for t in pool:
+            t.start()
+        for t in pool:
+            t.join()                         # ok: pool joined
+        with self._lock:                     # ok: with, not bare acquire
+            return len(pool)

@@ -1,0 +1,32 @@
+# Lint fixture: trace-hazard true positives. Never imported.
+import random
+import time
+
+import jax
+
+
+def keyed_on_time(cache, builder):
+    return cache.get(("step", time.time()), builder)     # BAD: cold every call
+
+
+def keyed_on_random(cache, builder):
+    return cache.get_jitted(("r", random.random()), builder)   # BAD
+
+
+def unhashable_key(cache, builder, shapes):
+    return cache.get(("step", [s for s in shapes]), builder)   # BAD: list key
+
+
+@jax.jit
+def traced_with_clock(x):
+    return x * time.time()                               # BAD: baked constant
+
+
+def kernel_with_random(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * random.random()            # BAD once traced
+
+
+def build(x):
+    import jax.experimental.pallas as pl
+    return pl.pallas_call(kernel_with_random,
+                          out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))

@@ -1,0 +1,27 @@
+# Lint fixture: trace-hazard true negatives. Never imported.
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def keyed_on_shape(cache, builder, n, p):
+    return cache.get(("step", int(n), int(p)), builder)  # ok: static key
+
+
+def tuple_key(cache, builder, shapes):
+    return cache.get(("step", tuple(shapes)), builder)   # ok: hashable
+
+
+@jax.jit
+def pure_step(x, w):
+    return jnp.einsum("np,n->p", x, w)                   # ok: pure
+
+def timed_host_side(x):
+    t0 = time.perf_counter()                             # ok: not traced
+    y = pure_step(x, x[:, 0])
+    return y, time.perf_counter() - t0
+
+
+def plain_dict_get(d, key):
+    return d.get(key)                                    # ok: not a cache call

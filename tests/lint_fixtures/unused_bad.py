@@ -1,0 +1,14 @@
+# Lint fixture: unused-import positives + negatives. Never imported.
+from __future__ import annotations          # ok: __future__ exempt
+
+import json                                  # BAD: never referenced
+import os
+from typing import Dict, Optional            # Optional BAD, Dict ok
+
+__all__ = ["exported"]
+
+exported = os.getcwd()
+
+
+def typed(d: Dict[str, int]) -> int:         # Dict used in annotation
+    return len(d)

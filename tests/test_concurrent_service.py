@@ -48,6 +48,7 @@ def fedavg_formula(u, w):
 # -- the tentpole stress bar --------------------------------------------------
 
 
+@pytest.mark.usefixtures("lock_witness")
 def test_stress_concurrent_tenants_on_one_service():
     """4 tenants x 20 rounds, all four executing at once on ONE service
     with writers racing the open rounds; per-round fused vectors must
@@ -111,6 +112,7 @@ def test_stress_concurrent_tenants_on_one_service():
     assert store.stats.writes == k * rounds * n
 
 
+@pytest.mark.usefixtures("lock_witness")
 def test_scheduler_same_tenant_rounds_serialize_fifo():
     store = UpdateStore()
     svc = AggregationService(
@@ -143,6 +145,7 @@ def test_scheduler_same_tenant_rounds_serialize_fifo():
         sched.submit("a", from_store=True)   # shut down
 
 
+@pytest.mark.usefixtures("lock_witness")
 def test_concurrent_adaptive_rounds_share_controller_safely():
     """Two tenants' adaptive rounds at once: the controller's internal
     lock keeps policy derivation/observation consistent (no exception,

@@ -25,6 +25,7 @@ DOCS = [
     "docs/MULTITENANCY.md",
     "docs/TUNING.md",
     "docs/SERVING.md",
+    "docs/ANALYSIS.md",
     "benchmarks/README.md",
 ]
 
@@ -146,8 +147,20 @@ def test_operator_docs_cover_their_subjects():
     arch = _read("docs/ARCHITECTURE.md")
     for term in ("compress_update", "weighted_sum_dequant_pallas",
                  "CompressedBlock", "error feedback", ".scale",
-                 "bytes_ingested", "BENCH_compressed.json"):
+                 "bytes_ingested", "BENCH_compressed.json",
+                 "repro/analysis/", "ANALYSIS.md"):
         assert term in arch, f"ARCHITECTURE.md lost {term!r}"
+    analysis = _read("docs/ANALYSIS.md")
+    for term in ("guarded-by", "lint: disable=", "-- <reason>",
+                 "guarded-access", "blocking-under-lock", "trace-hazard",
+                 "sync-under-sem", "thread-join", "bare-acquire",
+                 "unused-import", "suppression-format",
+                 "repro.analysis.lint", "--format=json", "--baseline",
+                 "--write-baseline", "--show-suppressed", "--list-rules",
+                 "LockOrderWitness", "instrument_service",
+                 "lock_witness", "state lock", "holds=_lock",
+                 "Caller holds"):
+        assert term in analysis, f"ANALYSIS.md lost {term!r}"
 
 
 def test_readme_documents_tier1_and_bench_artifacts():

@@ -345,6 +345,7 @@ def test_ingest_queue_backpressure_error_direct():
 
 # -- batched commits ---------------------------------------------------------
 
+@pytest.mark.usefixtures("lock_witness")
 def test_concurrent_uploads_coalesce_into_batches():
     store = UpdateStore()
     gate = threading.Event()
@@ -475,6 +476,7 @@ def test_fair_scheduler_capacity_gate():
 
 # -- trace-replayed multi-tenant smoke (the tier-1 gate) ---------------------
 
+@pytest.mark.usefixtures("lock_witness")
 def test_trace_replayed_multitenant_smoke():
     """PR 8's WorkloadSpec driving the serving stack: K tenants replay
     a seeded trace over real sockets, rounds run through the fair
